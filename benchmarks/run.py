@@ -1,0 +1,101 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines at the end, plus each
+benchmark's own detailed table.  Default is a scaled fast mode; ``--full``
+uses larger corpora (slower, same structure).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    summary = []
+
+    print("=" * 72)
+    print("## Fig. 3 — latency vs QPS grid (4 systems x 2 datasets)")
+    print("=" * 72)
+    from benchmarks import fig3_latency_qps
+
+    t0 = time.time()
+    rows = fig3_latency_qps.main(fast=fast)
+    rt = [r for r in rows if r["system"] == "rtams"]
+    base = [r for r in rows if r["system"] != "rtams"]
+    summary.append((
+        "fig3_latency_qps",
+        round(1e6 * (time.time() - t0) / max(len(rows), 1), 1),
+        f"rtams_mean_ms={sum(r['latency_avg_ms'] for r in rt)/len(rt):.2f};"
+        f"baseline_mean_ms={sum(r['latency_avg_ms'] for r in base)/len(base):.2f}",
+    ))
+
+    print()
+    print("=" * 72)
+    print("## Table 1 — rearrangement threshold vs cost")
+    print("=" * 72)
+    from benchmarks import table1_rearrangement
+
+    t0 = time.time()
+    rows = table1_rearrangement.main()
+    summary.append((
+        "table1_rearrangement",
+        round(1e6 * (time.time() - t0) / max(len(rows), 1), 1),
+        f"max_cost_ms={max(r['rearrange_cost_ms'] for r in rows)}",
+    ))
+
+    print()
+    print("=" * 72)
+    print("## Fig. 4 — memory block size sweep")
+    print("=" * 72)
+    from benchmarks import fig4_block_size
+
+    t0 = time.time()
+    rows = fig4_block_size.main()
+    summary.append((
+        "fig4_block_size",
+        round(1e6 * (time.time() - t0) / max(len(rows), 1), 1),
+        f"best_block={min(rows, key=lambda r: r['search_ms'])['block_size']}",
+    ))
+
+    print()
+    print("=" * 72)
+    print("## Recall parity (IVFFlat / IVFPQ vs brute force; RTAMS vs RAFT)")
+    print("=" * 72)
+    from benchmarks import recall
+
+    t0 = time.time()
+    rows, parity = recall.main()
+    summary.append((
+        "recall",
+        round(1e6 * (time.time() - t0) / max(len(rows), 1), 1),
+        f"parity_vs_raft={parity:.4f}",
+    ))
+
+    print()
+    print("=" * 72)
+    print("## Search path ladder (chain_walk -> block_table -> union -> pallas)")
+    print("=" * 72)
+    from benchmarks import scan_paths
+
+    t0 = time.time()
+    rows = scan_paths.main()
+    summary.append((
+        "scan_paths",
+        round(1e6 * (time.time() - t0) / max(len(rows), 1), 1),
+        ";".join(f"{r['path']}={r['us_per_call']}us" for r in rows),
+    ))
+
+    print()
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

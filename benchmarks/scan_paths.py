@@ -1,0 +1,55 @@
+"""ANNS search-path ladder (the §Perf ANNS hillclimb artifact):
+
+chain_walk (paper-faithful linked list) -> block_table (vectorised gather)
+-> union (dedup across batch) -> union_pallas (scalar-prefetch kernel).
+
+CPU wall-clock; the structural deltas (dependent-gather hops vs one gather;
+per-query vs per-batch block reads) carry to TPU where they are DMA-count
+and HBM-traffic differences.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import build_ivf
+from repro.core.search import make_search_fn
+from repro.data.synthetic import sift_like
+
+PATHS = ("chain_walk", "block_table", "union", "union_pallas")
+
+
+def run(n=20_000, nprobe=8, k=10, batch=10):
+    corpus = sift_like(n, 128, seed=7)
+    idx = build_ivf(corpus, n_clusters=64, block_size=64, max_chain=64,
+                    nprobe=nprobe, k=k, add_batch=8192)
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+    rows = []
+    ref_ids = None
+    for path in PATHS:
+        fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k, path=path)
+        d, ids = fn(idx.state, q)
+        jax.block_until_ready(ids)
+        if ref_ids is None:
+            ref_ids = np.asarray(ids)
+        else:
+            assert (np.asarray(ids) == ref_ids).all(), f"{path} diverged"
+        t = timed(lambda: fn(idx.state, q), iters=9)
+        rows.append({"path": path, "us_per_call": round(t * 1e6, 1)})
+    return rows
+
+
+def main():
+    rows = run()
+    print("path,us_per_call")
+    for r in rows:
+        print(f"{r['path']},{r['us_per_call']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Table 1: rearrangement threshold vs cost and latency effect.
+
+We pour `threshold` vectors into ONE cluster (the paper's hot-list
+scenario), measure search latency before, the rearrangement cost, and
+search latency after.  Thresholds are scaled (CPU) but span the same 10x
+range as the paper's {10k, 50k, 100k}.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import timed
+from repro.core import build_ivf
+from repro.data.synthetic import sift_like
+
+THRESHOLDS = (2_000, 10_000, 20_000)  # paper: 10k/50k/100k, CPU-scaled /5
+
+
+def run():
+    rows = []
+    dim = 128
+    for thr in THRESHOLDS:
+        base = sift_like(4000, dim, seed=1)
+        idx = build_ivf(
+            base, n_clusters=8, block_size=64, max_chain=1024,
+            capacity_vectors=8 * (4000 + thr), nprobe=8, k=10,
+            rearrange_threshold=thr - 1, add_batch=2048,
+        )
+        # hot list: every new vector lands in one cluster (constant target)
+        target = np.asarray(idx.state.centroids)[3]
+        hot = np.tile(target, (thr, 1)).astype(np.float32)
+        hot += 0.05 * np.random.default_rng(2).normal(size=hot.shape).astype(np.float32)
+        for off in range(0, thr, 2048):
+            idx.add(hot[off : off + 2048])
+        q = base[:10]
+        before_s = timed(lambda: idx.search(q), iters=9)
+        t0 = time.perf_counter()
+        passes = idx.maybe_rearrange(max_passes=4)
+        jax.block_until_ready(idx.state.pool_payload)
+        cost_s = time.perf_counter() - t0
+        after_s = timed(lambda: idx.search(q), iters=9)
+        rows.append({
+            "threshold": thr,
+            "latency_before_ms": round(before_s * 1e3, 3),
+            "rearrange_cost_ms": round(cost_s * 1e3, 3),
+            "latency_after_ms": round(after_s * 1e3, 3),
+            "passes": passes,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("threshold,latency_before_ms,rearrange_cost_ms,latency_after_ms,passes")
+    for r in rows:
+        print(",".join(str(r[k]) for k in r))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

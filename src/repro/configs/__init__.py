@@ -1,0 +1,1 @@
+from repro.configs.base import ArchSpec, get_arch, list_archs  # noqa: F401

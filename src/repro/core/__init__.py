@@ -1,0 +1,20 @@
+"""RTAMS-GANNS core: block-pool IVF with online insertion (paper §3)."""
+
+from repro.core.block_pool import (  # noqa: F401
+    IVFState,
+    PoolConfig,
+    check_invariants,
+    init_state,
+    snapshot_ids,
+    utilisation,
+)
+from repro.core.insert import assign_clusters, insert_payload, make_insert_fn  # noqa: F401
+from repro.core.ivf import IVFIndex, IVFIndexConfig, build_ivf  # noqa: F401
+from repro.core.kmeans import kmeans  # noqa: F401
+from repro.core.rearrange import make_rearrange_fn, rearrange_cluster  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    exact_search,
+    make_search_fn,
+    search_block_table,
+    search_chain_walk,
+)

@@ -1,0 +1,210 @@
+"""Central memory pool split into fixed-size blocks (paper §3.1, Fig. 1b).
+
+The paper pre-splits almost the entire GPU memory into blocks of ``T_m``
+vectors and allocates them with a lock-free ``atomicAdd(cur_P)`` bump
+pointer.  On TPU/XLA there is *no* dynamic device allocation inside a
+program, so the pool discipline is mandatory: every array below has a fixed
+shape, and "allocation" is pure index arithmetic on ``cur_p`` (plus a free
+stack fed by rearrangement).  The whole state is a pytree that flows through
+jitted, buffer-donated update steps — XLA updates it in place, which is the
+functional equivalent of the paper's "no realloc, no copy" property.
+
+Two chain representations are kept simultaneously:
+
+* ``next_block`` — the paper-faithful linked list of block headers
+  (prev/next pointer jumps).  Used by the chain-walk search baseline and by
+  rearrangement.
+* ``cluster_blocks`` — a dense per-cluster *block table* (PagedAttention
+  style).  This is the TPU adaptation: pointer chasing is hostile to a
+  vector machine, while a block table lets search gather an entire chain in
+  one HLO gather.  Both are maintained by every mutation and are checked
+  against each other in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL = jnp.int32(-1)  # null block pointer / empty id slot
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static geometry of the central pool (hashable; static under jit)."""
+
+    n_clusters: int  # N  — number of IVF lists
+    dim: int  # D  — raw vector dimensionality
+    block_size: int  # T_m — vectors per memory block (paper uses 1024)
+    n_blocks: int  # P  — blocks in the central pool
+    max_chain: int  # longest admissible block chain per cluster
+    payload: str = "flat"  # "flat" (raw vectors) | "pq" (codes)
+    pq_m: int = 0  # number of PQ subquantizers (payload == "pq")
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.payload not in ("flat", "pq"):
+            raise ValueError(f"unknown payload {self.payload!r}")
+        if self.payload == "pq" and self.pq_m <= 0:
+            raise ValueError("pq payload requires pq_m > 0")
+
+    # fields that define pytree-static identity
+    def payload_shape(self) -> tuple:
+        if self.payload == "flat":
+            return (self.n_blocks, self.block_size, self.dim)
+        return (self.n_blocks, self.block_size, self.pq_m)
+
+    def payload_dtype(self):
+        return self.dtype if self.payload == "flat" else jnp.uint8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IVFState:
+    """Dynamic pool + index state.  All leaves are fixed-shape jax arrays."""
+
+    centroids: jax.Array  # [N, D] coarse quantizer
+    pool_payload: jax.Array  # [P, T_m, D] vectors | [P, T_m, M] u8 codes
+    pool_ids: jax.Array  # [P, T_m] i32 global ids, NULL = empty slot
+    next_block: jax.Array  # [P] i32 linked-list next pointer (paper header)
+    cluster_head: jax.Array  # [N] i32 first block of each chain
+    cluster_tail: jax.Array  # [N] i32 last block of each chain
+    cluster_blocks: jax.Array  # [N, max_chain] i32 block table (TPU path)
+    cluster_nblocks: jax.Array  # [N] i32 chain length |m'_k|
+    cluster_len: jax.Array  # [N] i32 vectors per cluster (nl_k)
+    new_since_rearrange: jax.Array  # [N] i32 Exceed() statistic (Eq. 3)
+    cur_p: jax.Array  # []  i32 bump pointer cur_P
+    free_stack: jax.Array  # [P] i32 recycled block ids (top at free_top-1)
+    free_top: jax.Array  # []  i32
+    num_vectors: jax.Array  # []  i32 total vectors resident
+    num_dropped: jax.Array  # []  i32 inserts rejected at capacity (alert stat)
+
+
+def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
+    """Empty pool: nothing allocated, every chain empty."""
+    n, p, mc = cfg.n_clusters, cfg.n_blocks, cfg.max_chain
+    if centroids.shape != (n, cfg.dim):
+        raise ValueError(
+            f"centroids {centroids.shape} != {(n, cfg.dim)} from config"
+        )
+    return IVFState(
+        centroids=jnp.asarray(centroids, cfg.dtype),
+        pool_payload=jnp.zeros(cfg.payload_shape(), cfg.payload_dtype()),
+        pool_ids=jnp.full((p, cfg.block_size), NULL, jnp.int32),
+        next_block=jnp.full((p,), NULL, jnp.int32),
+        cluster_head=jnp.full((n,), NULL, jnp.int32),
+        cluster_tail=jnp.full((n,), NULL, jnp.int32),
+        cluster_blocks=jnp.full((n, mc), NULL, jnp.int32),
+        cluster_nblocks=jnp.zeros((n,), jnp.int32),
+        cluster_len=jnp.zeros((n,), jnp.int32),
+        new_since_rearrange=jnp.zeros((n,), jnp.int32),
+        cur_p=jnp.zeros((), jnp.int32),
+        free_stack=jnp.full((p,), NULL, jnp.int32),
+        free_top=jnp.zeros((), jnp.int32),
+        num_vectors=jnp.zeros((), jnp.int32),
+        num_dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def alloc_blocks(state: IVFState, j: jax.Array, valid: jax.Array) -> jax.Array:
+    """Vectorised lock-free allocator (paper Alg. 2 line 13).
+
+    ``j`` are *allocation ranks* 0..total_new-1 for this batch; rank j takes
+    the j-th free-stack entry if available, else bump slot ``cur_p + spill``.
+    Deterministic equivalent of ``atomicAdd(cur_P, 1)`` per thread.
+    Returns physical block ids (NULL where ``valid`` is False).
+    """
+    from_free = j < state.free_top
+    free_idx = jnp.clip(state.free_top - 1 - j, 0, state.free_stack.shape[0] - 1)
+    bump_idx = state.cur_p + jnp.maximum(j - state.free_top, 0)
+    phys = jnp.where(from_free, state.free_stack[free_idx], bump_idx)
+    return jnp.where(valid, phys, NULL)
+
+
+def commit_alloc(state: IVFState, total_new: jax.Array) -> dict:
+    """Post-allocation counter updates (to be merged with dataclasses.replace)."""
+    n_from_free = jnp.minimum(total_new, state.free_top)
+    return dict(
+        free_top=state.free_top - n_from_free,
+        cur_p=state.cur_p + (total_new - n_from_free),
+    )
+
+
+def capacity_ok(state: IVFState, cfg: PoolConfig) -> jax.Array:
+    """True while the bump pointer has not run off the pool (alert analogue:
+    the paper fires an alarm at 90% utilisation)."""
+    return state.cur_p <= cfg.n_blocks
+
+
+def utilisation(state: IVFState, cfg: PoolConfig) -> jax.Array:
+    """Fraction of pool blocks currently owned by chains."""
+    in_use = state.cur_p - state.free_top
+    return in_use.astype(jnp.float32) / float(cfg.n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Host-side invariant checker (used by tests and the serving runtime's
+# debug mode) — walks the linked list with numpy and cross-checks the block
+# table, chain lengths, and slot validity.
+# ---------------------------------------------------------------------------
+
+
+def check_invariants(state: IVFState, cfg: PoolConfig) -> None:
+    s = jax.device_get(state)
+    n = cfg.n_clusters
+    seen_blocks: set[int] = set()
+    for k in range(n):
+        length = int(s.cluster_len[k])
+        nblk = int(s.cluster_nblocks[k])
+        expect_nblk = -(-length // cfg.block_size)  # ceil
+        assert nblk == expect_nblk, (k, nblk, expect_nblk, length)
+        # walk the faithful linked list
+        chain = []
+        cur = int(s.cluster_head[k])
+        while cur != -1:
+            assert cur not in seen_blocks, f"block {cur} in two chains"
+            seen_blocks.add(cur)
+            chain.append(cur)
+            cur = int(s.next_block[cur])
+            assert len(chain) <= cfg.max_chain, f"cluster {k} chain overflow"
+        assert len(chain) == nblk, (k, chain, nblk)
+        if nblk:
+            assert int(s.cluster_tail[k]) == chain[-1]
+        else:
+            assert int(s.cluster_tail[k]) == -1
+        # block table mirrors the list
+        table = [int(b) for b in s.cluster_blocks[k][:nblk]]
+        assert table == chain, (k, table, chain)
+        assert all(int(b) == -1 for b in s.cluster_blocks[k][nblk:])
+        # slot occupancy: block j holds dids [j*T, min(len, (j+1)*T))
+        for j, b in enumerate(chain):
+            filled = min(length - j * cfg.block_size, cfg.block_size)
+            ids = s.pool_ids[b]
+            assert (ids[:filled] >= 0).all(), (k, j, b, ids)
+            assert (ids[filled:] == -1).all(), (k, j, b, ids)
+    total = int(s.num_vectors)
+    assert total == int(s.cluster_len.sum())
+    # free stack entries are disjoint from live chains
+    free = {int(b) for b in s.free_stack[: int(s.free_top)]}
+    assert not (free & seen_blocks), "freed block still chained"
+
+
+def snapshot_ids(state: IVFState, cfg: PoolConfig) -> dict[int, list[int]]:
+    """cluster -> ordered list of vector ids (host-side oracle for tests)."""
+    s = jax.device_get(state)
+    out: dict[int, list[int]] = {}
+    for k in range(cfg.n_clusters):
+        ids: list[int] = []
+        cur = int(s.cluster_head[k])
+        while cur != -1:
+            blk = [int(i) for i in s.pool_ids[cur] if int(i) != -1]
+            ids.extend(blk)
+            cur = int(s.next_block[cur])
+        out[k] = ids
+    return out

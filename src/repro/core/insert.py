@@ -1,0 +1,178 @@
+"""Memory-block based dynamic vector insertion (paper Alg. 2).
+
+The paper's GPU kernel is thread-per-vector with two atomics:
+
+* ``did = atomicAdd(nl_k, 1)`` — slot assignment inside the cluster;
+* ``P[atomicAdd(cur_P, 1)]`` — lock-free block allocation when a thread
+  crosses a block boundary (``moff == 0``).
+
+On TPU the SPMD analogue is a *deterministic* batch transform: a stable sort
+by cluster gives every incoming vector its within-batch rank, so
+``did = cluster_len[k] + rank`` reproduces the exact post-state of the atomic
+protocol (the paper's insertion order inside one batch is arbitrary; ours is
+batch order, which is one of the admissible serialisations).  Everything is
+a handful of vectorised scatters — no data copies of resident vectors, no
+reallocation, and the whole step runs under ``jit`` with the state donated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_pool import (
+    NULL,
+    IVFState,
+    PoolConfig,
+    alloc_blocks,
+    commit_alloc,
+)
+
+
+def assign_clusters(centroids: jax.Array, vectors: jax.Array) -> jax.Array:
+    """k <- argmin_c ||y - c||^2  (Alg. 2 line 5)."""
+    # ||y-c||^2 = ||y||^2 - 2 y.c + ||c||^2 ; ||y||^2 constant per row.
+    dots = vectors @ centroids.T
+    cn = jnp.sum(centroids * centroids, axis=-1)
+    return jnp.argmin(cn[None, :] - 2.0 * dots, axis=-1).astype(jnp.int32)
+
+
+def insert_payload(
+    cfg: PoolConfig,
+    state: IVFState,
+    assign: jax.Array,  # [B] i32 cluster of each new vector
+    payload: jax.Array,  # [B, D] vectors | [B, M] u8 codes
+    new_ids: jax.Array,  # [B] i32 global ids
+    valid: jax.Array | None = None,  # [B] bool — ragged batches (padding)
+) -> IVFState:
+    """Insert a batch into the pool.  Pure function of (state, batch)."""
+    b = assign.shape[0]
+    tm = cfg.block_size
+    if valid is None:
+        valid = jnp.ones((b,), bool)
+    # Padding rows are parked on cluster 0 but masked out of every scatter.
+    assign = jnp.where(valid, assign, 0)
+
+    # Within-batch rank of each valid row inside its cluster: stable sort by
+    # (assign, ~valid) so valid rows of a cluster precede padding; padding
+    # rows receive ranks past the valid run, which every scatter masks out.
+    key = assign * 2 + (~valid).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    idx = jnp.arange(b, dtype=jnp.int32)
+    sorted_key = key[order]
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_key[1:] != sorted_key[:-1]]
+    )
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank = jnp.zeros((b,), jnp.int32).at[order].set(idx - run_start)
+
+    # Hard per-cluster capacity: a chain can hold max_chain * T_m vectors.
+    # Rows past capacity are *rejected* and counted (the paper's resource-
+    # exhaustion rejection, §3.3); because the capacity filter removes the
+    # highest ranks of a cluster, surviving dids stay contiguous.
+    old_len = state.cluster_len
+    cap_vecs = cfg.max_chain * tm
+    pre_did = old_len[assign] + rank
+    vec_ok = valid & (pre_did < cap_vecs)
+    n_rejected = (valid & ~vec_ok).sum().astype(jnp.int32)
+    valid = vec_ok
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32), assign, num_segments=cfg.n_clusters
+    )
+    old_nblk = state.cluster_nblocks
+    new_len = old_len + counts
+    new_nblk = (new_len + tm - 1) // tm
+    nblk_needed = new_nblk - old_nblk  # [N] >= 0
+    # exclusive cumsum -> allocation rank base per cluster
+    cum = jnp.cumsum(nblk_needed)
+    base = cum - nblk_needed
+    total_new = cum[-1]
+
+    # ---- allocate new physical blocks (Alg. 2 lines 10-15) --------------
+    # at most B new blocks per batch; enumerate candidate slots j in [0, B)
+    j = jnp.arange(b, dtype=jnp.int32)
+    j_valid = j < total_new
+    # cluster owning allocation rank j: searchsorted over inclusive cumsum
+    owner = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    owner = jnp.clip(owner, 0, cfg.n_clusters - 1)
+    jj = j - base[owner]  # index of this new block within its cluster's run
+    phys = alloc_blocks(state, j, j_valid)
+
+    # block-table scatter: cluster_blocks[owner, old_nblk[owner] + jj] = phys
+    tbl_rows = jnp.where(j_valid, owner, cfg.n_clusters)
+    tbl_cols = jnp.where(j_valid, old_nblk[owner] + jj, cfg.max_chain)
+    cluster_blocks = state.cluster_blocks.at[tbl_rows, tbl_cols].set(
+        phys, mode="drop"
+    )
+
+    # linked-list scatter (paper header relink, Alg. 2 line 14):
+    # predecessor of run element jj>0 is phys of rank j-1 (same cluster by
+    # construction of contiguous runs); predecessor of jj==0 is the old tail
+    # (if the chain was non-empty).
+    prev_same_run = alloc_blocks(state, j - 1, j_valid & (jj > 0))
+    old_tail = state.cluster_tail[owner]
+    prev_blk = jnp.where(jj > 0, prev_same_run, old_tail)
+    link_valid = j_valid & (prev_blk != NULL)
+    next_block = state.next_block.at[
+        jnp.where(link_valid, prev_blk, cfg.n_blocks)
+    ].set(phys, mode="drop")
+
+    # head/tail updates
+    first_valid = j_valid & (jj == 0) & (old_nblk[owner] == 0)
+    cluster_head = state.cluster_head.at[
+        jnp.where(first_valid, owner, cfg.n_clusters)
+    ].set(phys, mode="drop")
+    last_valid = j_valid & (jj == nblk_needed[owner] - 1)
+    cluster_tail = state.cluster_tail.at[
+        jnp.where(last_valid, owner, cfg.n_clusters)
+    ].set(phys, mode="drop")
+
+    # ---- scatter the vectors themselves (Alg. 2 lines 6-8, 20) ----------
+    did = old_len[assign] + rank
+    mid = did // tm
+    moff = did % tm
+    vec_blk = cluster_blocks[assign, jnp.clip(mid, 0, cfg.max_chain - 1)]
+    rows = jnp.where(valid, vec_blk, cfg.n_blocks)
+    pool_payload = state.pool_payload.at[rows, moff].set(
+        payload.astype(state.pool_payload.dtype), mode="drop"
+    )
+    pool_ids = state.pool_ids.at[rows, moff].set(
+        jnp.where(valid, new_ids, NULL), mode="drop"
+    )
+
+    n_inserted = valid.sum().astype(jnp.int32)
+    return dataclasses.replace(
+        state,
+        pool_payload=pool_payload,
+        pool_ids=pool_ids,
+        next_block=next_block,
+        cluster_head=cluster_head,
+        cluster_tail=cluster_tail,
+        cluster_blocks=cluster_blocks,
+        cluster_nblocks=new_nblk,
+        cluster_len=new_len,
+        new_since_rearrange=state.new_since_rearrange + counts,
+        num_vectors=state.num_vectors + n_inserted,
+        num_dropped=state.num_dropped + n_rejected,
+        **commit_alloc(state, total_new),
+    )
+
+
+def make_insert_fn(cfg: PoolConfig, encode=None):
+    """Jitted end-to-end insert step: raw vectors -> updated state.
+
+    ``encode(state, assign, vectors) -> payload`` converts raw vectors to the
+    pool payload (identity for ivfflat; residual-PQ encode for ivfpq).  The
+    state is donated so XLA writes the pool in place (paper property: no
+    reallocation, no copying of resident data).
+    """
+
+    def step(state: IVFState, vectors, new_ids, valid=None):
+        assign = assign_clusters(state.centroids, vectors)
+        payload = vectors if encode is None else encode(state, assign, vectors)
+        return insert_payload(cfg, state, assign, payload, new_ids, valid)
+
+    return jax.jit(step, donate_argnums=(0,))

@@ -1,0 +1,199 @@
+"""User-facing IVFFlat / IVFPQ indexes over the block pool.
+
+``IVFIndex`` owns the jitted step functions (insert / search / rearrange)
+and the functional ``IVFState``.  The offline segment (paper §3.3) is built
+by k-means + replaying batched inserts through the *same* insertion path the
+online segment uses — there is deliberately no separate bulk loader, so the
+offline/online split is purely operational, as deployed in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pqmod
+from repro.core.block_pool import IVFState, PoolConfig, init_state
+from repro.core.insert import make_insert_fn
+from repro.core.kmeans import kmeans
+from repro.core.rearrange import make_rearrange_fn
+from repro.core.search import make_search_fn
+
+
+@dataclasses.dataclass
+class IVFIndexConfig:
+    n_clusters: int
+    dim: int
+    block_size: int = 1024  # paper deployment value T_m
+    max_chain: int = 64
+    pool_blocks: Optional[int] = None  # default: sized for capacity_vectors
+    capacity_vectors: Optional[int] = None
+    payload: str = "flat"  # "flat" | "pq"
+    pq_m: int = 0
+    nprobe: int = 16
+    k: int = 10
+    rearrange_threshold: int = 10_000  # T'_m (paper Table 1 sweeps this)
+    search_path: str = "block_table"  # "block_table" | "chain_walk"
+    use_kernel: bool = False  # route scan through Pallas ops
+    kmeans_iters: int = 10
+    seed: int = 0
+
+    def pool_config(self) -> PoolConfig:
+        if self.pool_blocks is not None:
+            n_blocks = self.pool_blocks
+        else:
+            cap = self.capacity_vectors or (self.n_clusters * self.block_size)
+            # slack: every cluster may hold a partial tail block, plus 25%
+            n_blocks = int(cap // self.block_size + self.n_clusters * 0.5 + 16)
+        return PoolConfig(
+            n_clusters=self.n_clusters,
+            dim=self.dim,
+            block_size=self.block_size,
+            n_blocks=n_blocks,
+            max_chain=self.max_chain,
+            payload=self.payload,
+            pq_m=self.pq_m,
+        )
+
+
+class IVFIndex:
+    """IVFFlat (payload='flat') or IVFPQ (payload='pq') with online insertion."""
+
+    def __init__(self, cfg: IVFIndexConfig):
+        self.cfg = cfg
+        self.pool_cfg = cfg.pool_config()
+        self.pq: Optional[pqmod.PQParams] = None
+        self.state: Optional[IVFState] = None
+        self._insert_fn = None
+        self._search_fns: dict = {}
+        self._rearrange_fn = None
+        self._next_id = 0
+
+    # ---------------------------------------------------------- build ----
+    def train(self, x: np.ndarray) -> None:
+        """Train the coarse quantizer (+ PQ codebooks) on offline vectors."""
+        cents = kmeans(
+            x, self.cfg.n_clusters, n_iter=self.cfg.kmeans_iters, seed=self.cfg.seed
+        )
+        self.state = init_state(self.pool_cfg, jnp.asarray(cents))
+        if self.cfg.payload == "pq":
+            # residuals of a sample against their centroid
+            xs = np.asarray(x[: min(len(x), 65536)], np.float32)
+            assign = np.asarray(
+                _assign_blockwise(jnp.asarray(xs), jnp.asarray(cents))
+            )
+            res = xs - cents[assign]
+            self.pq = pqmod.train_pq(res, self.cfg.pq_m, seed=self.cfg.seed)
+        encode = pqmod.make_pq_encode_fn(self.pq) if self.pq else None
+        self._insert_fn = make_insert_fn(self.pool_cfg, encode=encode)
+        self._rearrange_fn = make_rearrange_fn(
+            self.pool_cfg, self.cfg.rearrange_threshold
+        )
+
+    def add(self, x: np.ndarray | jax.Array, ids=None) -> np.ndarray:
+        """Insert a batch (offline load and online insertion share this)."""
+        assert self.state is not None, "train() first"
+        x = jnp.asarray(x, jnp.float32)
+        b = x.shape[0]
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + b, dtype=np.int32)
+            self._next_id += b
+        self.state = self._insert_fn(self.state, x, jnp.asarray(ids, jnp.int32))
+        return np.asarray(ids)
+
+    # --------------------------------------------------------- search ----
+    def _chain_budget(self) -> int:
+        """Adaptive static scan bound (§Perf): the gather paths pay for the
+        full ``max_chain`` table width even when live chains are short, so
+        the budget tracks ``cluster_nblocks.max()`` bucketed to the next
+        power of two — exact results, one recompile per bucket growth."""
+        live = max(1, int(self.state.cluster_nblocks.max()))
+        b = 1
+        while b < live:
+            b *= 2
+        return min(b, self.cfg.max_chain)
+
+    def _search_fn(self, nprobe: int, k: int, budget: int):
+        key = (nprobe, k, self.cfg.search_path, self.cfg.use_kernel, budget)
+        if key not in self._search_fns:
+            score_fn = None
+            if self.cfg.payload == "pq":
+                score_fn = pqmod.pq_score_fn(
+                    self.pq, self.state, use_kernel=self.cfg.use_kernel
+                )
+            self._search_fns[key] = make_search_fn(
+                self.pool_cfg,
+                nprobe=nprobe,
+                k=k,
+                path=self.cfg.search_path,
+                score_fn=score_fn,
+                chain_budget=budget,
+            )
+        return self._search_fns[key]
+
+    def search(self, queries, nprobe=None, k=None):
+        """Returns (dists [Q, k], ids [Q, k]); ids are -1 past corpus end."""
+        assert self.state is not None
+        nprobe = nprobe or self.cfg.nprobe
+        k = k or self.cfg.k
+        q = jnp.asarray(queries, jnp.float32)
+        d, i = self._search_fn(nprobe, k, self._chain_budget())(self.state, q)
+        return np.asarray(d), np.asarray(i)
+
+    # ------------------------------------------------------ rearrange ----
+    def maybe_rearrange(self, max_passes: int = 4) -> int:
+        """Compact offender chains until quiescent; returns #passes run."""
+        n = 0
+        for _ in range(max_passes):
+            self.state, triggered = self._rearrange_fn(self.state)
+            if not bool(triggered):
+                break
+            n += 1
+        return n
+
+    @property
+    def ntotal(self) -> int:
+        return int(self.state.num_vectors)
+
+
+def _assign_blockwise(x: jax.Array, cents: jax.Array, chunk: int = 8192):
+    """Memory-bounded argmin assignment for large training sets."""
+    outs = []
+    cn = jnp.sum(cents * cents, axis=1)
+    for i in range(0, x.shape[0], chunk):
+        xc = x[i : i + chunk]
+        d = cn[None] - 2.0 * xc @ cents.T
+        outs.append(jnp.argmin(d, axis=1))
+    return jnp.concatenate(outs)
+
+
+def build_ivf(
+    x: np.ndarray,
+    *,
+    n_clusters: int,
+    payload: str = "flat",
+    pq_m: int = 0,
+    block_size: int = 1024,
+    capacity_vectors: Optional[int] = None,
+    add_batch: int = 65536,
+    **kw,
+) -> IVFIndex:
+    """Offline build: train + replay the corpus through batched inserts."""
+    cfg = IVFIndexConfig(
+        n_clusters=n_clusters,
+        dim=x.shape[1],
+        payload=payload,
+        pq_m=pq_m,
+        block_size=block_size,
+        capacity_vectors=capacity_vectors or 2 * len(x),
+        **kw,
+    )
+    index = IVFIndex(cfg)
+    index.train(x)
+    for i in range(0, len(x), add_batch):
+        index.add(x[i : i + add_batch])
+    return index

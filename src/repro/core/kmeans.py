@@ -1,0 +1,63 @@
+"""K-means coarse quantizer training (``C = Kmeans(X, N)`` in Alg. 1/2).
+
+Lloyd iterations are fully jitted; init is either random-subset or
+k-means++ (host loop, used for small N).  Empty clusters are re-seeded from
+the globally farthest points, matching Faiss behaviour closely enough for
+recall parity experiments.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("n_clusters",))
+def _assign(x: jax.Array, centroids: jax.Array, n_clusters: int):
+    d = (
+        jnp.sum(x * x, 1, keepdims=True)
+        - 2.0 * x @ centroids.T
+        + jnp.sum(centroids * centroids, 1)[None]
+    )
+    a = jnp.argmin(d, axis=1)
+    return a, jnp.min(d, axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_clusters",))
+def _update(x: jax.Array, assign: jax.Array, centroids: jax.Array, n_clusters: int):
+    sums = jax.ops.segment_sum(x, assign, num_segments=n_clusters)
+    cnts = jax.ops.segment_sum(
+        jnp.ones((x.shape[0],), x.dtype), assign, num_segments=n_clusters
+    )
+    new = sums / jnp.maximum(cnts, 1.0)[:, None]
+    # keep old centroid where a cluster went empty (re-seeded by caller)
+    return jnp.where(cnts[:, None] > 0, new, centroids), cnts
+
+
+def kmeans(
+    x: np.ndarray | jax.Array,
+    n_clusters: int,
+    *,
+    n_iter: int = 20,
+    seed: int = 0,
+    reseed_empty: bool = True,
+) -> np.ndarray:
+    """Train centroids. Returns float32 [n_clusters, D] (host array)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    if n < n_clusters:
+        raise ValueError(f"need >= {n_clusters} points, got {n}")
+    rng = np.random.default_rng(seed)
+    centroids = x[jnp.asarray(rng.choice(n, n_clusters, replace=False))]
+    for _ in range(n_iter):
+        assign, dist = _assign(x, centroids, n_clusters)
+        centroids, cnts = _update(x, assign, centroids, n_clusters)
+        if reseed_empty:
+            empty = np.asarray(cnts == 0).nonzero()[0]
+            if empty.size:
+                far = np.asarray(jnp.argsort(-dist))[: empty.size]
+                centroids = centroids.at[jnp.asarray(empty)].set(x[jnp.asarray(far)])
+    return np.asarray(centroids)

@@ -1,0 +1,64 @@
+"""Recall and latency metrics used across benchmarks (paper §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+import numpy as np
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray, k: int) -> float:
+    """Mean |found ∩ true| / k over queries (ids = -1 ignored)."""
+    found = np.asarray(found_ids)[:, :k]
+    true = np.asarray(true_ids)[:, :k]
+    hits = 0
+    for f, t in zip(found, true):
+        hits += len(set(int(i) for i in f if i >= 0) & set(int(i) for i in t))
+    return hits / (found.shape[0] * k)
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    mean_ms: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    max_ms: float
+    n: int
+    timeouts: int = 0
+
+    @classmethod
+    def from_samples(cls, samples_s: Iterable[float], timeout_ms: float = None):
+        ms = np.asarray(list(samples_s), np.float64) * 1e3
+        if ms.size == 0:
+            return cls(0.0, 0.0, 0.0, 0.0, 0.0, 0)
+        timeouts = int((ms > timeout_ms).sum()) if timeout_ms else 0
+        return cls(
+            mean_ms=float(ms.mean()),
+            p50_ms=float(np.percentile(ms, 50)),
+            p95_ms=float(np.percentile(ms, 95)),
+            p99_ms=float(np.percentile(ms, 99)),
+            max_ms=float(ms.max()),
+            n=int(ms.size),
+            timeouts=timeouts,
+        )
+
+    def row(self) -> str:
+        return (
+            f"mean={self.mean_ms:7.2f}ms p50={self.p50_ms:7.2f} "
+            f"p95={self.p95_ms:7.2f} p99={self.p99_ms:7.2f} "
+            f"max={self.max_ms:7.2f} n={self.n} timeouts={self.timeouts}"
+        )
+
+
+class Timer:
+    """Context timer returning seconds."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,135 @@
+"""Product quantization (Jégou et al., TPAMI'11) for the IVFPQ payload.
+
+Vectors are encoded as residuals against their coarse centroid (Faiss IVFPQ
+semantics): ``code = PQ(y - c_k)``.  Search builds a per-(query, probe)
+asymmetric-distance LUT and accumulates it over the candidate codes (ADC).
+
+The jnp scorer here doubles as the oracle for the Pallas ADC kernel
+(``repro.kernels.pq_adc``), which re-derives the GPU shared-memory LUT trick
+as a VMEM-resident LUT + one-hot MXU accumulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_pool import IVFState
+from repro.core.kmeans import kmeans
+
+KSUB = 256  # codewords per subquantizer (uint8 codes)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PQParams:
+    codebooks: jax.Array  # [M, KSUB, dsub] f32
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+
+def train_pq(
+    residuals: np.ndarray, m: int, *, n_iter: int = 15, seed: int = 0
+) -> PQParams:
+    """Train per-subspace codebooks on (sampled) residual vectors."""
+    n, d = residuals.shape
+    if d % m:
+        raise ValueError(f"dim {d} not divisible by M={m}")
+    dsub = d // m
+    books = np.zeros((m, KSUB, dsub), np.float32)
+    for j in range(m):
+        sub = residuals[:, j * dsub : (j + 1) * dsub]
+        books[j] = kmeans(sub, KSUB, n_iter=n_iter, seed=seed + j)
+    return PQParams(codebooks=jnp.asarray(books))
+
+
+def encode(pq: PQParams, residuals: jax.Array) -> jax.Array:
+    """residuals [B, D] -> codes [B, M] uint8 (argmin per subspace)."""
+    b, d = residuals.shape
+    sub = residuals.reshape(b, pq.m, pq.dsub)
+    # [B, M, KSUB] distances per subspace
+    dots = jnp.einsum("bmd,mkd->bmk", sub, pq.codebooks)
+    cn = jnp.sum(pq.codebooks * pq.codebooks, axis=-1)  # [M, KSUB]
+    d2 = cn[None] - 2.0 * dots
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+def decode(pq: PQParams, codes: jax.Array) -> jax.Array:
+    """codes [..., M] -> reconstructed residuals [..., D]."""
+    recon = jax.vmap(lambda c: pq.codebooks[jnp.arange(pq.m), c.astype(jnp.int32)])(
+        codes.reshape(-1, pq.m)
+    )
+    return recon.reshape(*codes.shape[:-1], pq.dim)
+
+
+def adc_lut(pq: PQParams, query_residuals: jax.Array) -> jax.Array:
+    """query residuals [..., D] -> LUT [..., M, KSUB] of squared L2 terms."""
+    sub = query_residuals.reshape(*query_residuals.shape[:-1], pq.m, pq.dsub)
+    dots = jnp.einsum("...md,mkd->...mk", sub, pq.codebooks)
+    cn = jnp.sum(pq.codebooks * pq.codebooks, axis=-1)
+    qn = jnp.sum(sub * sub, axis=-1)  # [..., M]
+    return qn[..., None] + cn - 2.0 * dots
+
+
+def adc_accumulate(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut [..., M, KSUB], codes [..., T, M] -> distances [..., T]."""
+    idx = codes.astype(jnp.int32)  # [..., T, M]
+    m = lut.shape[-2]
+    gathered = jnp.take_along_axis(
+        lut[..., None, :, :],  # [..., 1, M, KSUB]
+        idx[..., :, :, None],  # [..., T, M, 1]
+        axis=-1,
+    )[..., 0]
+    return jnp.sum(gathered, axis=-1)
+
+
+def make_pq_encode_fn(pq: PQParams):
+    """encode(state, assign, vectors) hook for ``make_insert_fn``."""
+
+    def _encode(state: IVFState, assign: jax.Array, vectors: jax.Array):
+        residuals = vectors - state.centroids[assign]
+        return encode(pq, residuals)
+
+    return _encode
+
+
+def pq_score_fn(pq: PQParams, state: IVFState, use_kernel: bool = False):
+    """score_fn hook for ``search.py``: ADC over candidate block codes.
+
+    payload: [Q, C, T, M] uint8 codes where C = nprobe * chain (block-table
+    path) or C = nprobe (chain-walk path); probe_idx: [Q, nprobe].
+    Bound to the live state's centroids for residual LUTs.
+    """
+
+    def _score(queries, payload, probe_idx):
+        q, c, t, m = payload.shape
+        nprobe = probe_idx.shape[1]
+        chain = c // nprobe
+        qres = queries[:, None, :] - state.centroids[probe_idx]  # [Q, P, D]
+        lut = adc_lut(pq, qres)  # [Q, P, M, KSUB]
+        codes = payload.reshape(q, nprobe, chain * t, m)
+        if use_kernel:
+            from repro.kernels.ops import pq_adc
+
+            d = pq_adc(lut.reshape(q * nprobe, pq.m, KSUB),
+                       codes.reshape(q * nprobe, chain * t, m))
+            d = d.reshape(q, nprobe, chain * t)
+        else:
+            d = adc_accumulate(lut, codes)  # [Q, P, chain*T]
+        return d.reshape(q, c, t)
+
+    return _score

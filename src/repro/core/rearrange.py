@@ -1,0 +1,132 @@
+"""In-place rearrangement of fragmented block chains (paper Alg. 3, Fig. 1c).
+
+The paper merges split memory blocks through a temporary segment so a chain's
+vectors become contiguous, eliminating header jumps.  Our functional
+equivalent compacts one cluster's chain into a *physically contiguous* run of
+freshly bump-allocated blocks (gather chain -> temp segment -> dense write),
+then returns the old blocks to the free stack.  Semantics match the paper's
+goal — after rearrangement a scan reads sequential memory instead of chasing
+scattered blocks — and the cost/benefit is measured in
+``benchmarks/table1_rearrangement.py`` (paper Table 1).
+
+Notes vs the paper:
+* Our insertion keeps every mid-chain block full (the per-cluster counter is
+  global), so the "merge two half-filled blocks" case of Alg. 3 cannot arise;
+  what remains — and what we compact — is physical scatter of the chain.
+  The recursive lazy-merge branch (Alg. 3 lines 3-6, 13-15) therefore
+  degenerates and is handled by the same dense rewrite.
+* The temp segment is real: the gather materialises the chain before any
+  write, so a preempted step never observes a half-moved chain (the donated
+  state is replaced atomically at step boundaries).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_pool import NULL, IVFState, PoolConfig
+
+
+def exceed(state: IVFState, threshold: int) -> jax.Array:
+    """Eq. 3: clusters whose newly-inserted volume passed the threshold."""
+    return state.new_since_rearrange > threshold
+
+
+def rearrange_cluster(
+    cfg: PoolConfig, state: IVFState, cluster: jax.Array
+) -> IVFState:
+    """Compact one cluster's chain into contiguous fresh blocks.
+
+    ``cluster`` is a traced scalar; the op is a no-op (identity scatters) for
+    empty chains, so callers may pass any cluster id unconditionally.
+    """
+    mc, tm = cfg.max_chain, cfg.block_size
+    nblk = state.cluster_nblocks[cluster]  # scalar
+    table = state.cluster_blocks[cluster]  # [max_chain]
+    chain_valid = jnp.arange(mc) < nblk
+
+    # ---- temp segment: gather the whole chain (paper line 7-9) ----------
+    safe = jnp.where(chain_valid, table, 0)
+    tmp_payload = state.pool_payload[safe]  # [mc, T, ...]
+    tmp_ids = state.pool_ids[safe]  # [mc, T]
+
+    # ---- allocate a contiguous run of nblk fresh blocks ------------------
+    # Bump-only (NOT via the free stack): the whole point of rearrangement
+    # is physical contiguity, so the run must be sequential block ids.
+    # The old blocks are recycled onto the free stack for future *inserts*,
+    # which don't care about contiguity.
+    j = jnp.arange(mc, dtype=jnp.int32)
+    new_blocks = jnp.where(chain_valid, state.cur_p + j, NULL)  # [mc]
+    rows = jnp.where(chain_valid, new_blocks, cfg.n_blocks)
+
+    # dense rewrite (the "merge" of Alg. 3 lines 9-11)
+    pool_payload = state.pool_payload.at[rows].set(tmp_payload, mode="drop")
+    pool_ids = state.pool_ids.at[rows].set(tmp_ids, mode="drop")
+
+    # ---- header/table updates (paper line 11) ----------------------------
+    nxt = jnp.where(
+        jnp.arange(mc) + 1 < nblk,
+        jnp.roll(new_blocks, -1),
+        NULL,
+    )
+    next_block = state.next_block.at[rows].set(nxt, mode="drop")
+    cluster_blocks = state.cluster_blocks.at[cluster].set(
+        jnp.where(chain_valid, new_blocks, NULL)
+    )
+    head = jnp.where(nblk > 0, new_blocks[0], NULL)
+    last = jnp.where(nblk > 0, new_blocks[jnp.maximum(nblk - 1, 0)], NULL)
+    cluster_head = state.cluster_head.at[cluster].set(head)
+    cluster_tail = state.cluster_tail.at[cluster].set(last)
+
+    # ---- free the old blocks (wait-for-spare analogue, line 12) ---------
+    # Old chain blocks go to the free stack; their headers are cleared.
+    n_alloc = nblk
+    free_top = state.free_top
+    free_pos = jnp.where(chain_valid, free_top + j, cfg.n_blocks)
+    free_stack = state.free_stack.at[free_pos].set(
+        jnp.where(chain_valid, table, NULL), mode="drop"
+    )
+    # clear freed block slots so stale ids never leak into future scans
+    old_rows = jnp.where(chain_valid, table, cfg.n_blocks)
+    pool_ids = pool_ids.at[old_rows].set(NULL, mode="drop")
+    next_block = next_block.at[old_rows].set(NULL, mode="drop")
+
+    return dataclasses.replace(
+        state,
+        pool_payload=pool_payload,
+        pool_ids=pool_ids,
+        next_block=next_block,
+        cluster_head=cluster_head,
+        cluster_tail=cluster_tail,
+        cluster_blocks=cluster_blocks,
+        new_since_rearrange=state.new_since_rearrange.at[cluster].set(0),
+        free_stack=free_stack,
+        free_top=free_top + n_alloc,
+        cur_p=state.cur_p + n_alloc,
+    )
+
+
+def make_rearrange_fn(cfg: PoolConfig, threshold: int):
+    """Jitted maintenance step: compact the single worst offender (if any).
+
+    The paper runs rearrangement as a single-thread GPU pass over chains
+    (Alg. 2 lines 23-28); we compact the cluster with the largest
+    ``new_since_rearrange`` exceeding the threshold — callers loop while
+    ``triggered`` (mirrors the one-block-at-a-time deployment note in §3.3).
+    """
+
+    @jax.jit
+    def step(state: IVFState):
+        stat = state.new_since_rearrange
+        worst = jnp.argmax(stat).astype(jnp.int32)
+        triggered = stat[worst] > threshold
+        new_state = rearrange_cluster(cfg, state, worst)
+        out = jax.tree.map(
+            lambda a, b: jnp.where(triggered, a, b), new_state, state
+        )
+        return out, triggered
+
+    return step

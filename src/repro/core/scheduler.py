@@ -1,0 +1,349 @@
+"""Multi-stream serving runtime (paper Alg. 4 + deployment §3.3).
+
+Reproduces the paper's execution architecture with TPU-appropriate
+mechanisms (DESIGN.md §2, §5):
+
+* **Resource pool** — 32 slots, each a permit to dispatch a search; when all
+  slots are busy the request is *rejected* (the paper's lock-free queue with
+  rejection).  Slot scratch memory is implicit in JAX (each jitted search
+  owns preallocated output buffers), the central-pool overflow grant is
+  modelled by the shared device arena.
+* **Dedicated insert lane** — one thread owns the index state and applies
+  donated insert steps; the paper's single data stream.
+* **Dynamic batcher** — inserts aggregate until ``flush_min`` (128) pending
+  or ``flush_interval`` (1 s) elapsed, capped at ``flush_max`` (1024);
+  search batches are capped at ``max_search_batch`` (10).  All paper §3.3
+  values are the defaults.
+* **Execution modes** (benchmarked in Fig. 3 reproduction):
+    - ``serial``   — Fig. 2a: one lane; an insert in flight blocks searches.
+    - ``parallel`` — Fig. 2b: search slots dispatch concurrently with the
+      insert lane.  Correctness under buffer donation: dispatch happens
+      under the state lock (cheap — dispatch is async), execution overlaps.
+    - ``fused``    — TPU-native multi-stream: a pending insert batch and a
+      pending search batch are submitted as ONE jitted program whose two
+      subgraphs share no data edge, so the XLA scheduler overlaps them
+      (search reads the pre-insert state — the legal concurrent
+      serialisation, same as the paper's streams).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.insert import assign_clusters, insert_payload
+from repro.core.ivf import IVFIndex
+from repro.core.metrics import LatencyStats
+from repro.core import pq as pqmod
+from repro.core.search import search_block_table, search_union
+
+
+class RequestRejected(RuntimeError):
+    """All resource-pool slots busy (paper: reject at 32 exhausted)."""
+
+
+@dataclasses.dataclass
+class _Timed:
+    future: Future
+    t_arrival: float
+    payload: object
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    n_slots: int = 32  # paper: 32 independent resources
+    max_search_batch: int = 10  # paper: max search batch 10
+    flush_min: int = 128  # paper: dispatch at 128 pending inserts
+    flush_max: int = 1024  # paper: cap 1024
+    flush_interval: float = 1.0  # paper: flush every second
+    nprobe: int = 16
+    k: int = 10
+    mode: str = "parallel"  # serial | parallel | fused
+    search_path: str = "block_table"  # see core.search
+
+
+class ServingRuntime:
+    """Owns the IVF index state + jitted steps; serves search/insert."""
+
+    def __init__(self, index: IVFIndex, cfg: RuntimeConfig = RuntimeConfig()):
+        self.index = index
+        self.cfg = cfg
+        self.pool_cfg = index.pool_cfg
+        self._state_lock = threading.Lock()
+        self._slots = threading.Semaphore(cfg.n_slots)
+        self._stop = threading.Event()
+        self._search_q: queue.Queue = queue.Queue()
+        self._insert_q: queue.Queue = queue.Queue()
+        self._search_lat: list[float] = []
+        self._insert_lat: list[float] = []
+        self._rejects = 0
+        self._fused_pending = queue.Queue()
+        self._build_steps()
+        self._threads = [
+            threading.Thread(target=self._insert_loop, daemon=True),
+            threading.Thread(target=self._search_loop, daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ steps --
+    def _build_steps(self):
+        cfg, pc = self.cfg, self.pool_cfg
+        pq = self.index.pq
+        search_impl = {
+            "block_table": search_block_table,
+            "union": search_union,
+        }.get(cfg.search_path, search_block_table)
+
+        def _score_fn(state):
+            if pq is None:
+                return None
+            return pqmod.pq_score_fn(pq, state)
+
+        # adaptive chain budget (§Perf): scan only the live chain depth
+        # (2x headroom for online growth), not the max_chain capacity
+        budget = min(2 * self.index._chain_budget(), pc.max_chain)
+
+        def _search(state, queries, valid):
+            d, i = search_impl(
+                pc, state, queries, nprobe=cfg.nprobe, k=cfg.k,
+                score_fn=_score_fn(state), chain_budget=budget,
+            )
+            return d, jnp.where(valid[:, None], i, -1)
+
+        def _insert(state, vectors, ids, valid):
+            assign = assign_clusters(state.centroids, vectors)
+            if pq is None:
+                payload = vectors
+            else:
+                payload = pqmod.encode(pq, vectors - state.centroids[assign])
+            return insert_payload(pc, state, assign, payload, ids, valid)
+
+        self._search_step = jax.jit(_search)
+        self._insert_step = jax.jit(_insert, donate_argnums=(0,))
+
+        def _fused(state, queries, qvalid, vectors, ids, ivalid):
+            # two independent subgraphs; XLA overlaps them (multi-stream)
+            d, i = _search(state, queries, qvalid)
+            new_state = _insert(state, vectors, ids, ivalid)
+            return new_state, d, i
+
+        self._fused_step = jax.jit(_fused, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ API ----
+    def submit_search(self, queries: np.ndarray) -> Future:
+        if not self._slots.acquire(blocking=False):
+            self._rejects += 1
+            raise RequestRejected("resource pool exhausted")
+        fut = Future()
+        self._search_q.put(_Timed(fut, time.perf_counter(), queries))
+        return fut
+
+    def submit_insert(self, vectors: np.ndarray) -> Future:
+        fut = Future()
+        self._insert_q.put(_Timed(fut, time.perf_counter(), vectors))
+        return fut
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def stats(self, timeout_ms: float = 20.0):
+        return {
+            "search": LatencyStats.from_samples(self._search_lat, timeout_ms),
+            "insert": LatencyStats.from_samples(self._insert_lat, timeout_ms),
+            "rejected": self._rejects,
+        }
+
+    # --------------------------------------------------------- workers ---
+    def _drain_inserts(self) -> list[_Timed]:
+        """Dynamic batching policy from §3.3."""
+        items: list[_Timed] = []
+        deadline = time.perf_counter() + self.cfg.flush_interval
+        while not self._stop.is_set():
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                break
+            try:
+                items.append(self._insert_q.get(timeout=min(timeout, 0.01)))
+            except queue.Empty:
+                continue
+            if len(self._pending_vectors(items)) >= self.cfg.flush_min:
+                break
+        # cap at flush_max vectors
+        return items
+
+    @staticmethod
+    def _pending_vectors(items: list[_Timed]) -> np.ndarray:
+        if not items:
+            return np.zeros((0, 1), np.float32)
+        return np.concatenate([np.atleast_2d(i.payload) for i in items], 0)
+
+    @staticmethod
+    def _bucket(n: int, floor: int = 8) -> int:
+        """Next power-of-two bucket — keeps the jit cache tiny."""
+        b = floor
+        while b < n:
+            b *= 2
+        return b
+
+    def _padded(self, rows: np.ndarray, bucket: int):
+        n = len(rows)
+        out = np.zeros((bucket, rows.shape[1]), np.float32)
+        out[:n] = rows
+        valid = np.zeros((bucket,), bool)
+        valid[:n] = True
+        return out, valid
+
+    def _apply_insert(self, items: list[_Timed]):
+        vecs = self._pending_vectors(items)[: self.cfg.flush_max]
+        b = len(vecs)
+        ids = np.arange(
+            self.index._next_id, self.index._next_id + b, dtype=np.int32
+        )
+        self.index._next_id += b
+        bucket = self._bucket(b)
+        pv, valid = self._padded(vecs, bucket)
+        pids = np.full((bucket,), -1, np.int32)
+        pids[:b] = ids
+        with self._state_lock:
+            self.index.state = self._insert_step(
+                self.index.state,
+                jnp.asarray(pv),
+                jnp.asarray(pids),
+                jnp.asarray(valid),
+            )
+            st = self.index.state
+        jax.block_until_ready(st.cluster_len)
+        t = time.perf_counter()
+        for it in items:
+            self._insert_lat.append(t - it.t_arrival)
+            it.future.set_result(ids)
+
+    def _insert_loop(self):
+        if self.cfg.mode == "serial":
+            return  # serial mode: the search loop owns inserts too
+        while not self._stop.is_set():
+            items = self._drain_inserts()
+            if not items:
+                continue
+            if self.cfg.mode == "fused":
+                # hand the batch to the search loop for fused dispatch
+                self._fused_pending.put(items)
+            else:
+                self._apply_insert(items)
+
+    def _collect_search_batch(self) -> list[_Timed]:
+        items: list[_Timed] = []
+        try:
+            items.append(self._search_q.get(timeout=0.005))
+        except queue.Empty:
+            return items
+        while len(items) < self.cfg.max_search_batch:
+            try:
+                items.append(self._search_q.get_nowait())
+            except queue.Empty:
+                break
+        return items
+
+    def _run_search(self, items: list[_Timed]):
+        qs = [np.atleast_2d(i.payload) for i in items]
+        counts = [len(q) for q in qs]
+        batch = np.concatenate(qs, 0)
+        pb, valid = self._padded(batch, self._bucket(len(batch)))
+        with self._state_lock:
+            st = self.index.state
+            d, i = self._search_step(
+                st, jnp.asarray(pb), jnp.asarray(valid)
+            )
+        d, i = np.asarray(d), np.asarray(i)
+        t = time.perf_counter()
+        off = 0
+        for it, c in zip(items, counts):
+            self._search_lat.append(t - it.t_arrival)
+            it.future.set_result((d[off : off + c], i[off : off + c]))
+            off += c
+            self._slots.release()
+
+    def _search_loop(self):
+        serial_insert_items: list[_Timed] = []
+        last_flush = time.perf_counter()
+        while not self._stop.is_set():
+            if self.cfg.mode == "serial":
+                # Fig. 2a: one lane — inserts interleave with (and block)
+                # searches on the same execution stream.
+                try:
+                    it = self._insert_q.get_nowait()
+                    serial_insert_items.append(it)
+                except queue.Empty:
+                    pass
+                n_pend = sum(
+                    len(np.atleast_2d(x.payload)) for x in serial_insert_items
+                )
+                if serial_insert_items and (
+                    n_pend >= self.cfg.flush_min
+                    or time.perf_counter() - last_flush > self.cfg.flush_interval
+                ):
+                    self._apply_insert(serial_insert_items)
+                    serial_insert_items = []
+                    last_flush = time.perf_counter()
+            items = self._collect_search_batch()
+            if self.cfg.mode == "fused":
+                try:
+                    ins_items = self._fused_pending.get_nowait()
+                except queue.Empty:
+                    ins_items = None
+                if ins_items and items:
+                    self._run_fused(items, ins_items)
+                    continue
+                if ins_items:  # no search to pair with: standalone insert
+                    self._apply_insert(ins_items)
+            if items:
+                self._run_search(items)
+
+    def _run_fused(self, s_items: list[_Timed], i_items: list[_Timed]):
+        qs = [np.atleast_2d(x.payload) for x in s_items]
+        counts = [len(q) for q in qs]
+        qbatch = np.concatenate(qs, 0)
+        vecs = self._pending_vectors(i_items)[: self.cfg.flush_max]
+        b = len(vecs)
+        ids = np.arange(
+            self.index._next_id, self.index._next_id + b, dtype=np.int32
+        )
+        self.index._next_id += b
+        pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
+        pv, ivalid = self._padded(vecs, self._bucket(b))
+        pids = np.full((len(ivalid),), -1, np.int32)
+        pids[:b] = ids
+        with self._state_lock:
+            self.index.state, d, i = self._fused_step(
+                self.index.state,
+                jnp.asarray(pq_),
+                jnp.asarray(qvalid),
+                jnp.asarray(pv),
+                jnp.asarray(pids),
+                jnp.asarray(ivalid),
+            )
+            st = self.index.state
+        d, i = np.asarray(d), np.asarray(i)
+        jax.block_until_ready(st.cluster_len)
+        t = time.perf_counter()
+        off = 0
+        for it, c in zip(s_items, counts):
+            self._search_lat.append(t - it.t_arrival)
+            it.future.set_result((d[off : off + c], i[off : off + c]))
+            off += c
+            self._slots.release()
+        for it in i_items:
+            self._insert_lat.append(t - it.t_arrival)
+            it.future.set_result(ids)

@@ -1,0 +1,245 @@
+"""IVF search over the block pool: coarse probe -> block scan -> top-k.
+
+Two scan paths are provided and benchmarked against each other in §Perf:
+
+* ``chain_walk``  — paper-faithful: follow ``next_block`` header pointers one
+  hop at a time (a ``lax.scan`` whose carry is the frontier block of every
+  probed chain).  This is the direct port of the GPU linked-list traversal
+  and is intentionally kept as the *baseline*: each hop is a dependent
+  gather, so the TPU pays a serialised round trip per hop.
+* ``block_table`` — TPU adaptation: gather the whole chain for every probed
+  cluster in one vectorised HLO gather via ``cluster_blocks`` and scan all
+  candidate blocks as one batched matmul (MXU-shaped).  Same results,
+  no pointer chasing.
+
+The distance scan itself can additionally be routed through the Pallas
+kernel (``repro.kernels.ivf_scan``) via ``scan_impl="pallas"``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_pool import NULL, IVFState, PoolConfig
+
+INF = jnp.float32(jnp.inf)
+
+
+def l2_sq(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """[Q, D] x [N, D] -> [Q, N] squared L2 distances."""
+    qn = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    pn = jnp.sum(points * points, axis=-1)
+    return qn + pn[None, :] - 2.0 * (queries @ points.T)
+
+
+def coarse_probe(state: IVFState, queries: jax.Array, nprobe: int):
+    """Top-``nprobe`` nearest centroids per query (ivf coarse quantizer)."""
+    d = l2_sq(queries, state.centroids)
+    neg_d, idx = jax.lax.top_k(-d, nprobe)
+    return idx.astype(jnp.int32), -neg_d
+
+
+def exact_search(corpus: jax.Array, queries: jax.Array, k: int):
+    """Brute-force oracle used for recall metrics."""
+    d = l2_sq(queries, corpus)
+    neg_d, idx = jax.lax.top_k(-d, k)
+    return -neg_d, idx
+
+
+# ---------------------------------------------------------------------------
+# Block-table path (TPU-native)
+# ---------------------------------------------------------------------------
+
+
+def gather_candidate_blocks(
+    state: IVFState, probe_idx: jax.Array, chain_budget: Optional[int] = None
+):
+    """probe_idx [Q, nprobe] -> (payload [Q, C, T, ...], ids [Q, C, T], valid).
+
+    ``chain_budget`` statically bounds how many chain slots are gathered per
+    cluster.  ``max_chain`` is a *capacity* knob (worst-case hot list); the
+    live maximum chain length is usually far smaller, and gathering the full
+    table pays for NULL padding.  The runtime picks the budget from
+    ``cluster_nblocks.max()`` bucketed to a power of two (see IVFIndex),
+    so results are exact and the jit cache stays tiny.
+    """
+    table = state.cluster_blocks
+    if chain_budget is not None and chain_budget < table.shape[1]:
+        table = table[:, :chain_budget]
+    blocks = table[probe_idx]  # [Q, nprobe, budget]
+    q = blocks.shape[0]
+    flat = blocks.reshape(q, -1)  # [Q, C]
+    safe = jnp.where(flat == NULL, 0, flat)
+    payload = state.pool_payload[safe]
+    ids = state.pool_ids[safe]
+    valid = (flat != NULL)[..., None] & (ids != NULL)
+    return payload, ids, valid
+
+
+def flat_block_scores(queries: jax.Array, payload: jax.Array) -> jax.Array:
+    """queries [Q, D], payload [Q, C, T, D] -> squared L2 [Q, C, T]."""
+    vn = jnp.sum(payload * payload, axis=-1)
+    qn = jnp.sum(queries * queries, axis=-1)[:, None, None]
+    dots = jnp.einsum("qd,qctd->qct", queries, payload)
+    return qn + vn - 2.0 * dots
+
+
+def search_block_table(
+    cfg: PoolConfig,
+    state: IVFState,
+    queries: jax.Array,
+    *,
+    nprobe: int,
+    k: int,
+    score_fn: Optional[Callable] = None,
+    chain_budget: Optional[int] = None,
+):
+    """Vectorised search. Returns (dists [Q, k], ids [Q, k])."""
+    probe_idx, _ = coarse_probe(state, queries, nprobe)
+    payload, ids, valid = gather_candidate_blocks(state, probe_idx, chain_budget)
+    if score_fn is None:
+        scores = flat_block_scores(queries, payload)
+    else:
+        scores = score_fn(queries, payload, probe_idx)
+    scores = jnp.where(valid, scores, INF)
+    q = queries.shape[0]
+    flat_scores = scores.reshape(q, -1)
+    flat_ids = ids.reshape(q, -1)
+    neg_d, sel = jax.lax.top_k(-flat_scores, k)
+    out_ids = jnp.take_along_axis(flat_ids, sel, axis=1)
+    out_ids = jnp.where(jnp.isinf(-neg_d), NULL, out_ids)
+    return -neg_d, out_ids
+
+
+# ---------------------------------------------------------------------------
+# Chain-walk path (paper-faithful linked list traversal)
+# ---------------------------------------------------------------------------
+
+
+def search_chain_walk(
+    cfg: PoolConfig,
+    state: IVFState,
+    queries: jax.Array,
+    *,
+    nprobe: int,
+    k: int,
+    score_fn: Optional[Callable] = None,
+    chain_budget: Optional[int] = None,
+):
+    """Follow ``next_block`` headers hop by hop (GPU traversal port)."""
+    q = queries.shape[0]
+    probe_idx, _ = coarse_probe(state, queries, nprobe)
+    cur0 = state.cluster_head[probe_idx]  # [Q, nprobe]
+    best_d0 = jnp.full((q, k), INF)
+    best_i0 = jnp.full((q, k), NULL, jnp.int32)
+
+    def hop(carry, _):
+        cur, best_d, best_i = carry
+        safe = jnp.where(cur == NULL, 0, cur)
+        payload = state.pool_payload[safe]  # [Q, nprobe, T, ...]
+        ids = state.pool_ids[safe]  # [Q, nprobe, T]
+        if score_fn is None:
+            scores = flat_block_scores(
+                queries, payload.reshape(q, -1, *payload.shape[2:])
+            ).reshape(ids.shape)
+        else:
+            scores = score_fn(queries, payload, probe_idx)
+        alive = (cur != NULL)[..., None] & (ids != NULL)
+        scores = jnp.where(alive, scores, INF)
+        cat_d = jnp.concatenate([best_d, scores.reshape(q, -1)], axis=1)
+        cat_i = jnp.concatenate([best_i, ids.reshape(q, -1)], axis=1)
+        neg_d, sel = jax.lax.top_k(-cat_d, k)
+        best_i = jnp.take_along_axis(cat_i, sel, axis=1)
+        nxt = jnp.where(cur == NULL, NULL, state.next_block[safe])
+        return (nxt, -neg_d, best_i), None
+
+    (cur, best_d, best_i), _ = jax.lax.scan(
+        hop, (cur0, best_d0, best_i0), None,
+        length=chain_budget or cfg.max_chain,
+    )
+    best_i = jnp.where(jnp.isinf(best_d), NULL, best_i)
+    return best_d, best_i
+
+
+# ---------------------------------------------------------------------------
+# Union-dedup scan (beyond-paper TPU optimisation, §Perf):
+# the union of probed clusters across the query batch is scanned once, so
+# every candidate block is read from HBM exactly once per *batch* instead of
+# once per *query*.  ``scan_impl="pallas"`` routes the distance computation
+# through the scalar-prefetch Pallas kernel (repro.kernels.ivf_scan).
+# ---------------------------------------------------------------------------
+
+
+def search_union(
+    cfg: PoolConfig,
+    state: IVFState,
+    queries: jax.Array,
+    *,
+    nprobe: int,
+    k: int,
+    score_fn: Optional[Callable] = None,  # unused (flat payload only)
+    scan_impl: str = "jnp",
+    chain_budget: Optional[int] = None,
+):
+    q = queries.shape[0]
+    mc = min(chain_budget or cfg.max_chain, cfg.max_chain)
+    probe_idx, _ = coarse_probe(state, queries, nprobe)  # [Q, NP]
+    union = jnp.unique(
+        probe_idx.reshape(-1), size=q * nprobe, fill_value=NULL
+    )  # [CU] sorted, NULL-padded
+    member = (probe_idx[:, :, None] == union[None, None, :]).any(axis=1)  # [Q, CU]
+    blocks = state.cluster_blocks[jnp.maximum(union, 0), :mc]  # [CU, MC]
+    blocks = jnp.where((union != NULL)[:, None], blocks, NULL)
+    flat_blocks = blocks.reshape(-1)  # [CB = CU*MC]
+
+    if scan_impl == "pallas":
+        from repro.kernels.ops import ivf_block_scan
+
+        scores = ivf_block_scan(queries, state.pool_payload, flat_blocks)
+    else:
+        from repro.kernels.ref import ivf_block_scan_ref
+
+        scores = ivf_block_scan_ref(queries, state.pool_payload, flat_blocks)
+    # scores [CB, Q, T] -> mask holes, non-membership, empty slots
+    ids = state.pool_ids[jnp.maximum(flat_blocks, 0)]  # [CB, T]
+    slot_ok = (flat_blocks != NULL)[:, None] & (ids != NULL)  # [CB, T]
+    member_b = jnp.repeat(member, mc, axis=1)  # [Q, CB]
+    ok = slot_ok[None, :, :] & member_b[:, :, None]  # [Q, CB, T]
+    sq = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), INF)
+    flat_scores = sq.reshape(q, -1)
+    flat_ids = jnp.broadcast_to(ids[None], (q, *ids.shape)).reshape(q, -1)
+    neg_d, sel = jax.lax.top_k(-flat_scores, k)
+    out_ids = jnp.take_along_axis(flat_ids, sel, axis=1)
+    out_ids = jnp.where(jnp.isinf(-neg_d), NULL, out_ids)
+    return -neg_d, out_ids
+
+
+def make_search_fn(
+    cfg: PoolConfig,
+    *,
+    nprobe: int,
+    k: int,
+    path: str = "block_table",
+    score_fn: Optional[Callable] = None,
+    chain_budget: Optional[int] = None,
+):
+    """Jitted search step closed over static (nprobe, k, traversal path)."""
+    impl = {
+        "block_table": search_block_table,
+        "chain_walk": search_chain_walk,
+        "union": search_union,
+        "union_pallas": partial(search_union, scan_impl="pallas"),
+    }[path]
+
+    @jax.jit
+    def step(state: IVFState, queries: jax.Array):
+        return impl(
+            cfg, state, queries, nprobe=nprobe, k=k, score_fn=score_fn,
+            chain_budget=chain_budget,
+        )
+
+    return step

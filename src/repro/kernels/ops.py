@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs as traced jnp on the host, which validates semantics
+against ``ref.py``.  On TPU the same call sites compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ivf_scan import ivf_block_scan as _ivf_block_scan
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_decode_attention,
+)
+from repro.kernels.pq_adc import pq_adc as _pq_adc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ivf_block_scan(queries, pool, block_ids):
+    """[Q,D] x [P,T,D] x [C] -> [C,Q,T] squared-L2 scores."""
+    return _ivf_block_scan(queries, pool, block_ids, interpret=_interpret())
+
+
+def pq_adc(lut, codes, tile_n: int = 1024):
+    """[R,M,K] x [R,N,M] -> [R,N] ADC distances."""
+    return _pq_adc(lut, codes, tile_n=tile_n, interpret=_interpret())
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=None):
+    """Flash-decoding over a block-pool KV cache (see paged_attention.py)."""
+    return _paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths, scale=scale,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: paged decode attention over a block-pool KV cache.
+
+This is the paper's memory-block idea transplanted to LM serving (DESIGN.md
+§6): the KV cache grows token-by-token exactly like an IVF list grows
+vector-by-vector, so it lives in the same kind of central block pool with a
+per-sequence block table — appends are O(1) and allocation-free, and no
+cache copy ever happens on growth (vs. contiguous caches that must be
+re-allocated or pre-sized per sequence).
+
+Kernel shape: flash-decoding style streaming softmax over the sequence's
+blocks.  Grid (batch, kv_head, block); the block table and lengths arrive
+via scalar prefetch and drive the BlockSpec index maps (the same indirection
+as ``ivf_scan``).  GQA groups (H // KVH query heads) are scored together so
+the MXU contraction is [G, dh] x [dh, T].
+
+VMEM scratch carries the running (max, sum, acc) across the block dimension;
+the output is written on the last block step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    tables_ref,  # scalar prefetch [B, NB]
+    lengths_ref,  # scalar prefetch [B]
+    q_ref,  # [G, dh]
+    k_ref,  # [T, dh]
+    v_ref,  # [T, dh]
+    o_ref,  # [G, dh]
+    m_s,  # VMEM [G, 128] running max
+    l_s,  # VMEM [G, 128] running sum
+    acc_s,  # VMEM [G, dh] running numerator
+    *,
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[:].astype(jnp.float32)  # [G, dh]
+    k = k_ref[:].astype(jnp.float32)  # [T, dh]
+    v = v_ref[:].astype(jnp.float32)
+    t = k.shape[0]
+
+    logits = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+    )  # [G, T]
+    length = lengths_ref[b]
+    pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + j * t
+    mask = pos < length
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_s[:, 0:1]  # [G, 1]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)  # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)  # [G, 1]
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)  # [G, T]
+    l_new = l_s[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_s[...] = jnp.broadcast_to(m_new, m_s.shape)
+    l_s[...] = jnp.broadcast_to(l_new, l_s.shape)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = l_s[:, 0:1]
+        o_ref[...] = (acc_s[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,  # [B, H, dh]
+    k_pool: jax.Array,  # [P, T, KVH, dh]
+    v_pool: jax.Array,  # [P, T, KVH, dh]
+    block_tables: jax.Array,  # [B, NB] i32, -1 past end
+    lengths: jax.Array,  # [B] i32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:  # [B, H, dh]
+    b, h, dh = q.shape
+    p, t, kvh, dh2 = k_pool.shape
+    assert dh == dh2 and h % kvh == 0
+    g = h // kvh
+    nb = block_tables.shape[1]
+    if scale is None:
+        scale = float(dh) ** -0.5
+    safe_tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec((None, g, dh), lambda bi, hi, ji, tb, ln: (bi, hi, 0)),
+            pl.BlockSpec(
+                (None, t, None, dh),
+                lambda bi, hi, ji, tb, ln: (tb[bi, ji], 0, hi, 0),
+            ),
+            pl.BlockSpec(
+                (None, t, None, dh),
+                lambda bi, hi, ji, tb, ln: (tb[bi, ji], 0, hi, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, g, dh), lambda bi, hi, ji, tb, ln: (bi, hi, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    qr = q.reshape(b, kvh * g, dh)  # heads grouped by kv head
+    out = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh * g, dh), q.dtype),
+        interpret=interpret,
+    )(safe_tables, lengths, qr, k_pool, v_pool)
+    return out.reshape(b, h, dh)

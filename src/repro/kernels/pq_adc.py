@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: PQ asymmetric-distance (ADC) accumulation.
+
+GPU systems keep the per-query LUT in shared memory and gather per code
+byte.  TPU has no per-lane gather from VMEM, so the TPU-native form is a
+**one-hot MXU contraction**: for each subquantizer m, expand the code column
+to a one-hot `[T, K]` tile and contract with the LUT row `[K]` on the MXU.
+For K = 256 and M ≤ 64 this stays comfortably inside VMEM and turns a
+byte-gather (bad on TPU) into dense matmul work (what the MXU is for).
+
+Layout: one grid step handles one LUT row r (= one (query, probe) pair) and
+one tile of N candidate codes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KSUB = 256
+
+
+def _adc_kernel(lut_ref, codes_ref, out_ref):
+    """lut [M, K], codes [Tn, M] i32 -> out [Tn] f32 (one-hot MXU gather)."""
+    codes = codes_ref[:]  # [Tn, M] int32
+    tn, m = codes.shape
+    ksub = lut_ref.shape[-1]
+    lut = lut_ref[:]  # [M, K]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, ksub), 1)
+    acc = jnp.zeros((tn,), jnp.float32)
+    for j in range(m):  # static unroll over subquantizers
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.float32)  # [Tn, K]
+        acc = acc + jax.lax.dot_general(
+            onehot,
+            lut[j][:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+    out_ref[:] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def pq_adc(
+    lut: jax.Array,  # [R, M, K] f32
+    codes: jax.Array,  # [R, N, M] integer
+    *,
+    tile_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:  # [R, N]
+    r, m, k = lut.shape
+    r2, n, m2 = codes.shape
+    assert (r, m) == (r2, m2), (lut.shape, codes.shape)
+    codes = codes.astype(jnp.int32)
+    tile_n = min(tile_n, n)
+    if n % tile_n:
+        pad = tile_n - n % tile_n
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+    n_pad = codes.shape[1]
+
+    out = pl.pallas_call(
+        _adc_kernel,
+        grid=(r, n_pad // tile_n),
+        in_specs=[
+            pl.BlockSpec((None, m, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, tile_n, m), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n_pad), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[:, :n]

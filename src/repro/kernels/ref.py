@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth; kernel tests sweep shapes and
+dtypes and ``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_block_scan_ref(
+    queries: jax.Array,  # [Q, D]
+    pool: jax.Array,  # [P, T, D]
+    block_ids: jax.Array,  # [C] i32, -1 = hole (scores still computed vs block 0)
+) -> jax.Array:  # [C, Q, T] squared L2
+    safe = jnp.maximum(block_ids, 0)
+    blocks = pool[safe]  # [C, T, D]
+    qn = jnp.sum(queries * queries, axis=-1)  # [Q]
+    vn = jnp.sum(blocks * blocks, axis=-1)  # [C, T]
+    dots = jnp.einsum("qd,ctd->cqt", queries, blocks)
+    return qn[None, :, None] + vn[:, None, :] - 2.0 * dots
+
+
+def pq_adc_ref(
+    lut: jax.Array,  # [R, M, K] per-row ADC table
+    codes: jax.Array,  # [R, N, M] integer codes in [0, K)
+) -> jax.Array:  # [R, N] accumulated distances
+    idx = codes.astype(jnp.int32)
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],  # [R, 1, M, K]
+        idx[:, :, :, None],  # [R, N, M, 1]
+        axis=-1,
+    )[..., 0]
+    return jnp.sum(gathered, axis=-1)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # [B, H, dh]
+    k_pool: jax.Array,  # [P, T, KVH, dh]
+    v_pool: jax.Array,  # [P, T, KVH, dh]
+    block_tables: jax.Array,  # [B, NB] i32, -1 past end
+    lengths: jax.Array,  # [B] i32 tokens resident in cache
+    scale: float | None = None,
+) -> jax.Array:  # [B, H, dh]
+    b, h, dh = q.shape
+    p, t, kvh, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = h // kvh  # query heads per kv head (GQA group)
+    if scale is None:
+        scale = dh**-0.5
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pool[safe]  # [B, NB, T, KVH, dh]
+    v = v_pool[safe]
+    k = k.reshape(b, nb * t, kvh, dh)
+    v = v.reshape(b, nb * t, kvh, dh)
+    qg = q.reshape(b, kvh, g, dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * scale
+    pos = jnp.arange(nb * t)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows (length 0)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,29 @@
+"""Production mesh construction (assignment-mandated geometry).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is an
+outer data axis whose collectives ride DCI, while "data"/"model" stay on
+in-pod ICI.
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (data parallel), pod-outer."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_devices(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,156 @@
+"""Roofline analysis from compiled dry-run artifacts (assignment §Roofline).
+
+Three terms per (arch, shape, mesh), in seconds:
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+``cost_analysis`` counts whole-program FLOPs/bytes (all devices), so both
+numerators are divided by the device count; collective bytes are parsed
+from the compiled HLO (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute) and are per-device
+already (SPMD module is per-device).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+# TPU v5e hardware constants (assignment-provided)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array literal in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals (output operand sizes), from HLO."""
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match instruction lines: "%x = TYPE op-name(...)" / fusion-less
+        m = re.match(r"^[%\w.\-]+\s*=\s*([^=]+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = op.rstrip("0123456789.").rstrip("-")
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                out[c] += _shape_bytes(type_str)
+                counts[c] += 1
+                break
+    return {"bytes": dict(out), "counts": dict(counts)}
+
+
+def roofline_terms(record: dict) -> dict:
+    """record = one dryrun.py JSON line -> the three roofline terms."""
+    chips = record["n_devices"]
+    # cost_analysis runs on the SPMD-partitioned (per-device) module, so
+    # flops/bytes are already per-chip — equal to HLO_FLOPs/(chips) of the
+    # assignment formula.  (Verified: qwen3 train_4k reports 6.66e13/dev =
+    # 1.7e16 global / 256, matching 6*N*D + remat recompute.)
+    compute_s = record["flops"] / PEAK_FLOPS
+    memory_s = record["bytes_accessed"] / HBM_BW
+    coll_bytes = record.get(
+        "collective_bytes_corrected",
+        sum(record.get("collectives", {}).get("bytes", {}).values()),
+    )
+    collective_s = coll_bytes / ICI_BW  # HLO is per-device already
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_bytes": coll_bytes,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }
+    meta = record.get("meta", {})
+    if meta.get("n_params"):
+        n = meta["n_active"] if "n_active" in meta else meta["n_params"]
+        factor = 6 if meta.get("backward") else 2
+        model_flops = factor * n * meta["tokens"]  # global
+        out["model_flops"] = model_flops
+        hlo_global = record["flops"] * chips
+        out["useful_fraction"] = model_flops / hlo_global if hlo_global else 0.0
+        # roofline fraction: useful model FLOP/s achieved at the bound
+        out["roofline_fraction"] = (
+            model_flops / chips / PEAK_FLOPS / out["bound_s"]
+            if out["bound_s"] else 0.0
+        )
+    return out
+
+
+def summarize(path: str) -> list[dict]:
+    # keep the LAST record per (arch, shape, mesh): reruns supersede
+    by_key: dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            by_key[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    rows = [
+        {**rec, **roofline_terms(rec)}
+        for rec in sorted(
+            by_key.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"])
+        )
+    ]
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (
+        f"{'arch':<26}{'shape':<15}{'mesh':<9}{'compute_s':>11}"
+        f"{'memory_s':>11}{'collect_s':>11}{'dominant':>11}{'useful%':>9}{'roof%':>7}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        uf = r.get("useful_fraction")
+        rf = r.get("roofline_fraction")
+        lines.append(
+            f"{r['arch']:<26}{r['shape']:<15}{r['mesh']:<9}"
+            f"{r['compute_s']:>11.2e}{r['memory_s']:>11.2e}"
+            f"{r['collective_s']:>11.2e}{r['dominant']:>11}"
+            f"{(f'{uf*100:.1f}' if uf is not None else '-'):>9}"
+            f"{(f'{rf*100:.1f}' if rf is not None else '-'):>7}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = summarize(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json")
+    print(format_table(rows))

@@ -1,0 +1,68 @@
+"""ANNS serving launcher: the paper's system end-to-end.
+
+Builds an index per the paper's config (scaled for this container), starts
+the multi-stream runtime, and serves a mixed Poisson workload, printing the
+latency statistics that correspond to the paper's Fig. 3 cells.
+
+    PYTHONPATH=src python -m repro.launch.serve --index ivfflat_sift1m \
+        --scale 0.02 --qps-search 200 --qps-insert 50 --duration 5
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.anns import ivfflat_sift1m, ivfpq_dssm40m
+from repro.core.ivf import IVFIndex
+from repro.core.scheduler import RuntimeConfig, ServingRuntime
+from repro.data.synthetic import dssm_like, sift_like
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--index", default="ivfflat_sift1m",
+                    choices=["ivfflat_sift1m", "ivfpq_dssm40m"])
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--mode", default="parallel",
+                    choices=["serial", "parallel", "fused"])
+    ap.add_argument("--qps-search", type=float, default=200)
+    ap.add_argument("--qps-insert", type=float, default=50)
+    ap.add_argument("--duration", type=float, default=5.0)
+    args = ap.parse_args()
+
+    if args.index == "ivfflat_sift1m":
+        cfg = ivfflat_sift1m(args.scale)
+        corpus = sift_like(int(1_000_000 * args.scale), cfg.dim, seed=0)
+    else:
+        cfg = ivfpq_dssm40m(args.scale)
+        corpus = dssm_like(int(40_000_000 * args.scale), cfg.dim, seed=0)
+
+    print(f"[serve] building {args.index} at scale {args.scale}: "
+          f"{len(corpus)} vectors, {cfg.n_clusters} lists, T_m={cfg.block_size}")
+    index = IVFIndex(cfg)
+    index.train(corpus)
+    for off in range(0, len(corpus), 65536):
+        index.add(corpus[off : off + 65536])
+
+    rt = ServingRuntime(
+        index, RuntimeConfig(mode=args.mode, nprobe=cfg.nprobe, k=cfg.k,
+                             flush_min=32, flush_interval=0.2),
+    )
+    try:
+        from examples.online_serving import drive
+
+        rejected = drive(rt, corpus, qps_search=args.qps_search,
+                         qps_insert=args.qps_insert, duration=args.duration)
+        s = rt.stats()
+        print(f"[serve] mode={args.mode}")
+        print(f"  search {s['search'].row()}")
+        print(f"  insert {s['insert'].row()}")
+        print(f"  rejected={rejected}  corpus={rt.index.ntotal}")
+    finally:
+        rt.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Sharding rules: logical names -> PartitionSpecs per mesh, per family.
+
+Two surfaces:
+
+* ``make_shard_fn(mesh)`` — the activation-constraint callback threaded
+  through the models (``shard(x, logical_name)``); applies
+  ``with_sharding_constraint`` under the mesh.
+* ``lm_param_specs`` / ``rec_param_specs`` / ``gnn_param_specs`` — pytrees
+  of PartitionSpec matching the init functions' outputs, used as
+  ``in_shardings`` for the dry-run and the real launchers.
+
+Layout summary (DESIGN.md §7):
+  LM      — batch over (pod, data); TP over "model" (qkv/o, ffn, vocab);
+            FSDP over "data" for weight matrices (giant configs); experts
+            over "model" (EP); decode KV cache shards d_head over "model".
+  RecSys  — embedding tables row-sharded over every mesh axis; dense
+            towers replicated; batch over (pod, data).
+  GNN     — node/edge arrays over (pod, data); channels over "model";
+            weights replicated (they are tiny).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+# ------------------------------------------------------------ shard_fn ----
+
+
+def make_shard_fn(mesh, serving: bool = False):
+    bd = batch_axes(mesh)
+
+    rules = {
+        "act_embed": P(bd, None, None),  # [B, S, D]
+        "act_heads": P(bd, None, "model", None),  # [B, S, H, dh]
+        "act_kv_heads": P(bd, None, None, None),  # kv heads < model size
+        "act_ff": P(bd, None, "model"),  # [B, S, F]
+        "act_vocab": P(bd, None, "model"),  # [B, S, V]
+        # [E, C, D]: experts over "model" (EP) AND capacity over the batch
+        # axes — without the C sharding, GSPMD replicates every expert's
+        # compute across the data axis (measured 16x FLOP waste on kimi-k2;
+        # EXPERIMENTS.md §Perf iteration 1).
+        "moe_experts": P("model", bd, None),
+        "act_nodes": P(bd, None, "model"),  # [N, S, C]
+        "act_embed_bag": P(bd, None, None),  # [B, F, D]
+    }
+    if serving:
+        # align dispatch buffers with the stationary expert-bank layout
+        # (E over "data", features over "model") — a mismatched E axis
+        # makes GSPMD regather the 2 TB expert weights per step
+        # (EXPERIMENTS.md §Perf cell 2, MoE iteration).
+        rules["moe_experts"] = P("data", None, "model")
+
+    def shard(x, name: str):
+        spec = rules.get(name)
+        if spec is None:
+            return x
+        # drop axes the array doesn't have (e.g. 3D rule on 4D tensor)
+        if len(spec) > x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# ------------------------------------------------------------ LM params ---
+
+
+def _div(n: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0
+
+
+def lm_param_specs(cfg, mesh, fsdp: bool | None = None, serving: bool = False) -> dict:
+    """PartitionSpec pytree matching init_lm(cfg)'s output.
+
+    ``serving=True`` keeps weights *stationary*: pure TP for dense tensors
+    and experts sharded over ("data", "model") for MoE — FSDP's per-step
+    weight all-gather is catastrophic at decode batch sizes (§Perf cell 2:
+    2 TB of gathers per decode step on kimi-k2 before this split).
+    """
+    if fsdp is None:
+        fsdp = (not serving) and cfg.n_params > 20_000_000_000
+    d_axis = "data" if fsdp else None
+
+    attn = {
+        "wq": P(None, d_axis, "model"),
+        "wk": P(None, d_axis, "model"),
+        "wv": P(None, d_axis, "model"),
+        "wo": P(None, "model", d_axis),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = P(None, "model")
+        attn["bk"] = P(None, "model")
+        attn["bv"] = P(None, "model")
+    if cfg.qk_norm:
+        attn["q_scale"] = P(None, None)
+        attn["k_scale"] = P(None, None)
+    layers: dict[str, Any] = {
+        "attn": attn,
+        "attn_norm": P(None, None),
+        "mlp_norm": P(None, None),
+    }
+    if cfg.moe:
+        if serving:
+            # stationary expert bank: E over "data", inner feature over
+            # "model" -> 1/256 of the 1T params resident per device, zero
+            # per-step weight gathers (contractions reduce-scatter tiny
+            # activation partials instead).
+            layers["moe"] = {
+                "router": P(None, None, "model"),
+                "w_gate": P(None, "data", "model", None),
+                "w_up": P(None, "data", "model", None),
+                "w_down": P(None, "data", "model", None),
+            }
+        else:
+            layers["moe"] = {
+                "router": P(None, None, "model"),
+                "w_gate": P(None, "model", d_axis, None),
+                "w_up": P(None, "model", d_axis, None),
+                "w_down": P(None, "model", None, d_axis),
+            }
+    else:
+        layers["mlp"] = {
+            "w_gate": P(None, d_axis, "model"),
+            "w_up": P(None, d_axis, "model"),
+            "w_down": P(None, "model", d_axis),
+        }
+    return {
+        "embed": P("model", None),
+        "layers": layers,
+        "final_norm": P(None),
+        "lm_head": P(None, "model"),
+    }
+
+
+def lm_batch_specs(mesh) -> dict:
+    bd = batch_axes(mesh)
+    return {"tokens": P(bd, None), "labels": P(bd, None)}
+
+
+def kv_cache_spec(mesh) -> dict:
+    bd = batch_axes(mesh)
+    # [L, B, S, KV, dh] — SEQUENCE over "model" (flash-decoding split-S).
+    # History (§Perf iteration 2): d_head-sharding made every decode layer
+    # all-reduce the full [B, KV, G, S] logits (~34 GB/step on llama3
+    # decode_32k); with S-sharding only the softmax partials and the
+    # [B, KV, G, dh] partial outputs cross the ICI (~600x fewer bytes).
+    # kv heads (8) cannot shard a 16-way axis, so heads stay local.
+    return {
+        "k": P(None, bd, "model", None, None),
+        "v": P(None, bd, "model", None, None),
+    }
+
+
+# --------------------------------------------------------- RecSys params --
+
+
+def rec_param_specs(cfg, mesh) -> dict:
+    every = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    table = {"table": P(every, None)}
+
+    def repl(tree):
+        return jax.tree.map(lambda _: P(), tree)
+
+    import jax.numpy as jnp
+
+    from repro.models.recsys.models import init_rec
+
+    shapes = jax.eval_shape(
+        lambda k: init_rec(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    specs = jax.tree.map(lambda _: P(), shapes)
+    specs["embed"] = table
+    if "wide" in specs:
+        specs["wide"] = {"table": P(every, None)}
+    return specs
+
+
+def rec_batch_specs(cfg, mesh, with_history: bool) -> dict:
+    bd = batch_axes(mesh)
+    out = {"dense": P(bd, None), "sparse": P(bd, None), "label": P(bd)}
+    if with_history:
+        out["history"] = P(bd, None)
+    return out
+
+
+# ------------------------------------------------------------ GNN params --
+
+
+def gnn_param_specs(cfg, mesh) -> dict:
+    import jax.numpy as jnp
+
+    from repro.models.gnn.equiformer_v2 import init_equiformer
+
+    shapes = jax.eval_shape(
+        lambda k: init_equiformer(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    return jax.tree.map(lambda _: P(), shapes)  # weights are small: replicate
+
+
+def gnn_batch_specs(mesh) -> dict:
+    bd = batch_axes(mesh)
+    return {
+        "node_feat": P(bd, None),
+        "pos": P(bd, None),
+        "edge_src": P(bd),
+        "edge_dst": P(bd),
+        "label": P(bd),
+    }
+
+
+# ------------------------------------------------------ optimizer states --
+
+
+def opt_state_specs(opt_kind: str, param_specs, param_shapes):
+    """Specs for the optimizer state pytree, derived from param specs."""
+    if opt_kind == "adamw":
+        return {
+            "mu": param_specs,
+            "nu": param_specs,
+            "step": P(),
+        }
+    if opt_kind == "adafactor":
+        leaves_spec = jax.tree.leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        leaves_shape = jax.tree.leaves(param_shapes)
+        v = []
+        for spec, shp in zip(leaves_spec, leaves_shape):
+            t = tuple(spec) + (None,) * (len(shp.shape) - len(tuple(spec)))
+            if len(shp.shape) >= 2 and shp.shape[-1] > 1 and shp.shape[-2] > 1:
+                v.append({"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))})
+            else:
+                v.append({"v": P(*t)})
+        return {"v": v, "step": P()}
+    if opt_kind == "adam8bit":
+        leaves_spec = jax.tree.leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        # quantised blocks are flat [n_blocks, block]; leave unspecified
+        q = [
+            {"mu_q": P(), "mu_s": P(), "nu_q": P(), "nu_lo": P(), "nu_hi": P()}
+            for _ in leaves_spec
+        ]
+        return {"q": q, "step": P()}
+    raise ValueError(opt_kind)

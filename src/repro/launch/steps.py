@@ -1,0 +1,395 @@
+"""Cell builders: (arch x input-shape x mesh) -> jit-able step + specs.
+
+``build_cell`` returns everything the dry-run needs:
+  fn              — the step function
+  args            — ShapeDtypeStruct pytree (NO device allocation)
+  in_shardings    — NamedSharding pytree (prefix) for jit
+  donate_argnums  — donated state positions
+  meta            — bookkeeping for the roofline (kind, token counts, ...)
+
+The same builders back the real launchers (train.py / serve.py): swap
+ShapeDtypeStructs for real arrays and the jitted step is identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.launch.mesh import batch_axes
+from repro.launch import shardings as sh
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple
+    meta: dict
+
+
+# ---------------------------------------------------------------- LM -----
+
+
+def _lm_opt_kind(cfg) -> str:
+    # giant / MoE configs default to Adafactor (DESIGN.md §7)
+    return "adafactor" if (cfg.moe or cfg.n_params > 150e9) else "adamw"
+
+
+def _build_lm(
+    spec: ArchSpec, shape_name: str, mesh, cfg_override=None
+) -> Cell:
+    from repro.models.transformer import (
+        decode_step,
+        init_kv_cache,
+        init_lm,
+        lm_loss,
+        prefill,
+    )
+
+    cfg = cfg_override or spec.config
+    shape = spec.shapes[shape_name]
+    serving = shape["kind"] in ("prefill", "decode")
+    shard = sh.make_shard_fn(mesh, serving=serving)
+    bd = batch_axes(mesh)
+    b, s = shape["global_batch"], shape["seq_len"]
+
+    param_shapes = jax.eval_shape(lambda k: init_lm(k, cfg), KEY)
+    pspecs = sh.lm_param_specs(cfg, mesh, serving=serving)
+
+    if shape["kind"] == "train":
+        opt_kind = _lm_opt_kind(cfg)
+        opt_init, opt_update = make_optimizer(OptConfig(kind=opt_kind))
+        opt_shapes = jax.eval_shape(opt_init, param_shapes)
+        ospecs = sh.opt_state_specs(opt_kind, pspecs, param_shapes)
+
+        def train_step(params, opt, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, batch["tokens"], batch["labels"], shard),
+                has_aux=True,
+            )(params)
+            params, opt = opt_update(grads, opt, params)
+            return params, opt, {"loss": loss, **m}
+
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        return Cell(
+            spec.arch_id, shape_name, "train", train_step,
+            (param_shapes, opt_shapes, batch_shapes),
+            (_named(mesh, pspecs), _named(mesh, ospecs),
+             _named(mesh, sh.lm_batch_specs(mesh))),
+            (0, 1),
+            {"tokens": b * s, "n_params": cfg.n_params,
+             "n_active": cfg.n_active_params, "backward": True},
+        )
+
+    cache_shapes = jax.eval_shape(
+        lambda: init_kv_cache(cfg, b, s)
+    )
+    cspec = sh.kv_cache_spec(mesh)
+
+    if shape["kind"] == "prefill":
+        def prefill_step(params, cache, tokens):
+            return prefill(params, cfg, tokens, cache, shard)
+
+        return Cell(
+            spec.arch_id, shape_name, "prefill", prefill_step,
+            (param_shapes, cache_shapes,
+             jax.ShapeDtypeStruct((b, s), jnp.int32)),
+            (_named(mesh, pspecs), _named(mesh, cspec),
+             NamedSharding(mesh, P(bd, None))),
+            (1,),
+            {"tokens": b * s, "n_params": cfg.n_params,
+             "n_active": cfg.n_active_params, "backward": False},
+        )
+
+    if shape["kind"] == "decode":
+        def dec_step(params, cache, token, cache_len):
+            return decode_step(params, cfg, token, cache, cache_len, shard)
+
+        return Cell(
+            spec.arch_id, shape_name, "decode", dec_step,
+            (param_shapes, cache_shapes,
+             jax.ShapeDtypeStruct((b,), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32)),
+            (_named(mesh, pspecs), _named(mesh, cspec),
+             NamedSharding(mesh, P(bd)), NamedSharding(mesh, P())),
+            (1,),
+            {"tokens": b, "n_params": cfg.n_params,
+             "n_active": cfg.n_active_params, "backward": False,
+             "kv_len": s},
+        )
+    raise ValueError(shape["kind"])
+
+
+# --------------------------------------------------------------- GNN -----
+
+
+def _build_gnn(
+    spec: ArchSpec, shape_name: str, mesh, cfg_override=None
+) -> Cell:
+    from repro.models.gnn.equiformer_v2 import equiformer_loss, init_equiformer
+
+    shape = spec.shapes[shape_name]
+    bd = batch_axes(mesh)
+    shard = sh.make_shard_fn(mesh)
+
+    def pad32(v: int) -> int:
+        # node/edge arrays are jit *inputs* sharded over (pod, data) = up to
+        # 32 ways; input shardings require exact divisibility (internal
+        # constraints pad, inputs don't), so the cell shapes round up and
+        # the loss masks sentinel rows.
+        return -(-v // 32) * 32
+
+    base_cfg = cfg_override or spec.config
+    if shape["kind"] == "gnn_batched":
+        n = pad32(shape["batch"] * shape["n_nodes"])
+        e = pad32(shape["batch"] * shape["n_edges"])
+        cfg = dataclasses.replace(
+            base_cfg, d_feat_in=shape["d_feat"], readout="graph", n_out=1
+        )
+        batch_shapes = {
+            "node_feat": jax.ShapeDtypeStruct((n, shape["d_feat"]), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((n, 3), jnp.float32),
+            "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "graph_ids": jax.ShapeDtypeStruct((n,), jnp.int32),
+            "target": jax.ShapeDtypeStruct((shape["batch"],), jnp.float32),
+        }
+        bspecs = {
+            "node_feat": P(bd, None), "pos": P(bd, None),
+            "edge_src": P(bd), "edge_dst": P(bd),
+            "graph_ids": P(bd), "target": P(bd),
+        }
+        extra = {"n_graphs": shape["batch"]}
+        n_tokens = n
+    else:
+        if shape["kind"] == "gnn_sampled":
+            n, e = pad32(shape["max_nodes"]), pad32(shape["max_edges"])
+        else:
+            n, e = pad32(shape["n_nodes"]), pad32(shape["n_edges"])
+        cfg = dataclasses.replace(base_cfg, d_feat_in=shape["d_feat"])
+        batch_shapes = {
+            "node_feat": jax.ShapeDtypeStruct((n, shape["d_feat"]), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((n, 3), jnp.float32),
+            "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "label": jax.ShapeDtypeStruct((n,), jnp.int32),
+        }
+        bspecs = sh.gnn_batch_specs(mesh)
+        extra = {}
+        n_tokens = n
+
+    param_shapes = jax.eval_shape(lambda k: init_equiformer(k, cfg), KEY)
+    pspecs = sh.gnn_param_specs(cfg, mesh)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adamw"))
+    opt_shapes = jax.eval_shape(opt_init, param_shapes)
+    ospecs = sh.opt_state_specs("adamw", pspecs, param_shapes)
+
+    def train_step(params, opt, batch):
+        full = dict(batch, **extra)
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: equiformer_loss(p, cfg, full, shard), has_aux=True
+        )(params)
+        params, opt = opt_update(grads, opt, params)
+        return params, opt, {"loss": loss}
+
+    return Cell(
+        spec.arch_id, shape_name, "train", train_step,
+        (param_shapes, opt_shapes, batch_shapes),
+        (_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs)),
+        (0, 1),
+        {"tokens": n_tokens, "n_edges": e, "backward": True,
+         "n_chunks": -(-e // cfg.edge_chunk)},
+    )
+
+
+# ------------------------------------------------------------- RecSys ----
+
+
+def _build_rec(
+    spec: ArchSpec, shape_name: str, mesh, cfg_override=None
+) -> Cell:
+    from repro.models.recsys.models import (
+        apply_rec,
+        init_rec,
+        rec_loss,
+        score_candidates,
+    )
+
+    cfg = cfg_override or spec.config
+    if cfg.kind == "dien":
+        # unroll the GRU so cost_analysis counts all seq_len steps
+        cfg = dataclasses.replace(cfg, unroll=True)
+    shape = spec.shapes[shape_name]
+    bd = batch_axes(mesh)
+    shard = sh.make_shard_fn(mesh)
+    b = shape["batch"]
+    with_hist = cfg.kind == "dien"
+
+    param_shapes = jax.eval_shape(lambda k: init_rec(k, cfg), KEY)
+    pspecs = sh.rec_param_specs(cfg, mesh)
+
+    def batch_struct(bsz):
+        out = {
+            "dense": jax.ShapeDtypeStruct((bsz, max(cfg.n_dense, 1)), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((bsz, cfg.n_sparse), jnp.int32),
+            "label": jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        }
+        if with_hist:
+            out["history"] = jax.ShapeDtypeStruct((bsz, cfg.seq_len), jnp.int32)
+        return out
+
+    if shape["kind"] == "rec_train":
+        opt_init, opt_update = make_optimizer(OptConfig(kind="adamw"))
+        opt_shapes = jax.eval_shape(opt_init, param_shapes)
+        ospecs = sh.opt_state_specs("adamw", pspecs, param_shapes)
+
+        def train_step(params, opt, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: rec_loss(p, cfg, batch, shard), has_aux=True
+            )(params)
+            params, opt = opt_update(grads, opt, params)
+            return params, opt, {"loss": loss}
+
+        return Cell(
+            spec.arch_id, shape_name, "train", train_step,
+            (param_shapes, opt_shapes, batch_struct(b)),
+            (_named(mesh, pspecs), _named(mesh, ospecs),
+             _named(mesh, sh.rec_batch_specs(cfg, mesh, with_hist))),
+            (0, 1),
+            {"tokens": b, "backward": True},
+        )
+
+    if shape["kind"] == "rec_serve":
+        def serve_step(params, batch):
+            return apply_rec(params, cfg, batch, shard)
+
+        bs = batch_struct(b)
+        bs.pop("label")
+        specs = sh.rec_batch_specs(cfg, mesh, with_hist)
+        specs.pop("label")
+        return Cell(
+            spec.arch_id, shape_name, "serve", serve_step,
+            (param_shapes, bs),
+            (_named(mesh, pspecs), _named(mesh, specs)),
+            (),
+            {"tokens": b, "backward": False},
+        )
+
+    if shape["kind"] == "rec_retrieval":
+        # pad the candidate corpus to a 512 multiple (shardable over every
+        # axis); the b=1 query is replicated (cannot shard batch=1).
+        nc = -(-shape["n_candidates"] // 512) * 512
+        every = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        k_top = 100
+
+        from repro.models.recsys.embedding import lookup as emb_lookup
+
+        def retrieval_step(params, batch, cand):
+            # §Perf iteration 3: per-shard top-k inside shard_map, then
+            # all-gather only k hits per shard (devs*k*8B) instead of
+            # letting GSPMD all-gather the full [1, 1M] score row.  This is
+            # the ANNS global top-k pattern of DESIGN.md §7.
+            emb = emb_lookup(params["embed"], cfg.spec, batch["sparse"], shard)
+            query = emb.mean(axis=1)  # [1, D] replicated
+
+            def scorer(q, c):
+                s = (q @ c.T)[0]  # local scores [nc_local]
+                d, i = jax.lax.top_k(s, k_top)  # local top-k
+                # global candidate index = shard offset + local index
+                offset = jnp.int32(0)
+                mul = 1
+                for ax in reversed(every):
+                    offset = offset + jax.lax.axis_index(ax) * mul
+                    mul *= mesh.shape[ax]
+                i = i + offset * c.shape[0]
+                d_all = jax.lax.all_gather(d, every, tiled=True)
+                i_all = jax.lax.all_gather(i, every, tiled=True)
+                dg, sel = jax.lax.top_k(d_all, k_top)
+                return dg[None], jnp.take(i_all, sel)[None]
+
+            return jax.shard_map(
+                scorer,
+                mesh=mesh,
+                in_specs=(P(), P(every, None)),
+                out_specs=(P(), P()),
+                check_vma=False,  # replication via all_gather(tiled)+top_k
+            )(query, cand)
+
+        bs = batch_struct(b)
+        bs.pop("label")
+        repl_specs = {k: P() for k in bs}
+        cand_struct = jax.ShapeDtypeStruct((nc, cfg.embed_dim), jnp.float32)
+        return Cell(
+            spec.arch_id, shape_name, "retrieval", retrieval_step,
+            (param_shapes, bs, cand_struct),
+            (_named(mesh, pspecs), _named(mesh, repl_specs),
+             NamedSharding(mesh, P(every, None))),
+            (),
+            {"tokens": b, "candidates": nc, "backward": False},
+        )
+    raise ValueError(shape["kind"])
+
+
+def build_cell(
+    spec: ArchSpec, shape_name: str, mesh, cfg_override=None
+) -> Cell:
+    return {
+        "lm": _build_lm,
+        "gnn": _build_gnn,
+        "recsys": _build_rec,
+    }[spec.family](spec, shape_name, mesh, cfg_override)
+
+
+def calibration_overrides(spec: ArchSpec, shape_name: str) -> list:
+    """Cheap compile variants for exact FLOP accounting.
+
+    XLA cost analysis counts while-loop bodies once, so the layer scan
+    under-counts by ~n_layers.  Per family:
+    * lm  — two *unrolled* variants with L=1 and L=2 layers: the delta is
+            the exact per-layer cost; corrected = v1 + (v2-v1)*(L-1).
+    * gnn — one variant with edge_chunk = n_edges (single chunk, exact).
+            Only needed when the main cell has >1 chunk (ogb_products).
+    * rec — none (dien GRU is unrolled in the main cell).
+    Returns [(tag, cfg_override, combine_kind)].
+    """
+    if spec.family == "lm":
+        c1 = dataclasses.replace(spec.config, n_layers=1, unroll=True, remat=False)
+        c2 = dataclasses.replace(spec.config, n_layers=2, unroll=True, remat=False)
+        return [("L1", c1, "lm_extrapolate"), ("L2", c2, "lm_extrapolate")]
+    if spec.family == "gnn":
+        shape = spec.shapes[shape_name]
+        e = (
+            shape["batch"] * shape["n_edges"]
+            if shape["kind"] == "gnn_batched"
+            else shape.get("max_edges", shape["n_edges"])
+        )
+        if e > spec.config.edge_chunk:
+            c = dataclasses.replace(spec.config, edge_chunk=e)
+            return [("onechunk", c, "gnn_exact")]
+    return []

@@ -1,0 +1,348 @@
+"""EquiformerV2-style equivariant graph attention with eSCN SO(2) convs.
+
+[arXiv:2306.12059] structure, re-derived for JAX/TPU:
+
+* Node features are real-SH irreps ``[N, S, C]`` with ``S = (l_max+1)^2``.
+* Each edge rotates its endpoint features into the edge-aligned frame
+  (Wigner blocks from ``wigner.py``), restricts to ``|m| <= m_max`` columns,
+  applies per-m complex linear maps (the eSCN O(L^6)->O(L^3) reduction),
+  modulates by a radial basis, and attends with scalar-derived logits.
+* Message passing is ``jax.ops.segment_sum`` over an edge index — JAX has no
+  sparse SpMM; the scatter IS the system (assignment note).  Edges are
+  processed in fixed-size chunks under ``lax.scan`` so the 62M-edge
+  ogb_products cell has bounded peak memory; attention normalisation
+  accumulates (numerator, denominator) across chunks, giving exact softmax
+  with bounded logits (5*tanh(z/5)) and no second pass.
+* Equivariance is property-tested (tests/test_gnn.py): invariant outputs are
+  rotation-stable and l=1 features co-rotate.
+
+The paper's ANNS technique is inapplicable here (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.wigner import edge_wigner
+from repro.models.layers import Shard, no_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str
+    n_layers: int = 12
+    channels: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_feat_in: int = 16
+    n_radial: int = 8
+    edge_chunk: int = 4096
+    readout: str = "node"  # node classification | "graph" energy
+    n_out: int = 1
+    dtype: Any = jnp.float32
+
+    @property
+    def s_full(self) -> int:
+        return (self.l_max + 1) ** 2
+
+    def m_indices(self) -> np.ndarray:
+        """Flattened irrep indices with |m| <= m_max (edge-frame columns)."""
+        idx = []
+        for l in range(self.l_max + 1):
+            for m in range(-min(l, self.m_max), min(l, self.m_max) + 1):
+                idx.append(l * l + m + l)
+        return np.asarray(idx, np.int32)
+
+    def m_groups(self):
+        """For each m: (rows_pos, rows_neg) flattened indices per l >= m."""
+        groups = []
+        for m in range(0, self.m_max + 1):
+            pos = [l * l + m + l for l in range(max(m, 0), self.l_max + 1) if m <= l]
+            neg = [l * l - m + l for l in range(max(m, 0), self.l_max + 1) if m <= l]
+            groups.append((np.asarray(pos, np.int32), np.asarray(neg, np.int32)))
+        return groups
+
+
+# ------------------------------------------------------------------ init --
+
+
+def _linear(key, din, dout, dtype):
+    return (jax.random.normal(key, (din, dout)) * din**-0.5).astype(dtype)
+
+
+def init_equiformer(key, cfg: EquiformerConfig) -> dict:
+    c, dt = cfg.channels, cfg.dtype
+    keys = jax.random.split(key, 8 + cfg.n_layers)
+    groups = cfg.m_groups()
+
+    def layer_init(k):
+        ks = jax.random.split(k, 4 + 2 * len(groups))
+        p = {
+            "norm_scale": jnp.ones((cfg.l_max + 1, c), dt),
+            "att_w1": _linear(ks[0], c, c, dt),
+            "att_w2": _linear(ks[1], c, cfg.n_heads, dt),
+            "radial_w": _linear(ks[2], cfg.n_radial, c, dt),
+            "ffn_gate": _linear(ks[3], c, cfg.l_max * c, dt),
+            "ffn_mix": jax.vmap(lambda kk: _linear(kk, c, c, dt))(
+                jax.random.split(ks[4], cfg.l_max + 1)
+            ),
+        }
+        for mi, (pos, neg) in enumerate(groups):
+            n = len(pos)
+            kr, ki = ks[5 + 2 * mi], ks[6 + 2 * mi]
+            p[f"so2_{mi}_r"] = _linear(kr, 2 * n * c, n * c, dt)
+            if mi > 0:
+                p[f"so2_{mi}_i"] = _linear(ki, 2 * n * c, n * c, dt)
+        return p
+
+    layers = jax.vmap(layer_init)(jax.random.split(keys[0], cfg.n_layers))
+    head_sizes = [c, c, cfg.n_out]
+    kh = jax.random.split(keys[2], 2)
+    return {
+        "embed_w": _linear(keys[1], cfg.d_feat_in, c, dt),
+        "layers": layers,
+        "head_w1": _linear(kh[0], c, c, dt),
+        "head_w2": _linear(kh[1], c, cfg.n_out, dt),
+    }
+
+
+# --------------------------------------------------------------- helpers --
+
+
+def _irrep_norm(x: jax.Array, scale: jax.Array, l_max: int) -> jax.Array:
+    """Separable norm: per-l RMS over (m, channel), learnable per-l scale."""
+    outs = []
+    for l in range(l_max + 1):
+        blk = x[:, l * l : (l + 1) * (l + 1)]
+        rms = jnp.sqrt(jnp.mean(blk.astype(jnp.float32) ** 2, axis=(1, 2), keepdims=True) + 1e-6)
+        outs.append((blk / rms.astype(blk.dtype)) * scale[l])
+    return jnp.concatenate(outs, axis=1)
+
+
+def _apply_wigner(d_blocks, x, l_max: int, transpose=False):
+    """Block-diagonal rotate: x [E, S, C] by per-l [E, dl, dl]."""
+    outs = []
+    for l in range(l_max + 1):
+        blk = x[:, l * l : (l + 1) * (l + 1)]
+        d = d_blocks[l]
+        eq = "eba,ebc->eac" if transpose else "eab,ebc->eac"
+        outs.append(jnp.einsum(eq, d, blk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _so2_conv(p, cfg: EquiformerConfig, h: jax.Array) -> jax.Array:
+    """Per-m complex linear mixing in the edge frame.
+
+    h: [E, S, 2C] (concat of rotated source/target features).
+    Returns [E, S, C] with only |m| <= m_max rows populated.
+    """
+    e = h.shape[0]
+    c = cfg.channels
+    out = jnp.zeros((e, cfg.s_full, c), h.dtype)
+    for mi, (pos, neg) in enumerate(cfg.m_groups()):
+        n = len(pos)
+        if mi == 0:
+            f = h[:, pos].reshape(e, -1)  # [E, n*2C]
+            y = f @ p["so2_0_r"]
+            out = out.at[:, pos].set(y.reshape(e, n, c))
+        else:
+            fr = h[:, pos].reshape(e, -1)
+            fi = h[:, neg].reshape(e, -1)
+            wr, wi = p[f"so2_{mi}_r"], p[f"so2_{mi}_i"]
+            yr = fr @ wr - fi @ wi
+            yi = fr @ wi + fi @ wr
+            out = out.at[:, pos].set(yr.reshape(e, n, c))
+            out = out.at[:, neg].set(yi.reshape(e, n, c))
+    return out
+
+
+def _radial_basis(dist: jax.Array, n_radial: int, r_max: float = 6.0):
+    mu = jnp.linspace(0.0, r_max, n_radial)
+    gamma = n_radial / r_max
+    return jnp.exp(-gamma * (dist[:, None] - mu[None, :]) ** 2)
+
+
+# --------------------------------------------------------------- forward --
+
+
+def _chunk_contribution(lp, cfg: EquiformerConfig, xn, pos, src, dst, n):
+    """(num, den) contribution of one edge chunk (the paper-structure core)."""
+    s, c = xn.shape[1:]
+    heads = cfg.n_heads
+    ch = c // heads
+    vec = pos[jnp.minimum(dst, n - 1)] - pos[src]  # [e, 3]
+    d_blocks = edge_wigner(cfg.l_max, vec)
+    h_src = _apply_wigner(d_blocks, xn[src], cfg.l_max)
+    h_dst = _apply_wigner(d_blocks, xn[jnp.minimum(dst, n - 1)], cfg.l_max)
+    h = jnp.concatenate([h_src, h_dst], axis=-1)  # [e, S, 2C]
+    msg = _so2_conv(lp, cfg, h)  # [e, S, C]
+    dist = jnp.linalg.norm(vec, axis=-1)
+    rbf = _radial_basis(dist, cfg.n_radial)
+    msg = msg * (rbf @ lp["radial_w"])[:, None, :]
+    # attention logits from the invariant (l=0) row
+    inv = jax.nn.silu(msg[:, 0] @ lp["att_w1"]) @ lp["att_w2"]  # [e, H]
+    logits = 5.0 * jnp.tanh(inv / 5.0)  # bounded: exact softmax w/o max pass
+    alpha = jnp.exp(logits)  # [e, H]
+    # zero-length edges (self-loops / padding) have no well-defined frame
+    # — their messages are frame-dependent, so they get zero weight.
+    alpha = alpha * (dist > 1e-8)[:, None]
+    v_world = _apply_wigner(d_blocks, msg, cfg.l_max, transpose=True)
+    v_heads = v_world.reshape(-1, s, heads, ch)
+    weighted = v_heads * alpha[:, None, :, None]
+    num = jax.ops.segment_sum(
+        weighted.reshape(-1, s, c), dst, num_segments=n + 1
+    )
+    den = jax.ops.segment_sum(alpha, dst, num_segments=n + 1)
+    return num, den
+
+
+def _attention_layer(
+    lp, cfg: EquiformerConfig, x, pos, edge_src, edge_dst, shard: Shard
+):
+    """One eSCN graph-attention block; edges processed in chunks.
+
+    The chunk scan carries only the (num, den) accumulators, and a
+    custom_vjp recomputes each chunk in the backward pass — without it,
+    scan-AD would checkpoint the [N, S, C] accumulator *per chunk step*
+    (236 copies x 61 GB for the ogb_products cell).  This is the memory
+    trick that makes full-graph training of the 62M-edge cell feasible.
+    """
+    n, s, c = x.shape
+    heads = cfg.n_heads
+    xn = _irrep_norm(x, lp["norm_scale"], cfg.l_max)
+
+    ne = edge_src.shape[0]
+    chunk = min(cfg.edge_chunk, ne)
+    n_chunks = -(-ne // chunk)
+    pad = n_chunks * chunk - ne
+    # pad edges: src 0 -> dst n (dropped segment), zero-length (zero weight)
+    esrc = jnp.concatenate([edge_src, jnp.zeros((pad,), edge_src.dtype)])
+    edst = jnp.concatenate([edge_dst, jnp.full((pad,), n, edge_dst.dtype)])
+    esrc = esrc.reshape(n_chunks, chunk)
+    edst = edst.reshape(n_chunks, chunk)
+
+    def _impl(lp_, xn_, pos_):
+        def chunk_fn(carry, inp):
+            num, den = carry
+            dn, dd = _chunk_contribution(lp_, cfg, xn_, pos_, *inp, n)
+            return (num + dn, den + dd), None
+
+        num0 = jnp.zeros((n + 1, s, c), x.dtype)
+        den0 = jnp.zeros((n + 1, heads), x.dtype)
+        (num, den), _ = jax.lax.scan(chunk_fn, (num0, den0), (esrc, edst))
+        return num, den
+
+    @jax.custom_vjp
+    def aggregate(lp_, xn_, pos_):
+        return _impl(lp_, xn_, pos_)
+
+    def agg_fwd(lp_, xn_, pos_):
+        return _impl(lp_, xn_, pos_), (lp_, xn_, pos_)
+
+    def agg_bwd(res, ct):
+        lp_, xn_, pos_ = res
+
+        def chunk_bwd(carry, inp):
+            d_lp, d_xn, d_pos = carry
+            _, vjp = jax.vjp(
+                lambda a, b, c_: _chunk_contribution(a, cfg, b, c_, *inp, n),
+                lp_, xn_, pos_,
+            )
+            g_lp, g_xn, g_pos = vjp(ct)
+            return (
+                jax.tree.map(jnp.add, d_lp, g_lp),
+                d_xn + g_xn,
+                d_pos + g_pos,
+            ), None
+
+        zeros = (
+            jax.tree.map(jnp.zeros_like, lp_),
+            jnp.zeros_like(xn_),
+            jnp.zeros_like(pos_),
+        )
+        (d_lp, d_xn, d_pos), _ = jax.lax.scan(chunk_bwd, zeros, (esrc, edst))
+        return d_lp, d_xn, d_pos
+
+    aggregate.defvjp(agg_fwd, agg_bwd)
+    num, den = aggregate(lp, xn, pos)
+    den = jnp.maximum(den, 1e-9)
+    ch = c // heads
+    agg = (
+        num[:n].reshape(n, s, heads, ch) / den[:n, None, :, None]
+    ).reshape(n, s, c)
+    x = x + agg
+
+    # ---- equivariant FFN: scalar-gated nonlinearity + per-l channel mix --
+    xn2 = _irrep_norm(x, lp["norm_scale"], cfg.l_max)
+    scalars = xn2[:, 0]  # [N, C]
+    gates = jax.nn.sigmoid(scalars @ lp["ffn_gate"]).reshape(
+        n, cfg.l_max, c
+    )
+    outs = [jax.nn.silu(scalars) @ lp["ffn_mix"][0]]
+    for l in range(1, cfg.l_max + 1):
+        blk = xn2[:, l * l : (l + 1) * (l + 1)]
+        blk = blk * gates[:, l - 1][:, None, :]
+        outs.append(jnp.einsum("nac,cd->nad", blk, lp["ffn_mix"][l]))
+    y = jnp.concatenate(
+        [outs[0][:, None]] + outs[1:], axis=1
+    )
+    return x + y
+
+
+def equiformer_forward(
+    params: dict,
+    cfg: EquiformerConfig,
+    node_feat: jax.Array,  # [N, d_feat_in]
+    pos: jax.Array,  # [N, 3]
+    edge_src: jax.Array,  # [E] i32
+    edge_dst: jax.Array,  # [E] i32
+    shard: Shard = no_shard,
+    graph_ids: jax.Array | None = None,  # [N] for batched small graphs
+    n_graphs: int = 1,
+):
+    """Returns [N, n_out] (node readout) or [n_graphs, n_out] (graph)."""
+    n = node_feat.shape[0]
+    x0 = node_feat.astype(cfg.dtype) @ params["embed_w"]  # [N, C]
+    x = jnp.zeros((n, cfg.s_full, cfg.channels), cfg.dtype)
+    x = x.at[:, 0].set(x0)
+    x = shard(x, "act_nodes")
+
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        x = _attention_layer(lp, cfg, x, pos, edge_src, edge_dst, shard)
+        x = shard(x, "act_nodes")
+
+    inv = x[:, 0]  # invariant channels
+    h = jax.nn.silu(inv @ params["head_w1"])
+    out = h @ params["head_w2"]
+    if cfg.readout == "graph":
+        assert graph_ids is not None
+        out = jax.ops.segment_sum(out, graph_ids, num_segments=n_graphs)
+    return out
+
+
+def equiformer_loss(params, cfg, batch, shard: Shard = no_shard):
+    out = equiformer_forward(
+        params, cfg, batch["node_feat"], batch["pos"], batch["edge_src"],
+        batch["edge_dst"], shard,
+        graph_ids=batch.get("graph_ids"),
+        n_graphs=batch.get("n_graphs", 1),
+    )
+    if cfg.readout == "graph":
+        err = out[:, 0] - batch["target"]
+        loss = jnp.mean(err * err)
+    else:
+        labels = batch["label"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(out.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            out.astype(jnp.float32), jnp.maximum(labels, 0)[:, None], axis=-1
+        )[:, 0]
+        loss = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}

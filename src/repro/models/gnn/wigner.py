@@ -1,0 +1,110 @@
+"""Wigner rotation matrices for real spherical harmonics, l <= L_MAX.
+
+eSCN (EquiformerV2's convolution) rotates every edge's irrep features into a
+frame where the edge direction is the z axis; there the SO(3) tensor product
+collapses to independent SO(2) mixes per |m| — O(L^3) instead of O(L^6).
+
+Construction (host precompute + vectorised device evaluation):
+  complex-basis angular momentum operators Jz (diag) and Jy (from ladder
+  operators); C_l = complex->real-SH change of basis; eigendecomposition
+  Jy = V diag(m) V^H.  Then for Euler angles,
+      D_real(Rz(g)) = Re( C diag(e^{-i m g}) C^H )
+      D_real(Ry(b)) = Re( W diag(e^{-i m b}) W^H ),  W = C V
+  and the edge-alignment rotation is D(Ry(-theta)) @ D(Rz(-phi)).
+Correctness is property-tested against rotating the inputs of real spherical
+harmonics directly (tests/test_gnn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _complex_to_real_sh(l: int) -> np.ndarray:
+    """Unitary C with Y_real = C @ Y_complex (Condon–Shortley phases)."""
+    dim = 2 * l + 1
+    c = np.zeros((dim, dim), np.complex128)
+    isq2 = 1.0 / np.sqrt(2.0)
+    for m in range(-l, l + 1):
+        row = m + l
+        if m < 0:
+            c[row, l + m] = 1j * isq2
+            c[row, l - m] = -1j * isq2 * (-1) ** m
+        elif m == 0:
+            c[row, l] = 1.0
+        else:
+            c[row, l - m] = isq2
+            c[row, l + m] = isq2 * (-1) ** m
+    return c
+
+
+def _jy(l: int) -> np.ndarray:
+    """Jy in the complex |l, m> basis (m = -l..l ordering)."""
+    dim = 2 * l + 1
+    jp = np.zeros((dim, dim), np.complex128)  # J+ |m> = c |m+1>
+    for m in range(-l, l):
+        jp[m + 1 + l, m + l] = np.sqrt(l * (l + 1) - m * (m + 1))
+    jm = jp.conj().T
+    return (jp - jm) / 2j
+
+
+@functools.lru_cache(maxsize=None)
+def wigner_tables(l_max: int):
+    """Host precompute: per-l (W = C V, m eigenvalues, C) as numpy arrays."""
+    ws, ms, cs = [], [], []
+    for l in range(l_max + 1):
+        c = _complex_to_real_sh(l)
+        evals, v = np.linalg.eigh(_jy(l))
+        # eigenvalues of Jy are exactly -l..l; snap to integers
+        evals = np.round(evals).astype(np.float64)
+        ws.append(c @ v)
+        ms.append(evals)
+        cs.append(c)
+    return ws, ms, cs
+
+
+def _rot_from_phase(
+    w: jax.Array, m: jax.Array, angle: jax.Array, sign: float
+) -> jax.Array:
+    """Re( W diag(e^{sign * i m angle}) W^H ) for a batch of angles [...].
+
+    Empirically validated conventions (tests/test_gnn.py): rotations about z
+    use sign=+1 with W=C; rotations about y use sign=-1 with W=C V.
+    """
+    phase = jnp.exp(sign * 1j * m * angle[..., None])  # [..., dim]
+    return jnp.real(jnp.einsum("ab,...b,cb->...ac", w, phase, w.conj()))
+
+
+def edge_wigner(
+    l_max: int, edge_vec: jax.Array
+) -> list[jax.Array]:
+    """Per-l rotation matrices aligning each edge vector to +z.
+
+    edge_vec: [E, 3].  Returns list of [E, 2l+1, 2l+1] f32, l = 0..l_max.
+    The inverse rotation is the transpose (orthogonal).
+    """
+    ws_np, ms_np, cs_np = wigner_tables(l_max)
+    x, y, z = edge_vec[:, 0], edge_vec[:, 1], edge_vec[:, 2]
+    r = jnp.sqrt(x * x + y * y + z * z) + 1e-12
+    theta = jnp.arccos(jnp.clip(z / r, -1.0, 1.0))  # polar
+    phi = jnp.arctan2(y, x)  # azimuth
+    # R_align = Ry(-theta) @ Rz(-phi) maps the edge direction to +z
+    out = []
+    for l in range(l_max + 1):
+        w = jnp.asarray(ws_np[l], jnp.complex64)
+        cmat = jnp.asarray(cs_np[l], jnp.complex64)
+        m = jnp.asarray(ms_np[l], jnp.float32)
+        dz = _rot_from_phase(cmat, m, -phi, +1.0)  # [E, dim, dim]
+        dy = _rot_from_phase(w, m, -theta, -1.0)
+        out.append(jnp.einsum("eab,ebc->eac", dy, dz).astype(jnp.float32))
+    return out
+
+
+def real_sph_harm_l1(vec: jax.Array) -> jax.Array:
+    """l=1 real SH (unnormalised, (y, z, x) ordering) — used by tests."""
+    n = vec / (jnp.linalg.norm(vec, axis=-1, keepdims=True) + 1e-12)
+    return jnp.stack([n[..., 1], n[..., 2], n[..., 0]], axis=-1)

@@ -1,0 +1,239 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+Pure-JAX parameter dicts (no flax).  Every block takes an optional
+``shard`` callback — ``shard(x, logical_name)`` applies a
+``with_sharding_constraint`` when running under a mesh (see
+repro/launch/shardings.py); the default is identity so the same code runs
+unsharded in smoke tests.
+
+Compute dtype is the params' dtype (bf16 in production configs); softmax
+and norms accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Shard = Callable[[jax.Array, str], jax.Array]
+
+
+def no_shard(x: jax.Array, name: str) -> jax.Array:
+    return x
+
+
+# ----------------------------------------------------------------- norms --
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope --
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, dh]; positions [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention --
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    attn_chunk: int = 512  # query-chunked causal attention threshold/size
+    unroll: bool = False  # python-loop chunks (dry-run: exact HLO flops)
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = d**-0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * dh, d)) * (h * dh) ** -0.5).astype(
+            dtype
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), dtype)
+        p["k_scale"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _qkv(p, cfg: AttnConfig, x, positions, shard: Shard):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q.reshape(b, s, h, dh), "act_heads")
+    k = shard(k.reshape(b, s, kv, dh), "act_kv_heads")
+    v = shard(v.reshape(b, s, kv, dh), "act_kv_heads")
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_scale"])
+        k = rmsnorm(k, p["k_scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_chunked(q, k, v, cfg: AttnConfig, shard: Shard, causal=True):
+    """Query-chunked causal attention: live logits stay [B,H,Cq,S].
+
+    The chunk scan is the pure-JAX flash analogue — O(S) memory in the
+    query dimension; the KV tensor stays resident (sharded over heads).
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh**-0.5
+    cq = min(cfg.attn_chunk, s)
+    s_pad = -(-s // cq) * cq  # pad queries up to a chunk multiple
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    n_chunks = s_pad // cq
+    qg = q.reshape(b, s_pad, kvh, g, dh)
+    kT = k  # [b, s, kvh, dh]
+
+    def chunk_fn(_, idx):
+        q_c = jax.lax.dynamic_slice_in_dim(qg, idx * cq, cq, axis=1)
+        logits = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_c, kT, preferred_element_type=jnp.float32
+        ) * scale  # [b, kvh, g, cq, s]
+        if causal:
+            qpos = idx * cq + jnp.arange(cq)
+            mask = qpos[:, None] >= jnp.arange(s)[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum(
+            "bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return None, o.astype(q.dtype)
+
+    if cfg.unroll:
+        # python loop: every chunk appears in the HLO, so cost_analysis
+        # counts the true FLOPs (scan bodies are counted once by XLA)
+        chunks = jnp.stack(
+            [chunk_fn(None, jnp.int32(i))[1] for i in range(n_chunks)]
+        )
+    else:
+        _, chunks = jax.lax.scan(chunk_fn, None, jnp.arange(n_chunks))
+    # chunks [n_chunks, b, cq, kvh, g, dh] -> [b, s, h, dh]
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, s_pad, kvh, g, dh)
+    return out.reshape(b, s_pad, h, dh)[:, :s]
+
+
+def attention(
+    p: dict,
+    cfg: AttnConfig,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [B, S]
+    shard: Shard = no_shard,
+    causal: bool = True,
+):
+    """Full-sequence (training / prefill) attention.  Returns [B, S, D]."""
+    q, k, v = _qkv(p, cfg, x, positions, shard)
+    out = _sdpa_chunked(q, k, v, cfg, shard, causal=causal)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return shard(out @ p["wo"], "act_embed")
+
+
+def attention_decode(
+    p: dict,
+    cfg: AttnConfig,
+    x: jax.Array,  # [B, 1, D] new token embeddings
+    k_cache: jax.Array,  # [B, S, KV, dh] (running)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # [] or [B] current length (tokens already cached)
+    shard: Shard = no_shard,
+):
+    """Single-token decode against a contiguous KV cache.
+
+    Returns (out [B, 1, D], k_cache', v_cache').  The paged-KV variant
+    (block-pool cache + Pallas kernel) lives in serve.py / kernels.
+    """
+    b = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos = jnp.broadcast_to(
+        jnp.asarray(cache_len).reshape(-1)[:, None], (b, 1)
+    ).astype(jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, pos, shard)  # [B, 1, ...]
+    idx = jnp.asarray(cache_len).reshape(())
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), idx, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), idx, axis=1
+    )
+    s = k_cache.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, dh)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (dh**-0.5)
+    mask = jnp.arange(s)[None, None, None, :] <= idx
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = o.reshape(b, 1, h * dh) @ p["wo"]
+    return shard(out, "act_embed"), k_cache, v_cache
+
+
+# ---------------------------------------------------------------- swiglu --
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * d_model**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * d_model**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * d_ff**-0.5).astype(dtype),
+    }
+
+
+def mlp_swiglu(p: dict, x: jax.Array, shard: Shard = no_shard) -> jax.Array:
+    gate = shard(x @ p["w_gate"], "act_ff")
+    up = shard(x @ p["w_up"], "act_ff")
+    return shard((jax.nn.silu(gate) * up) @ p["w_down"], "act_embed")

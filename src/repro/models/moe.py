@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k routing + sort-based capacity dispatch.
+
+Expert-parallel layout: expert weight tensors are sharded over the "model"
+mesh axis; the dispatch gather/scatter becomes an all-to-all under GSPMD.
+Dispatch is sort-based (MegaBlocks/MaxText style) rather than dense one-hot:
+token->expert pairs are ranked per expert with the same cumulative trick the
+IVF insert uses, truncated at a static capacity, then gathered into an
+[E, C, D] tensor for a grouped einsum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Shard, no_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_dtype: object = jnp.float32
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * d**-0.5).astype(
+            jnp.float32
+        ),
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * d**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * f**-0.5).astype(dtype),
+    }
+
+
+def _rank_within_expert(expert_ids: jax.Array, n_experts: int):
+    """Position of each (token,k) pair within its expert's queue."""
+    n = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(idx - run_start)
+    return rank
+
+
+def moe_apply(
+    p: dict,
+    cfg: MoEConfig,
+    x: jax.Array,  # [T, D] flattened tokens
+    shard: Shard = no_shard,
+):
+    """Returns (out [T, D], aux) where aux has load-balance stats/loss."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, (t * k / e) * cfg.capacity_factor))
+
+    logits = (x.astype(cfg.router_dtype)) @ p["router"]  # [T, E] fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- flatten (token, k) pairs and rank within expert ----------------
+    flat_e = expert.reshape(-1).astype(jnp.int32)  # [T*K]
+    flat_g = gate.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    pos = _rank_within_expert(flat_e, e)  # [T*K]
+    keep = pos < cap  # capacity truncation (dropped pairs lose their gate)
+
+    # scatter pair -> (expert, slot)
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # OOB = dropped
+    tok_for_slot = jnp.full((e * cap,), t, jnp.int32)  # t = padding token row
+    tok_for_slot = tok_for_slot.at[slot].set(flat_tok, mode="drop")
+    gate_for_slot = jnp.zeros((e * cap,), flat_g.dtype).at[slot].set(
+        flat_g, mode="drop"
+    )
+
+    # gather tokens into expert buffers (all-to-all under EP sharding)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = x_pad[tok_for_slot].reshape(e, cap, d)
+    xe = shard(xe, "moe_experts")
+
+    # ---- grouped expert FFN (einsum over the expert axis) ---------------
+    h_gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = shard(ye, "moe_experts")
+
+    # ---- combine: weighted scatter-add back to tokens --------------------
+    yflat = ye.reshape(e * cap, d) * gate_for_slot[:, None].astype(ye.dtype)
+    out = jnp.zeros((t + 1, d), ye.dtype).at[tok_for_slot].add(yflat)[:t]
+
+    # Switch-style load balance loss
+    me = probs.mean(axis=0)  # [E] mean router prob
+    ce = jax.ops.segment_sum(
+        jnp.ones_like(flat_e, dtype=jnp.float32), flat_e, num_segments=e
+    ) / (t * k)
+    aux_loss = e * jnp.sum(me * ce)
+    dropped = 1.0 - keep.mean()
+    return out.astype(x.dtype), {"aux_loss": aux_loss, "drop_frac": dropped}

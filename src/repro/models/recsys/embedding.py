@@ -1,0 +1,104 @@
+"""Sharded embedding tables + EmbeddingBag built from JAX primitives.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the bag op here IS
+part of the system (assignment note): ``jnp.take`` over one concatenated
+table + ``jax.ops.segment_sum`` for multi-hot reduction.
+
+Layout: all fields live in ONE stacked table ``[total_rows, dim]`` with
+per-field row offsets.  This is deliberate: the single table row-shards over
+the "model" mesh axis (DLRM's 96 GB of tables cannot be replicated), and a
+lookup becomes gather -> all-to-all under GSPMD, which mirrors production
+DLRM hybrid parallelism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Shard, no_shard
+
+
+ROW_PAD = 512  # table rows padded to a multiple of the largest mesh size,
+# so row-sharding the stacked table over every mesh axis is always legal.
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    vocab_sizes: tuple  # rows per field
+    dim: int
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_rows(self) -> int:
+        return -(-self.total_rows // ROW_PAD) * ROW_PAD
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(
+            np.int32
+        )
+
+
+def init_embedding(key, spec: EmbeddingSpec, dtype=jnp.float32) -> dict:
+    scale = spec.dim**-0.5
+    return {
+        "table": (
+            jax.random.normal(key, (spec.padded_rows, spec.dim)) * scale
+        ).astype(dtype)
+    }
+
+
+def lookup(
+    params: dict,
+    spec: EmbeddingSpec,
+    ids: jax.Array,  # [B, F] one id per field (already in-field indices)
+    shard: Shard = no_shard,
+) -> jax.Array:  # [B, F, dim]
+    offsets = jnp.asarray(spec.offsets)
+    rows = ids + offsets[None, :]
+    out = jnp.take(params["table"], rows.reshape(-1), axis=0)
+    out = out.reshape(*ids.shape, spec.dim)
+    return shard(out, "act_embed_bag")
+
+
+def bag_lookup(
+    params: dict,
+    spec: EmbeddingSpec,
+    ids: jax.Array,  # [B, F, L] multi-hot ids, -1 = padding
+    weights: jax.Array | None = None,  # [B, F, L] per-sample weights
+    combiner: str = "sum",
+    shard: Shard = no_shard,
+) -> jax.Array:  # [B, F, dim]
+    """EmbeddingBag: ragged gather + segment reduction (sum/mean)."""
+    b, f, l = ids.shape
+    offsets = jnp.asarray(spec.offsets)
+    valid = ids >= 0
+    rows = jnp.where(valid, ids + offsets[None, :, None], 0)
+    emb = jnp.take(params["table"], rows.reshape(-1), axis=0).reshape(
+        b, f, l, spec.dim
+    )
+    w = valid.astype(emb.dtype)
+    if weights is not None:
+        w = w * weights.astype(emb.dtype)
+    out = jnp.sum(emb * w[..., None], axis=2)
+    if combiner == "mean":
+        out = out / jnp.maximum(w.sum(axis=2), 1.0)[..., None]
+    return shard(out, "act_embed_bag")
+
+
+def hash_ids(raw: jax.Array, vocab: int, salt: int = 0) -> jax.Array:
+    """Cheap multiplicative hash into [0, vocab) for synthetic/raw ids."""
+    h = (raw.astype(jnp.uint32) + jnp.uint32(salt)) * jnp.uint32(2654435761)
+    return (h % jnp.uint32(vocab)).astype(jnp.int32)

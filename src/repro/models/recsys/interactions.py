@@ -1,0 +1,45 @@
+"""Feature-interaction ops shared by the recsys architectures."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dot_interaction(feats: jax.Array, self_dots: bool = False) -> jax.Array:
+    """DLRM dot interaction: pairwise dots of [B, F, D] -> [B, F*(F-1)/2]."""
+    b, f, d = feats.shape
+    dots = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=0 if self_dots else 1)
+    return dots[:, iu, ju]
+
+
+def cross_layer(x0: jax.Array, x: jax.Array, w: jax.Array, b: jax.Array):
+    """DCN-v2 full-rank cross: x_{l+1} = x0 * (W x_l + b) + x_l."""
+    return x0 * (x @ w + b) + x
+
+
+def cross_layer_lowrank(x0, x, u, v, b):
+    """DCN-v2 low-rank cross: x0 * (U(Vx) + b) + x."""
+    return x0 * ((x @ v) @ u + b) + x
+
+
+def mlp(params: list[dict], x: jax.Array, final_act: bool = False) -> jax.Array:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_mlp_params(key, sizes: list[int], dtype=jnp.float32) -> list[dict]:
+    keys = jax.random.split(key, len(sizes) - 1)
+    out = []
+    for k, din, dout in zip(keys, sizes[:-1], sizes[1:]):
+        out.append(
+            {
+                "w": (jax.random.normal(k, (din, dout)) * (2.0 / din) ** 0.5).astype(dtype),
+                "b": jnp.zeros((dout,), dtype),
+            }
+        )
+    return out

@@ -1,0 +1,295 @@
+"""The four assigned recsys architectures behind one RecModel interface.
+
+* dlrm-mlperc  [arXiv:1906.00091]  — bottom MLP -> dot interaction -> top MLP
+* dcn-v2      [arXiv:2008.13535]  — cross network ∥ deep MLP
+* wide-deep   [arXiv:1606.07792]  — wide linear ∥ deep MLP
+* dien        [arXiv:1809.03672]  — GRU over behaviour seq + AUGRU attention
+
+Every model exposes ``init(key) -> params`` and
+``apply(params, batch, shard) -> logits [B]``; training uses BCE loss.
+Batches are dicts of dense features / sparse ids / (dien) behaviour
+sequences.  The ``retrieval_cand`` shape (1 query vs 10^6 candidates) is
+served by ``score_candidates`` — a batched dot against candidate item
+embeddings — and, as the paper-technique integration, by the RTAMS IVF index
+(examples/recsys_retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Shard, no_shard
+from repro.models.recsys.embedding import (
+    EmbeddingSpec,
+    init_embedding,
+    lookup,
+)
+from repro.models.recsys.interactions import (
+    cross_layer,
+    dot_interaction,
+    init_mlp_params,
+    mlp,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecConfig:
+    name: str
+    kind: str  # dlrm | dcn_v2 | wide_deep | dien
+    n_dense: int
+    vocab_sizes: tuple
+    embed_dim: int
+    bot_mlp: tuple = ()
+    top_mlp: tuple = ()
+    mlp_sizes: tuple = ()
+    n_cross_layers: int = 0
+    # dien
+    seq_len: int = 0
+    gru_dim: int = 0
+    unroll: bool = False  # python-loop the GRU (dry-run FLOP accounting)
+    dtype: Any = jnp.float32
+
+    @property
+    def spec(self) -> EmbeddingSpec:
+        return EmbeddingSpec(vocab_sizes=self.vocab_sizes, dim=self.embed_dim)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+
+# ------------------------------------------------------------------ DLRM --
+
+
+def _init_dlrm(key, cfg: RecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    f = cfg.n_sparse + 1  # +1: bottom-MLP output joins the interaction
+    n_inter = f * (f - 1) // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    return {
+        "embed": init_embedding(k1, cfg.spec, cfg.dtype),
+        "bot": init_mlp_params(k2, [cfg.n_dense, *cfg.bot_mlp], cfg.dtype),
+        "top": init_mlp_params(k3, [top_in, *cfg.top_mlp], cfg.dtype),
+    }
+
+
+def _apply_dlrm(params, cfg: RecConfig, batch, shard: Shard):
+    dense = mlp(params["bot"], batch["dense"].astype(cfg.dtype), final_act=True)
+    emb = lookup(params["embed"], cfg.spec, batch["sparse"], shard)
+    feats = jnp.concatenate([dense[:, None, :], emb], axis=1)
+    inter = dot_interaction(feats)
+    top_in = jnp.concatenate([inter, dense], axis=-1)
+    return mlp(params["top"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------- DCN-v2 --
+
+
+def _init_dcn(key, cfg: RecConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = []
+    for i, kk in enumerate(jax.random.split(k2, cfg.n_cross_layers)):
+        cross.append(
+            {
+                "w": (jax.random.normal(kk, (d_in, d_in)) * d_in**-0.5).astype(cfg.dtype),
+                "b": jnp.zeros((d_in,), cfg.dtype),
+            }
+        )
+    head_in = d_in + cfg.mlp_sizes[-1]
+    return {
+        "embed": init_embedding(k1, cfg.spec, cfg.dtype),
+        "cross": cross,
+        "deep": init_mlp_params(k3, [d_in, *cfg.mlp_sizes], cfg.dtype),
+        "head": init_mlp_params(k4, [head_in, 1], cfg.dtype),
+    }
+
+
+def _apply_dcn(params, cfg: RecConfig, batch, shard: Shard):
+    emb = lookup(params["embed"], cfg.spec, batch["sparse"], shard)
+    x0 = jnp.concatenate(
+        [batch["dense"].astype(cfg.dtype), emb.reshape(emb.shape[0], -1)], -1
+    )
+    x = x0
+    for layer in params["cross"]:
+        x = cross_layer(x0, x, layer["w"], layer["b"])
+    deep = mlp(params["deep"], x0, final_act=True)
+    return mlp(params["head"], jnp.concatenate([x, deep], -1))[:, 0]
+
+
+# ------------------------------------------------------------- Wide&Deep --
+
+
+def _init_wide_deep(key, cfg: RecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in = cfg.n_sparse * cfg.embed_dim
+    # wide part: a dim-1 embedding per field = linear over one-hots
+    wide_spec = EmbeddingSpec(vocab_sizes=cfg.vocab_sizes, dim=1)
+    return {
+        "embed": init_embedding(k1, cfg.spec, cfg.dtype),
+        "wide": init_embedding(k2, wide_spec, cfg.dtype),
+        "deep": init_mlp_params(k3, [d_in, *cfg.mlp_sizes, 1], cfg.dtype),
+    }
+
+
+def _apply_wide_deep(params, cfg: RecConfig, batch, shard: Shard):
+    emb = lookup(params["embed"], cfg.spec, batch["sparse"], shard)
+    deep = mlp(params["deep"], emb.reshape(emb.shape[0], -1))[:, 0]
+    wide_spec = EmbeddingSpec(vocab_sizes=cfg.vocab_sizes, dim=1)
+    wide = lookup(params["wide"], wide_spec, batch["sparse"], shard)
+    return deep + wide.sum(axis=(1, 2))
+
+
+# ------------------------------------------------------------------ DIEN --
+
+
+def _gru_cell(p, h, x):
+    zr = jax.nn.sigmoid(x @ p["w_zr"] + h @ p["u_zr"] + p["b_zr"])
+    z, r = jnp.split(zr, 2, axis=-1)
+    hh = jnp.tanh(x @ p["w_h"] + (r * h) @ p["u_h"] + p["b_h"])
+    return (1 - z) * h + z * hh
+
+
+def _augru_cell(p, h, x, att):
+    """AUGRU: attention scales the update gate (DIEN §4.3)."""
+    zr = jax.nn.sigmoid(x @ p["w_zr"] + h @ p["u_zr"] + p["b_zr"])
+    z, r = jnp.split(zr, 2, axis=-1)
+    z = z * att[:, None]
+    hh = jnp.tanh(x @ p["w_h"] + (r * h) @ p["u_h"] + p["b_h"])
+    return (1 - z) * h + z * hh
+
+
+def _init_gru(key, d_in, d_h, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_h = d_in**-0.5, d_h**-0.5
+    return {
+        "w_zr": (jax.random.normal(k1, (d_in, 2 * d_h)) * s_in).astype(dtype),
+        "u_zr": (jax.random.normal(k2, (d_h, 2 * d_h)) * s_h).astype(dtype),
+        "b_zr": jnp.zeros((2 * d_h,), dtype),
+        "w_h": (jax.random.normal(k3, (d_in, d_h)) * s_in).astype(dtype),
+        "u_h": (jax.random.normal(k4, (d_h, d_h)) * s_h).astype(dtype),
+        "b_h": jnp.zeros((d_h,), dtype),
+    }
+
+
+def _init_dien(key, cfg: RecConfig):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_e = cfg.embed_dim
+    # profile fields = all but field 0 (item vocab used for history+target)
+    d_profile = (cfg.n_sparse - 1) * d_e
+    d_in = d_profile + cfg.gru_dim + d_e
+    return {
+        "embed": init_embedding(k1, cfg.spec, cfg.dtype),
+        "gru1": _init_gru(k2, d_e, cfg.gru_dim, cfg.dtype),
+        "augru": _init_gru(k3, cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att": init_mlp_params(k4, [cfg.gru_dim + d_e, 64, 1], cfg.dtype),
+        "mlp": init_mlp_params(k5, [d_in, *cfg.mlp_sizes, 1], cfg.dtype),
+    }
+
+
+def _apply_dien(params, cfg: RecConfig, batch, shard: Shard):
+    spec = cfg.spec
+    emb_all = lookup(params["embed"], spec, batch["sparse"], shard)  # [B,F,D]
+    target = emb_all[:, 0]  # field 0 = target item
+    profile = emb_all[:, 1:].reshape(emb_all.shape[0], -1)
+    # history: [B, L] ids in item vocab (field 0)
+    hist_ids = batch["history"]
+    hist = jnp.take(params["embed"]["table"], hist_ids.reshape(-1), axis=0)
+    hist = hist.reshape(*hist_ids.shape, cfg.embed_dim)  # [B, L, D]
+    b, l, _ = hist.shape
+
+    # interest extraction GRU over the sequence
+    def step1(h, x_t):
+        h = _gru_cell(params["gru1"], h, x_t)
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    hist_t = jnp.swapaxes(hist, 0, 1)
+    if cfg.unroll:
+        hcur, ss = h0, []
+        for t in range(l):
+            hcur, _ = step1(hcur, hist_t[t])
+            ss.append(hcur)
+        states = jnp.stack(ss, axis=1)  # [B, L, gru]
+    else:
+        _, states = jax.lax.scan(step1, h0, hist_t)
+        states = jnp.swapaxes(states, 0, 1)  # [B, L, gru]
+
+    # attention vs target
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(target[:, None], (b, l, cfg.embed_dim))], -1
+    )
+    att = mlp(params["att"], att_in.reshape(b * l, -1)).reshape(b, l)
+    att = jax.nn.softmax(att, axis=-1)
+
+    # interest evolution AUGRU
+    def step2(h, inp):
+        x_t, a_t = inp
+        h = _augru_cell(params["augru"], h, x_t, a_t)
+        return h, None
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    if cfg.unroll:
+        hT = h0
+        for t in range(l):
+            hT, _ = step2(hT, (states[:, t], att[:, t]))
+    else:
+        hT, _ = jax.lax.scan(
+            step2, h0, (jnp.swapaxes(states, 0, 1), jnp.swapaxes(att, 0, 1))
+        )
+    x = jnp.concatenate([profile, hT, target], -1)
+    return mlp(params["mlp"], x)[:, 0]
+
+
+# ------------------------------------------------------------- interface --
+
+_INIT = {
+    "dlrm": _init_dlrm,
+    "dcn_v2": _init_dcn,
+    "wide_deep": _init_wide_deep,
+    "dien": _init_dien,
+}
+_APPLY = {
+    "dlrm": _apply_dlrm,
+    "dcn_v2": _apply_dcn,
+    "wide_deep": _apply_wide_deep,
+    "dien": _apply_dien,
+}
+
+
+def init_rec(key, cfg: RecConfig) -> dict:
+    return _INIT[cfg.kind](key, cfg)
+
+
+def apply_rec(params, cfg: RecConfig, batch: dict, shard: Shard = no_shard):
+    return _APPLY[cfg.kind](params, cfg, batch, shard)
+
+
+def rec_loss(params, cfg: RecConfig, batch: dict, shard: Shard = no_shard):
+    logits = apply_rec(params, cfg, batch, shard)
+    labels = batch["label"].astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}
+
+
+def score_candidates(
+    params, cfg: RecConfig, batch: dict, cand_emb: jax.Array,
+    shard: Shard = no_shard, k: int = 100,
+):
+    """retrieval_cand shape: one user context vs [N, D] candidate items.
+
+    Uses the deep tower's penultimate representation projected to embed_dim
+    as the query; scoring is one [1, D] x [D, N] matmul + top-k (never a
+    loop).  The RTAMS IVF path for the same task lives in examples/.
+    """
+    emb = lookup(params["embed"], cfg.spec, batch["sparse"], shard)
+    query = emb.mean(axis=1)  # [B=1, D] pooled user context
+    scores = query @ cand_emb.T  # [1, N]
+    return jax.lax.top_k(scores, k)

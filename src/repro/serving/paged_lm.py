@@ -1,0 +1,142 @@
+"""Paged-KV LM serving: the paper's memory-block pool applied to decode.
+
+A KV cache grows token-by-token exactly like an IVF list grows vector-by-
+vector.  Contiguous caches (the Faiss/RAFT analogue) must be pre-sized to
+max_seq per sequence or re-allocated+copied on growth; the block pool gives
+O(1) allocation-free appends and per-token memory granularity — identical
+discipline to ``repro.core.block_pool``, down to the bump allocator and the
+per-sequence block *table*.
+
+Decode attention reads through the table via the Pallas kernel
+(``repro.kernels.paged_attention``); appends are a two-scatter update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import paged_decode_attention
+from repro.models.layers import Shard, _qkv, no_shard, rmsnorm
+from repro.models.moe import moe_apply
+from repro.models.transformer import LMConfig
+from repro.models.layers import mlp_swiglu
+
+NULL = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKVState:
+    k_pool: jax.Array  # [L, P, T, KV, dh]
+    v_pool: jax.Array  # [L, P, T, KV, dh]
+    block_tables: jax.Array  # [B, NB] i32 (shared across layers)
+    seq_lens: jax.Array  # [B] i32
+    cur_p: jax.Array  # [] i32 bump pointer (same discipline as IVF pool)
+
+
+def init_paged_kv(
+    cfg: LMConfig,
+    batch: int,
+    *,
+    n_blocks: int,
+    block_size: int,
+    max_blocks_per_seq: int,
+    dtype: Any = None,
+) -> PagedKVState:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.d_head)
+    return PagedKVState(
+        k_pool=jnp.zeros(shape, dtype),
+        v_pool=jnp.zeros(shape, dtype),
+        block_tables=jnp.full((batch, max_blocks_per_seq), NULL, jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+        cur_p=jnp.zeros((), jnp.int32),
+    )
+
+
+def _alloc_blocks(state: PagedKVState, t: int) -> PagedKVState:
+    """Bump-allocate one block for every sequence crossing a block boundary
+    (the IVF insert allocator, Alg. 2 line 13, verbatim)."""
+    b = state.seq_lens.shape[0]
+    needs = state.seq_lens % t == 0  # next token starts a fresh block
+    order = jnp.cumsum(needs.astype(jnp.int32)) - needs.astype(jnp.int32)
+    new_blk = state.cur_p + order
+    rows = jnp.where(needs, jnp.arange(b), b)
+    cols = jnp.where(needs, state.seq_lens // t, state.block_tables.shape[1])
+    tables = state.block_tables.at[rows, cols].set(
+        jnp.where(needs, new_blk, NULL), mode="drop"
+    )
+    return dataclasses.replace(
+        state,
+        block_tables=tables,
+        cur_p=state.cur_p + needs.sum().astype(jnp.int32),
+    )
+
+
+def paged_decode_step(
+    params: dict,
+    cfg: LMConfig,
+    token: jax.Array,  # [B] i32
+    state: PagedKVState,
+    shard: Shard = no_shard,
+):
+    """One decode step over the block-pool cache.
+
+    Returns (logits [B, V], state').  State flows through donated jit steps
+    just like the IVF pool — no copy of resident KV ever happens.
+    """
+    b = token.shape[0]
+    acfg = cfg.attn_config()
+    t = state.k_pool.shape[2]
+    state = _alloc_blocks(state, t)
+    lens = state.seq_lens
+    rows = state.block_tables[jnp.arange(b), lens // t]  # block per seq
+    offs = lens % t
+
+    x = params["embed"][token][:, None].astype(cfg.dtype)
+    x = shard(x, "act_embed")
+
+    def body(x, inp):
+        lp, kp, vp = inp  # kp [P, T, KV, dh]
+        xn = rmsnorm(x, lp["attn_norm"])
+        q, k_new, v_new = _qkv(lp["attn"], acfg, xn, lens[:, None], shard)
+        kp = kp.at[rows, offs].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[rows, offs].set(v_new[:, 0].astype(vp.dtype))
+        o = paged_decode_attention(
+            q[:, 0], kp, vp, state.block_tables, lens + 1
+        )  # [B, H, dh]
+        o = o.reshape(b, 1, cfg.n_heads * cfg.d_head) @ lp["attn"]["wo"]
+        h = x + shard(o, "act_embed")
+        hn = rmsnorm(h, lp["mlp_norm"])
+        if cfg.moe:
+            y, _ = moe_apply(
+                lp["moe"], cfg.moe_config(), hn.reshape(-1, cfg.d_model), shard
+            )
+            y = y.reshape(b, 1, cfg.d_model)
+        else:
+            y = mlp_swiglu(lp["mlp"], hn, shard)
+        return h + y, (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(
+        body, x, (params["layers"], state.k_pool, state.v_pool)
+    )
+    state = dataclasses.replace(
+        state, k_pool=kps, v_pool=vps, seq_lens=lens + 1
+    )
+    x = rmsnorm(x, params["final_norm"])
+    logits = shard(x @ params["lm_head"], "act_vocab")[:, 0]
+    return logits, state
+
+
+def make_paged_decode_fn(cfg: LMConfig, shard: Shard = no_shard):
+    """Jitted, state-donated decode step (the serving hot loop)."""
+
+    @jax.jit
+    def step(params, token, state):
+        return paged_decode_step(params, cfg, token, state, shard)
+
+    return jax.jit(step, donate_argnums=(2,))

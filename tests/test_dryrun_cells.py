@@ -1,0 +1,72 @@
+"""Dry-run machinery tests (subprocess: needs 512 host devices, which must
+not leak into the other tests' jax runtime)."""
+
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_one_cell_compiles_both_meshes(tmp_path):
+    out = tmp_path / "cells.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-1.7b", "--shape", "decode_32k", "--out", str(out)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    records = [json.loads(l) for l in open(out)]
+    assert {rec["mesh"] for rec in records} == {"16x16", "2x16x16"}
+    for rec in records:
+        assert rec["flops"] > 0
+        assert rec["argument_size_in_bytes"] > 0
+        # roofline terms derivable
+        from repro.launch.roofline import roofline_terms
+
+        t = roofline_terms(rec)
+        assert t["bound_s"] > 0
+        assert t["dominant"] in ("compute", "memory", "collective")
+
+
+def test_roofline_math():
+    from repro.launch.roofline import roofline_terms
+
+    rec = {
+        "n_devices": 256,
+        "flops": 197e12,  # exactly one second of compute per chip
+        "bytes_accessed": 819e9 / 2,  # half a second of HBM
+        "collectives": {"bytes": {"all-reduce": 50e9 / 4}},  # quarter second
+        "meta": {"n_params": 1e9, "tokens": 1000, "backward": True},
+    }
+    t = roofline_terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 0.5) < 1e-9
+    assert abs(t["collective_s"] - 0.25) < 1e-9
+    assert t["dominant"] == "compute"
+    assert 0 < t["useful_fraction"] < 1
+
+
+def test_collective_parser():
+    from repro.launch.roofline import collective_bytes_from_hlo
+
+    hlo = """
+      %ag = f32[16,1024]{1,0} all-gather(%x), replica_groups={}
+      %ar = bf16[8,8]{1,0} all-reduce-start(%y), to_apply=%add
+      %rs = f32[4,256]{1,0} reduce-scatter(%z), dimensions={0}
+      %a2a = f32[2,2]{1,0} all-to-all(%w)
+      %cp = f32[128]{0} collective-permute(%v)
+      %dot = f32[16,16]{1,0} dot(%a, %b)
+    """
+    out = collective_bytes_from_hlo(hlo)
+    assert out["counts"] == {
+        "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+        "all-to-all": 1, "collective-permute": 1,
+    }
+    assert out["bytes"]["all-gather"] == 16 * 1024 * 4
+    assert out["bytes"]["all-reduce"] == 8 * 8 * 2

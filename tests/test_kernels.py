@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ivf_scan import ivf_block_scan
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.pq_adc import pq_adc
+
+
+@pytest.mark.parametrize(
+    "q,d,p,t,c",
+    [
+        (8, 64, 16, 128, 4),
+        (16, 128, 32, 256, 9),
+        (8, 32, 7, 8, 7),  # odd sizes
+        (1, 128, 4, 64, 2),
+    ],
+)
+def test_ivf_block_scan_matches_ref(q, d, p, t, c):
+    rng = np.random.default_rng(q * 1000 + t)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, p, size=(c,)), jnp.int32)
+    got = ivf_block_scan(queries, pool, ids, interpret=True)
+    want = ref.ivf_block_scan_ref(queries, pool, ids)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "r,m,n,tile",
+    [(4, 8, 256, 128), (2, 16, 100, 64), (1, 4, 1024, 1024), (3, 32, 77, 32)],
+)
+def test_pq_adc_matches_ref(r, m, n, tile):
+    rng = np.random.default_rng(r * 100 + n)
+    lut = jnp.asarray(rng.normal(size=(r, m, 256)) ** 2, jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 256, size=(r, n, m)), jnp.int32)
+    got = pq_adc(lut, codes, tile_n=tile, interpret=True)
+    want = ref.pq_adc_ref(lut, codes)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,dh,t,nb,dtype",
+    [
+        (2, 8, 2, 64, 16, 4, jnp.float32),
+        (1, 4, 4, 128, 32, 2, jnp.float32),  # MHA (G=1)
+        (3, 8, 1, 64, 8, 5, jnp.float32),  # MQA
+        (2, 8, 2, 64, 16, 4, jnp.bfloat16),
+    ],
+)
+def test_paged_attention_matches_ref(b, h, kvh, dh, t, nb, dtype):
+    rng = np.random.default_rng(b * 10 + h)
+    p = nb * b + 2
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), dtype)
+    k_pool = jnp.asarray(rng.normal(size=(p, t, kvh, dh)), dtype)
+    v_pool = jnp.asarray(rng.normal(size=(p, t, kvh, dh)), dtype)
+    # each sequence owns nb blocks; random lengths, some partial, one zero
+    perm = rng.permutation(p)[: b * nb].reshape(b, nb).astype(np.int32)
+    lengths = rng.integers(0, nb * t + 1, size=(b,)).astype(np.int32)
+    lengths[0] = 0  # empty-cache edge case
+    if b > 1:
+        lengths[1] = nb * t  # full
+    tables = np.where(
+        np.arange(nb)[None, :] * t < np.maximum(lengths, 1)[:, None], perm, -1
+    ).astype(np.int32)
+    got = paged_decode_attention(
+        q, k_pool, v_pool, jnp.asarray(tables), jnp.asarray(lengths),
+        interpret=True,
+    )
+    want = ref.paged_decode_attention_ref(
+        q, k_pool, v_pool, jnp.asarray(tables), jnp.asarray(lengths)
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )

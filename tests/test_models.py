@@ -1,0 +1,218 @@
+"""LM / recsys model behaviour: parity, training, paged serving."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    LMConfig,
+    decode_step,
+    forward,
+    init_kv_cache,
+    init_lm,
+    lm_loss,
+    prefill,
+)
+from repro.serving.paged_lm import init_paged_kv, paged_decode_step
+from repro.models.recsys.models import (
+    RecConfig,
+    apply_rec,
+    init_rec,
+    rec_loss,
+    score_candidates,
+)
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+TINY = LMConfig(
+    name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+    d_ff=64, vocab=128, qk_norm=True, qkv_bias=True, attn_chunk=8,
+    dtype=jnp.float32,
+)
+# capacity_factor = n_experts => capacity can never truncate, so MoE decode
+# is exactly parity-testable against forward (drops are a lossy serving
+# approximation by design; drop accounting is covered in test_moe_dispatch).
+TINY_MOE = dataclasses.replace(
+    TINY, name="tiny_moe", moe=True, n_experts=8, top_k=2, d_ff_expert=32,
+    d_ff=0, capacity_factor=8.0,
+)
+
+
+def test_moe_dispatch_capacity_accounting():
+    from repro.models.moe import MoEConfig, init_moe, moe_apply
+
+    cfg = MoEConfig(d_model=16, n_experts=4, top_k=2, d_ff_expert=8,
+                    capacity_factor=0.5)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    out, aux = moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert float(aux["drop_frac"]) > 0.0  # tight capacity must drop
+    assert float(aux["aux_loss"]) >= 1.0  # >= 1 by Cauchy-Schwarz
+
+
+@pytest.fixture(scope="module", params=["dense", "moe"])
+def lm(request):
+    cfg = TINY if request.param == "dense" else TINY_MOE
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def test_lm_forward_shapes_finite(lm):
+    cfg, params = lm
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    logits, aux = forward(params, cfg, toks)
+    assert logits.shape == (2, 12, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lm_decode_matches_forward(lm):
+    cfg, params = lm
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, cfg.vocab)
+    cache = init_kv_cache(cfg, 2, 16)
+    lg, cache = prefill(params, cfg, toks, cache)
+    fl, _ = forward(params, cfg, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(fl[:, -1]), rtol=3e-4, atol=3e-4)
+    nxt = jnp.argmax(lg, -1)
+    lg2, _ = decode_step(params, cfg, nxt, cache, jnp.int32(9))
+    seq = jnp.concatenate([toks, nxt[:, None]], 1)
+    fl2, _ = forward(params, cfg, seq)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(fl2[:, -1]), rtol=5e-4, atol=5e-4)
+
+
+def test_lm_paged_decode_matches_forward(lm):
+    cfg, params = lm
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 1), 0, cfg.vocab)[:, 0]
+    pst = init_paged_kv(cfg, 2, n_blocks=16, block_size=4, max_blocks_per_seq=6)
+    seq = toks[:, None]
+    lg, pst = paged_decode_step(params, cfg, toks, pst)
+    for _ in range(7):  # crosses block boundaries
+        nxt = jnp.argmax(lg, -1)
+        seq = jnp.concatenate([seq, nxt[:, None]], 1)
+        lg, pst = paged_decode_step(params, cfg, nxt, pst)
+        fl, _ = forward(params, cfg, seq)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(fl[:, -1]), rtol=2e-3, atol=2e-3
+        )
+
+
+@pytest.mark.parametrize("opt_kind", ["adamw", "adafactor", "adam8bit"])
+def test_lm_training_reduces_loss(opt_kind):
+    cfg = TINY
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    init, update = make_optimizer(OptConfig(kind=opt_kind, lr=3e-3))
+    opt = init(params)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (4, 16), 0, cfg.vocab)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, toks, toks), has_aux=True
+        )(params)
+        params, opt = update(grads, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(12):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.15, losses
+
+
+REC_CFGS = [
+    RecConfig(
+        name="dlrm_t", kind="dlrm", n_dense=4, vocab_sizes=(50,) * 6,
+        embed_dim=8, bot_mlp=(16, 8), top_mlp=(32, 16, 1),
+    ),
+    RecConfig(
+        name="dcn_t", kind="dcn_v2", n_dense=4, vocab_sizes=(50,) * 6,
+        embed_dim=8, mlp_sizes=(32, 16), n_cross_layers=2,
+    ),
+    RecConfig(
+        name="wd_t", kind="wide_deep", n_dense=0, vocab_sizes=(50,) * 8,
+        embed_dim=8, mlp_sizes=(32, 16),
+    ),
+    RecConfig(
+        name="dien_t", kind="dien", n_dense=0, vocab_sizes=(100, 20, 20),
+        embed_dim=8, mlp_sizes=(32, 16), seq_len=12, gru_dim=16,
+    ),
+]
+
+
+@pytest.mark.parametrize("cfg", REC_CFGS, ids=lambda c: c.kind)
+def test_recsys_forward_and_train(cfg):
+    rng = np.random.default_rng(0)
+    params = init_rec(jax.random.PRNGKey(0), cfg)
+    b = 32
+    batch = {
+        "dense": jnp.asarray(rng.normal(size=(b, max(cfg.n_dense, 1))), jnp.float32)[
+            :, : cfg.n_dense
+        ],
+        "sparse": jnp.asarray(
+            rng.integers(0, 50, size=(b, cfg.n_sparse)) % np.asarray(cfg.vocab_sizes),
+            jnp.int32,
+        ),
+        "label": jnp.asarray(rng.random(b) < 0.3, jnp.float32),
+    }
+    if cfg.kind == "dien":
+        batch["history"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_sizes[0], size=(b, cfg.seq_len)), jnp.int32
+        )
+    logits = apply_rec(params, cfg, batch)
+    assert logits.shape == (b,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    init, update = make_optimizer(OptConfig(kind="adamw", lr=1e-2))
+    opt = init(params)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: rec_loss(p, cfg, batch), has_aux=True
+        )(params)
+        params, opt = update(grads, opt, params)
+        return params, opt, loss
+
+    losses = [float(step(params, opt)[2])]
+    for _ in range(10):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_retrieval_scoring_topk():
+    cfg = REC_CFGS[0]
+    params = init_rec(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    batch = {
+        "dense": jnp.zeros((1, cfg.n_dense), jnp.float32),
+        "sparse": jnp.asarray(rng.integers(0, 50, size=(1, cfg.n_sparse)), jnp.int32),
+    }
+    cand = jnp.asarray(rng.normal(size=(1000, cfg.embed_dim)), jnp.float32)
+    scores, idx = score_candidates(params, cfg, batch, cand, k=10)
+    assert idx.shape == (1, 10)
+    # scores sorted descending
+    s = np.asarray(scores)[0]
+    assert (np.diff(s) <= 1e-6).all()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg = TINY
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, params, extra={"data_cursor": 123})
+    mgr.async_save(20, params)
+    mgr.wait()
+    assert mgr.latest_step() == 20
+    restored, manifest = mgr.restore(step=10, like=params)
+    assert manifest["data_cursor"] == 123
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # retention: saving a third checkpoint evicts step 10
+    mgr.save(30, params)
+    assert mgr.latest_step() == 30
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(step=999, like=params)

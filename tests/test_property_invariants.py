@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the system's core invariants.
+
+Properties of the paper's Alg. 2/3 that must hold for ANY insert sequence:
+* conservation — every accepted vector is retrievable in exactly one chain;
+* determinism — same batch sequence => bit-identical state;
+* search-over-insert consistency — full-probe search always finds a just-
+  inserted vector as its own nearest neighbour;
+* rearrangement is a no-op on results.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.block_pool import PoolConfig, check_invariants, init_state, snapshot_ids
+from repro.core.insert import assign_clusters, make_insert_fn
+from repro.core.rearrange import make_rearrange_fn
+from repro.core.search import make_search_fn
+
+DIM = 6
+N_CLUSTERS = 3
+CFG = PoolConfig(
+    n_clusters=N_CLUSTERS, dim=DIM, block_size=4, n_blocks=256, max_chain=32
+)
+CENTS = np.random.default_rng(0).normal(size=(N_CLUSTERS, DIM)).astype(np.float32)
+
+batches = st.lists(
+    st.integers(min_value=1, max_value=17), min_size=1, max_size=6
+)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(sizes=batches, seed=st.integers(0, 2**16))
+def test_insert_conservation_and_determinism(sizes, seed):
+    rng = np.random.default_rng(seed)
+    ins = make_insert_fn(CFG)
+
+    def run():
+        state = init_state(CFG, jnp.asarray(CENTS))
+        r = np.random.default_rng(seed)
+        nid = 0
+        for b in sizes:
+            x = r.normal(size=(b, DIM)).astype(np.float32)
+            ids = np.arange(nid, nid + b, dtype=np.int32)
+            nid += b
+            state = ins(state, jnp.asarray(x), jnp.asarray(ids))
+        return state, nid
+
+    state, nid = run()
+    check_invariants(state, CFG)
+    # conservation: every id present exactly once
+    all_ids = sorted(
+        i for ids in snapshot_ids(state, CFG).values() for i in ids
+    )
+    assert all_ids == list(range(nid))
+    # determinism: replay gives identical pool bytes
+    state2, _ = run()
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**16), n0=st.integers(8, 40), n1=st.integers(1, 12))
+def test_inserted_vector_is_own_nearest_neighbor(seed, n0, n1):
+    rng = np.random.default_rng(seed)
+    ins = make_insert_fn(CFG)
+    state = init_state(CFG, jnp.asarray(CENTS))
+    x0 = rng.normal(size=(n0, DIM)).astype(np.float32)
+    state = ins(state, jnp.asarray(x0), jnp.arange(n0, dtype=jnp.int32))
+    x1 = rng.normal(size=(n1, DIM)).astype(np.float32) * 2.0
+    state = ins(
+        state, jnp.asarray(x1), jnp.arange(n0, n0 + n1, dtype=jnp.int32)
+    )
+    search = make_search_fn(CFG, nprobe=N_CLUSTERS, k=1)
+    d, i = search(state, jnp.asarray(x1))
+    assert (np.asarray(i)[:, 0] == np.arange(n0, n0 + n1)).all()
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**16))
+def test_rearrange_never_changes_results(seed):
+    rng = np.random.default_rng(seed)
+    ins = make_insert_fn(CFG)
+    rearr = make_rearrange_fn(CFG, threshold=0)  # always triggers
+    state = init_state(CFG, jnp.asarray(CENTS))
+    for step in range(3):
+        b = int(rng.integers(4, 20))
+        x = rng.normal(size=(b, DIM)).astype(np.float32)
+        base = int(state.num_vectors)
+        state = ins(
+            state, jnp.asarray(x),
+            jnp.arange(base, base + b, dtype=jnp.int32),
+        )
+    search = make_search_fn(CFG, nprobe=N_CLUSTERS, k=5)
+    q = jnp.asarray(rng.normal(size=(4, DIM)).astype(np.float32))
+    d0, i0 = search(state, q)
+    for _ in range(N_CLUSTERS):
+        state, _ = rearr(state)
+    check_invariants(state, CFG)
+    d1, i1 = search(state, q)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i0) == np.asarray(i1)).all()

@@ -1,0 +1,107 @@
+"""Serving-runtime behaviour: batching, rejection, modes, consistency."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import build_ivf
+from repro.core.scheduler import RequestRejected, RuntimeConfig, ServingRuntime
+
+
+def _data(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)).astype(np.float32) * 3
+    return (
+        centers[rng.integers(0, 8, n)]
+        + rng.normal(size=(n, d)).astype(np.float32)
+    ).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def base_index():
+    x = _data(1500, 16)
+    return x, lambda: build_ivf(
+        x, n_clusters=4, block_size=16, max_chain=64, add_batch=256,
+        capacity_vectors=8000,
+    )
+
+
+@pytest.mark.parametrize("mode", ["serial", "parallel", "fused"])
+def test_modes_serve_and_insert(base_index, mode):
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode=mode, nprobe=4, k=5, flush_interval=0.05,
+                      flush_min=4),
+    )
+    try:
+        # searches return correct neighbours
+        futs = [rt.submit_search(x[i : i + 1]) for i in range(6)]
+        for i, f in enumerate(futs):
+            d, ids = f.result(timeout=10)
+            assert ids.shape == (1, 5)
+            assert ids[0, 0] == i  # self-match
+        # online inserts become visible
+        new = _data(12, 16, seed=9) + 40.0
+        ins = rt.submit_insert(new)
+        new_ids = ins.result(timeout=10)
+        assert len(new_ids) == 12
+        time.sleep(0.1)
+        f = rt.submit_search(new[:1])
+        d, ids = f.result(timeout=10)
+        assert ids[0, 0] == new_ids[0]
+    finally:
+        rt.stop()
+
+
+def test_rejection_when_slots_exhausted(base_index):
+    x, make = base_index
+    rt = ServingRuntime(
+        make(), RuntimeConfig(mode="parallel", n_slots=2, nprobe=4, k=5)
+    )
+    try:
+        # grab both slots without letting the worker drain (burst)
+        got_reject = False
+        futs = []
+        for _ in range(50):
+            try:
+                futs.append(rt.submit_search(x[:1]))
+            except RequestRejected:
+                got_reject = True
+                break
+        assert got_reject
+        for f in futs:
+            f.result(timeout=10)
+    finally:
+        rt.stop()
+
+
+def test_insert_batching_respects_cap(base_index):
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", flush_min=8, flush_max=16,
+                      flush_interval=0.05, nprobe=4, k=5),
+    )
+    try:
+        futs = [rt.submit_insert(_data(4, 16, seed=100 + i)) for i in range(4)]
+        for f in futs:
+            f.result(timeout=10)
+        assert rt.index.ntotal >= 1500  # all applied eventually
+    finally:
+        rt.stop()
+
+
+def test_stats_collected(base_index):
+    x, make = base_index
+    rt = ServingRuntime(make(), RuntimeConfig(mode="parallel", nprobe=4, k=5))
+    try:
+        futs = [rt.submit_search(x[:1]) for _ in range(5)]
+        for f in futs:
+            f.result(timeout=10)
+        s = rt.stats()
+        assert s["search"].n == 5
+        assert s["search"].mean_ms > 0
+    finally:
+        rt.stop()

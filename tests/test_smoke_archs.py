@@ -1,0 +1,129 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions.  One test per assigned architecture."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.data.synthetic import click_stream, molecule_batch, random_graph
+from repro.models.gnn.equiformer_v2 import equiformer_loss, init_equiformer
+from repro.models.recsys.models import init_rec, rec_loss
+from repro.models.transformer import init_lm, lm_loss
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+LM_ARCHS = [
+    "llama3-8b", "qwen3-1.7b", "qwen1.5-110b", "kimi-k2-1t-a32b",
+    "llama4-maverick-400b-a17b",
+]
+REC_ARCHS = ["dlrm-mlperf", "dcn-v2", "wide-deep", "dien"]
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).smoke_config
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    init, update = make_optimizer(OptConfig(kind="adamw", lr=1e-3))
+    opt = init(params)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, toks, toks), has_aux=True
+        )(params)
+        params, opt = update(grads, opt, params)
+        return params, opt, loss
+
+    params, opt, loss = step(params, opt)
+    assert np.isfinite(float(loss)), arch_id
+    logits_shape = (2, 16, cfg.vocab)
+    from repro.models.transformer import forward
+
+    logits, _ = forward(params, cfg, toks)
+    assert logits.shape == logits_shape
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", REC_ARCHS)
+def test_recsys_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).smoke_config
+    params = init_rec(jax.random.PRNGKey(0), cfg)
+    stream = click_stream(
+        16, max(cfg.n_dense, 1), cfg.vocab_sizes, seq_len=cfg.seq_len
+    )
+    raw = next(stream)
+    batch = {
+        "dense": jnp.asarray(raw["dense"][:, : cfg.n_dense]),
+        "sparse": jnp.asarray(raw["sparse"]),
+        "label": jnp.asarray(raw["label"]),
+    }
+    if cfg.kind == "dien":
+        batch["history"] = jnp.asarray(raw["history"])
+    loss, _ = jax.jit(lambda p: rec_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), arch_id
+    grads = jax.grad(lambda p: rec_loss(p, cfg, batch)[0])(params)
+    assert all(
+        np.isfinite(np.asarray(g, np.float32)).all()
+        for g in jax.tree.leaves(grads)
+    )
+
+
+def test_equiformer_smoke_full_graph():
+    cfg = get_arch("equiformer-v2").smoke_config
+    g = random_graph(64, 4, cfg.d_feat_in, n_classes=cfg.n_out)
+    batch = dict(
+        node_feat=jnp.asarray(g["node_feat"]), pos=jnp.asarray(g["pos"]),
+        edge_src=jnp.asarray(g["edge_src"]), edge_dst=jnp.asarray(g["edge_dst"]),
+        label=jnp.asarray(g["label"]),
+    )
+    loss, _ = equiformer_loss(
+        init_equiformer(jax.random.PRNGKey(0), cfg), cfg, batch
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_equiformer_smoke_molecule_batch():
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_arch("equiformer-v2").smoke_config, readout="graph", n_out=1,
+        d_feat_in=16,
+    )
+    m = molecule_batch(8, 6, 10)
+    batch = {k: (jnp.asarray(v) if not np.isscalar(v) else v) for k, v in m.items()}
+    loss, _ = equiformer_loss(
+        init_equiformer(jax.random.PRNGKey(0), cfg), cfg, batch
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_equiformer_smoke_sampled_block():
+    from repro.models.gnn.sampler import CSRGraph, sample_block
+    from repro.models.gnn.equiformer_v2 import equiformer_forward
+
+    cfg = get_arch("equiformer-v2").smoke_config
+    g = random_graph(500, 8, cfg.d_feat_in)
+    graph = CSRGraph.from_edges(
+        g["edge_src"].astype(np.int64), g["edge_dst"].astype(np.int64), 500
+    )
+    rng = np.random.default_rng(0)
+    block = sample_block(
+        graph, np.arange(16), (4, 3), rng, max_nodes=256, max_edges=512
+    )
+    params = init_equiformer(jax.random.PRNGKey(0), cfg)
+    out = equiformer_forward(
+        params, cfg,
+        jnp.asarray(g["node_feat"][block["node_ids"]]),
+        jnp.asarray(g["pos"][block["node_ids"]]),
+        jnp.asarray(block["edge_src"]),
+        jnp.asarray(block["edge_dst"]),
+    )
+    assert out.shape == (256, cfg.n_out)
+    assert np.isfinite(np.asarray(out)).all()
+    assert block["n_edges"] > 0
