@@ -1,14 +1,27 @@
 """ANNS search-path ladder (the §Perf ANNS hillclimb artifact):
 
 chain_walk (paper-faithful linked list) -> block_table (vectorised gather)
--> union (dedup across batch) -> union_pallas (scalar-prefetch kernel).
+-> union (dedup across batch) -> union_pallas (scalar-prefetch kernel)
+-> union_fused (streaming top-k selection, no [C, Q, T] HBM writeback).
 
 CPU wall-clock; the structural deltas (dependent-gather hops vs one gather;
-per-query vs per-batch block reads) carry to TPU where they are DMA-count
-and HBM-traffic differences.
+per-query vs per-batch block reads; [C, Q, T] score writeback vs [Q, K']
+accumulator) carry to TPU where they are DMA-count and HBM-traffic
+differences.  ``intermediate_bytes`` is the peak scoring intermediate each
+path materializes between scoring and selection:
+
+* union / union_pallas: the full score tensor, ``CB * Q * T * 4`` bytes
+  (plus the same again for the masked copy fed to top_k);
+* union_fused / union_fused_scan: the on-chip accumulator, ``Q * K' * 8``
+  bytes (f32 score + i32 id) — the quantity this PR drives to O(Q*K').
+
+Writes ``BENCH_scan_paths.json`` at the repo root when run as a script.
 """
 
 from __future__ import annotations
+
+import json
+import pathlib
 
 import numpy as np
 import jax
@@ -16,38 +29,92 @@ import jax.numpy as jnp
 
 from benchmarks.common import timed
 from repro.core import build_ivf
-from repro.core.search import make_search_fn
+from repro.core.search import default_kprime, make_search_fn
 from repro.data.synthetic import sift_like
 
-PATHS = ("chain_walk", "block_table", "union", "union_pallas")
+PATHS = (
+    "chain_walk",
+    "block_table",
+    "union",
+    "union_pallas",
+    "union_fused",
+    "union_fused_scan",
+)
 
 
-def run(n=20_000, nprobe=8, k=10, batch=10):
-    corpus = sift_like(n, 128, seed=7)
-    idx = build_ivf(corpus, n_clusters=64, block_size=64, max_chain=64,
-                    nprobe=nprobe, k=k, add_batch=8192)
-    rng = np.random.default_rng(8)
-    q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
+                       t: int, k: int) -> int:
+    """Peak scoring-intermediate bytes between scoring and selection."""
+    cb = q * nprobe * budget  # candidate blocks (union is NULL-padded)
+    if path == "union_fused":
+        return q * default_kprime(k) * 8  # f32 dist + i32 id accumulator
+    if path == "union_fused_scan":
+        # lax.scan fallback: one [Q, chunk*T] score+id chunk per step,
+        # merged into the [Q, K'] carry (chunk = 64 blocks)
+        return q * (64 * t + default_kprime(k)) * 8
+    if path.startswith("union"):
+        return cb * q * t * 4  # full [CB, Q, T] f32 writeback
+    if path == "block_table":
+        return q * nprobe * budget * t * 4  # [Q, C, T] scores
+    # chain_walk: one [Q, nprobe, T] frontier per hop
+    return q * nprobe * t * 4
+
+
+# (corpus size, block size T, query batch Q) — spans batch sizes and chain
+# depths (smaller T => deeper per-cluster chains for the same corpus)
+CONFIGS = ((20_000, 64, 10), (20_000, 64, 64), (10_000, 32, 10))
+
+
+def run(nprobe=8, k=10, configs=CONFIGS, iters=3):
     rows = []
-    ref_ids = None
-    for path in PATHS:
-        fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k, path=path)
-        d, ids = fn(idx.state, q)
-        jax.block_until_ready(ids)
-        if ref_ids is None:
-            ref_ids = np.asarray(ids)
-        else:
-            assert (np.asarray(ids) == ref_ids).all(), f"{path} diverged"
-        t = timed(lambda: fn(idx.state, q), iters=9)
-        rows.append({"path": path, "us_per_call": round(t * 1e6, 1)})
+    indexes: dict = {}
+    for n, block_size, batch in configs:
+        if (n, block_size) not in indexes:
+            corpus = sift_like(n, 128, seed=7)
+            indexes[(n, block_size)] = (corpus, build_ivf(
+                corpus, n_clusters=64, block_size=block_size,
+                max_chain=64, nprobe=nprobe, k=k, add_batch=8192))
+        corpus, idx = indexes[(n, block_size)]
+        budget = idx._chain_budget()  # live chain depth, pow2-bucketed
+        rng = np.random.default_rng(8)
+        q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+        ref_ids = None
+        for path in PATHS:
+            fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k,
+                                path=path, chain_budget=budget)
+            d, ids = fn(idx.state, q)
+            jax.block_until_ready(ids)
+            if ref_ids is None:
+                ref_ids = np.asarray(ids)
+            else:
+                assert (np.asarray(ids) == ref_ids).all(), (
+                    f"{path} diverged (batch={batch}, T={block_size})"
+                )
+            t = timed(lambda: fn(idx.state, q), iters=iters)
+            rows.append({
+                "path": path,
+                "n": n,
+                "batch": batch,
+                "block_size": block_size,
+                "chain_budget": budget,
+                "us_per_call": round(t * 1e6, 1),
+                "intermediate_bytes": intermediate_bytes(
+                    path, q=batch, nprobe=nprobe, budget=budget,
+                    t=block_size, k=k,
+                ),
+            })
     return rows
 
 
 def main():
     rows = run()
-    print("path,us_per_call")
+    print("path,n,batch,block_size,us_per_call,intermediate_bytes")
     for r in rows:
-        print(f"{r['path']},{r['us_per_call']}")
+        print(f"{r['path']},{r['n']},{r['batch']},{r['block_size']},"
+              f"{r['us_per_call']},{r['intermediate_bytes']}")
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scan_paths.json"
+    out.write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"wrote {out}")
     return rows
 
 

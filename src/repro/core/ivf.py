@@ -37,7 +37,9 @@ class IVFIndexConfig:
     nprobe: int = 16
     k: int = 10
     rearrange_threshold: int = 10_000  # T'_m (paper Table 1 sweeps this)
-    search_path: str = "block_table"  # "block_table" | "chain_walk"
+    # "block_table" | "chain_walk" | "union" | "union_pallas" |
+    # "union_fused" | "union_fused_scan" (see core.search / docs/search_paths.md)
+    search_path: str = "block_table"
     use_kernel: bool = False  # route scan through Pallas ops
     kmeans_iters: int = 10
     seed: int = 0

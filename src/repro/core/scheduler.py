@@ -43,7 +43,11 @@ from repro.core.insert import assign_clusters, insert_payload
 from repro.core.ivf import IVFIndex
 from repro.core.metrics import LatencyStats
 from repro.core import pq as pqmod
-from repro.core.search import search_block_table, search_union
+from repro.core.search import (
+    search_block_table,
+    search_union,
+    search_union_fused,
+)
 
 
 class RequestRejected(RuntimeError):
@@ -68,7 +72,7 @@ class RuntimeConfig:
     nprobe: int = 16
     k: int = 10
     mode: str = "parallel"  # serial | parallel | fused
-    search_path: str = "block_table"  # see core.search
+    search_path: str = "block_table"  # block_table | union | union_fused
 
 
 class ServingRuntime:
@@ -99,9 +103,17 @@ class ServingRuntime:
     def _build_steps(self):
         cfg, pc = self.cfg, self.pool_cfg
         pq = self.index.pq
+        if pc.payload != "flat" and cfg.search_path != "block_table":
+            # fail at construction, not inside the worker thread's first
+            # jit trace (the union paths score raw vectors only)
+            raise ValueError(
+                f"search_path={cfg.search_path!r} requires a flat payload; "
+                "PQ indexes must use block_table"
+            )
         search_impl = {
             "block_table": search_block_table,
             "union": search_union,
+            "union_fused": search_union_fused,
         }.get(cfg.search_path, search_block_table)
 
         def _score_fn(state):
@@ -167,21 +179,42 @@ class ServingRuntime:
 
     # --------------------------------------------------------- workers ---
     def _drain_inserts(self) -> list[_Timed]:
-        """Dynamic batching policy from §3.3."""
+        """Dynamic batching policy from §3.3.
+
+        A running row count is kept instead of re-concatenating every pending
+        payload per queue pop (that was quadratic in batch size)."""
         items: list[_Timed] = []
+        pending_rows = 0
         deadline = time.perf_counter() + self.cfg.flush_interval
         while not self._stop.is_set():
             timeout = deadline - time.perf_counter()
             if timeout <= 0:
                 break
             try:
-                items.append(self._insert_q.get(timeout=min(timeout, 0.01)))
+                item = self._insert_q.get(timeout=min(timeout, 0.01))
             except queue.Empty:
                 continue
-            if len(self._pending_vectors(items)) >= self.cfg.flush_min:
+            items.append(item)
+            pending_rows += len(np.atleast_2d(item.payload))
+            if pending_rows >= self.cfg.flush_min:
                 break
-        # cap at flush_max vectors
         return items
+
+    def _split_flush(self, items: list[_Timed]):
+        """Longest whole-item prefix within ``flush_max`` rows + overflow.
+
+        Items are never split mid-payload (each future must resolve with its
+        exact ids), so a single oversized item is dispatched alone and may
+        exceed the cap; overflow items are requeued, never dropped."""
+        take: list[_Timed] = []
+        rows = 0
+        for pos, it in enumerate(items):
+            n = len(np.atleast_2d(it.payload))
+            if take and rows + n > self.cfg.flush_max:
+                return take, items[pos:]
+            take.append(it)
+            rows += n
+        return take, []
 
     @staticmethod
     def _pending_vectors(items: list[_Timed]) -> np.ndarray:
@@ -206,7 +239,10 @@ class ServingRuntime:
         return out, valid
 
     def _apply_insert(self, items: list[_Timed]):
-        vecs = self._pending_vectors(items)[: self.cfg.flush_max]
+        items, overflow = self._split_flush(items)
+        for it in overflow:  # beyond flush_max: requeue, never drop
+            self._insert_q.put(it)
+        vecs = self._pending_vectors(items)
         b = len(vecs)
         ids = np.arange(
             self.index._next_id, self.index._next_id + b, dtype=np.int32
@@ -225,10 +261,17 @@ class ServingRuntime:
             )
             st = self.index.state
         jax.block_until_ready(st.cluster_len)
+        self._resolve_inserts(items, ids)
+
+    def _resolve_inserts(self, items: list[_Timed], ids: np.ndarray):
+        """Each future gets exactly the ids of its own vectors."""
         t = time.perf_counter()
+        off = 0
         for it in items:
+            n = len(np.atleast_2d(it.payload))
             self._insert_lat.append(t - it.t_arrival)
-            it.future.set_result(ids)
+            it.future.set_result(ids[off : off + n])
+            off += n
 
     def _insert_loop(self):
         if self.cfg.mode == "serial":
@@ -315,7 +358,10 @@ class ServingRuntime:
         qs = [np.atleast_2d(x.payload) for x in s_items]
         counts = [len(q) for q in qs]
         qbatch = np.concatenate(qs, 0)
-        vecs = self._pending_vectors(i_items)[: self.cfg.flush_max]
+        i_items, overflow = self._split_flush(i_items)
+        for it in overflow:  # beyond flush_max: requeue, never drop
+            self._insert_q.put(it)
+        vecs = self._pending_vectors(i_items)
         b = len(vecs)
         ids = np.arange(
             self.index._next_id, self.index._next_id + b, dtype=np.int32
@@ -344,6 +390,4 @@ class ServingRuntime:
             it.future.set_result((d[off : off + c], i[off : off + c]))
             off += c
             self._slots.release()
-        for it in i_items:
-            self._insert_lat.append(t - it.t_arrival)
-            it.future.set_result(ids)
+        self._resolve_inserts(i_items, ids)

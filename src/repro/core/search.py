@@ -14,6 +14,12 @@ Two scan paths are provided and benchmarked against each other in §Perf:
 
 The distance scan itself can additionally be routed through the Pallas
 kernel (``repro.kernels.ivf_scan``) via ``scan_impl="pallas"``.
+
+* ``union_fused`` — streaming selection on top of the union scan: scoring
+  and top-k are fused in one Pallas kernel keeping a per-query top-``K'``
+  accumulator in VMEM, so the ``[C, Q, T]`` score tensor is never
+  materialized to HBM (``union_fused_scan`` is the chunked ``lax.scan``
+  fallback with the same semantics).  See ``docs/search_paths.md``.
 """
 
 from __future__ import annotations
@@ -174,6 +180,27 @@ def search_chain_walk(
 # ---------------------------------------------------------------------------
 
 
+def _union_candidates(
+    cfg: PoolConfig,
+    state: IVFState,
+    queries: jax.Array,
+    nprobe: int,
+    chain_budget: Optional[int],
+):
+    """Shared prologue of the union paths: probe, dedup across the batch,
+    flatten the block table.  Returns (flat_blocks [CB], member [Q, CU], mc)."""
+    q = queries.shape[0]
+    mc = min(chain_budget or cfg.max_chain, cfg.max_chain)
+    probe_idx, _ = coarse_probe(state, queries, nprobe)  # [Q, NP]
+    union = jnp.unique(
+        probe_idx.reshape(-1), size=q * nprobe, fill_value=NULL
+    )  # [CU] sorted, NULL-padded
+    member = (probe_idx[:, :, None] == union[None, None, :]).any(axis=1)  # [Q, CU]
+    blocks = state.cluster_blocks[jnp.maximum(union, 0), :mc]  # [CU, MC]
+    blocks = jnp.where((union != NULL)[:, None], blocks, NULL)
+    return blocks.reshape(-1), member, mc  # flat_blocks [CB = CU*MC]
+
+
 def search_union(
     cfg: PoolConfig,
     state: IVFState,
@@ -186,15 +213,9 @@ def search_union(
     chain_budget: Optional[int] = None,
 ):
     q = queries.shape[0]
-    mc = min(chain_budget or cfg.max_chain, cfg.max_chain)
-    probe_idx, _ = coarse_probe(state, queries, nprobe)  # [Q, NP]
-    union = jnp.unique(
-        probe_idx.reshape(-1), size=q * nprobe, fill_value=NULL
-    )  # [CU] sorted, NULL-padded
-    member = (probe_idx[:, :, None] == union[None, None, :]).any(axis=1)  # [Q, CU]
-    blocks = state.cluster_blocks[jnp.maximum(union, 0), :mc]  # [CU, MC]
-    blocks = jnp.where((union != NULL)[:, None], blocks, NULL)
-    flat_blocks = blocks.reshape(-1)  # [CB = CU*MC]
+    flat_blocks, member, mc = _union_candidates(
+        cfg, state, queries, nprobe, chain_budget
+    )
 
     if scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_scan
@@ -218,6 +239,84 @@ def search_union(
     return -neg_d, out_ids
 
 
+# ---------------------------------------------------------------------------
+# Fused streaming-selection union scan (§Perf headline): identical candidate
+# set to ``search_union``, but scoring and selection are fused — a running
+# per-query top-K' accumulator is kept on-chip across the candidate-block
+# scan, so only [Q, K'] (score, id) pairs are written back instead of the
+# full [CB, Q, T] score tensor.  The final ``top_k(k)`` runs over K'
+# candidates, not CB*T.  See docs/search_paths.md for when to pick it.
+# ---------------------------------------------------------------------------
+
+
+def default_kprime(k: int) -> int:
+    """Accumulator width: smallest lane-aligned (128) multiple >= k."""
+    return max(128, -(-k // 128) * 128)
+
+
+def search_union_fused(
+    cfg: PoolConfig,
+    state: IVFState,
+    queries: jax.Array,
+    *,
+    nprobe: int,
+    k: int,
+    score_fn: Optional[Callable] = None,  # unused (flat payload only)
+    scan_impl: str = "pallas",
+    chain_budget: Optional[int] = None,
+    kprime: Optional[int] = None,
+):
+    if cfg.payload != "flat":
+        raise NotImplementedError(
+            "union_fused scores raw vectors; use block_table for PQ payloads"
+        )
+    flat_blocks, member, mc = _union_candidates(
+        cfg, state, queries, nprobe, chain_budget
+    )
+    member_b = jnp.repeat(member, mc, axis=1)  # [Q, CB]
+    cand_ok = member_b & (flat_blocks != NULL)[None, :]
+    # Candidate compaction: the union block table is NULL-padded (every
+    # probed cluster is padded to the chain budget, and the union itself is
+    # padded to Q*nprobe slots) and each dead slot would cost a full grid
+    # step / DMA in the streaming kernel.  Each live block appears at most
+    # once (chains are disjoint), so the live count is statically bounded by
+    # the pool size P — stable-sort dead slots to the back and truncate.
+    cb = flat_blocks.shape[0]
+    cap = min(cb, state.pool_payload.shape[0])
+    if cap < cb:
+        perm = jnp.argsort(flat_blocks == NULL, stable=True)[:cap]
+        flat_blocks = flat_blocks[perm]
+        cand_ok = cand_ok[:, perm]
+    kp = kprime or default_kprime(k)
+    assert kp >= k, (kp, k)
+    if scan_impl == "pallas":
+        from repro.kernels.ops import ivf_block_topk
+
+        d, i = ivf_block_topk(
+            queries, state.pool_payload, flat_blocks, state.pool_ids,
+            cand_ok, kprime=kp,
+        )
+    elif scan_impl == "scan":
+        from repro.kernels.ivf_scan import ivf_block_topk_scan
+
+        d, i = ivf_block_topk_scan(
+            queries, state.pool_payload, flat_blocks, state.pool_ids,
+            cand_ok, kprime=kp,
+        )
+    else:
+        from repro.kernels.ref import ivf_block_topk_ref
+
+        d, i = ivf_block_topk_ref(
+            queries, state.pool_payload, flat_blocks, state.pool_ids,
+            cand_ok, kprime=kp,
+        )
+    # second selection stage: k out of the K' streamed survivors
+    neg_d, sel = jax.lax.top_k(-d, k)
+    out_ids = jnp.take_along_axis(i, sel, axis=1)
+    out_ids = jnp.where(jnp.isinf(-neg_d), NULL, out_ids)
+    return -neg_d, out_ids
+
+
 def make_search_fn(
     cfg: PoolConfig,
     *,
@@ -233,6 +332,8 @@ def make_search_fn(
         "chain_walk": search_chain_walk,
         "union": search_union,
         "union_pallas": partial(search_union, scan_impl="pallas"),
+        "union_fused": search_union_fused,
+        "union_fused_scan": partial(search_union_fused, scan_impl="scan"),
     }[path]
 
     @jax.jit

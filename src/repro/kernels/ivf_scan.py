@@ -17,6 +17,20 @@ Design (TPU re-derivation of the paper's coalesced scan, DESIGN.md §8):
   (configs use D ∈ {64, 128}, T_m multiples of 128 in production).
 
 Hole blocks (id == -1) are clamped to block 0; callers mask their scores.
+
+Two kernels live here:
+
+* ``ivf_block_scan``   — scores only: emits the full ``[C, Q, T]`` tensor to
+  HBM; the caller masks and runs one monolithic ``top_k`` over ``C*T``.
+* ``ivf_block_topk``   — **fused streaming selection**: a per-query running
+  top-``K'`` accumulator lives in VMEM scratch across the candidate-block
+  grid.  Each grid step scores one pool block, fuses hole/membership/empty
+  masking into the epilogue, and merges the masked ``[Q_t, T]`` partials into
+  the accumulator with a co-sorted concat (two-stage selection).  Only
+  ``[Q, K']`` (score, vector-id) pairs ever leave the kernel — the ``C·Q·T``
+  intermediate never touches HBM.  The grid is tiled over Q so large batches
+  keep the accumulator + query tile inside the VMEM budget (see
+  docs/search_paths.md for the budget math).
 """
 
 from __future__ import annotations
@@ -73,3 +87,172 @@ def ivf_block_scan(
         out_shape=jax.ShapeDtypeStruct((c, q, t), jnp.float32),
         interpret=interpret,
     )(safe_ids, queries, pool)
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming top-k selection (no [C, Q, T] writeback)
+# ---------------------------------------------------------------------------
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _topk_kernel(
+    ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    q_ref,  # [Q_t, D]
+    ok_ref,  # [Q_t, 1] i32 candidate validity (membership & non-hole)
+    pool_ref,  # [T, D] current candidate block
+    pid_ref,  # [1, T] i32 vector ids of the block
+    out_d_ref,  # [Q_t, K']
+    out_i_ref,  # [Q_t, K'] i32
+    acc_d_ref,  # VMEM scratch [Q_t, K'] running best distances
+    acc_i_ref,  # VMEM scratch [Q_t, K'] i32 running best ids
+):
+    """Grid (qi, ci): score block ids[ci] and merge into the accumulator."""
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_d_ref[:] = jnp.full(acc_d_ref.shape, jnp.inf, jnp.float32)
+        acc_i_ref[:] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+
+    q = q_ref[:]  # [Q_t, D]
+    blk = pool_ref[:]  # [T, D]
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q_t, 1]
+    vn = jnp.sum(blk * blk, axis=-1)[None, :]  # [1, T]
+    dots = jax.lax.dot_general(
+        q, blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q_t, T] on the MXU
+    scores = qn + vn - 2.0 * dots
+    # fused epilogue: invalid slots (hole block, non-member query, empty
+    # NULL-id slot) never leave the kernel
+    ok = (ok_ref[:] != 0) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    scores = jnp.where(ok, scores, jnp.inf)
+    cand_i = jnp.where(ok, jnp.broadcast_to(pid_ref[:], scores.shape), -1)
+    # two-stage selection: merge the masked partial into the running top-K'
+    # via co-sorted concat (stable ascending sort keyed on distance)
+    cat_d = jnp.concatenate([acc_d_ref[:], scores], axis=1)
+    cat_i = jnp.concatenate([acc_i_ref[:], cand_i], axis=1)
+    srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+    kp = acc_d_ref.shape[1]
+    acc_d_ref[:] = srt_d[:, :kp]
+    acc_i_ref[:] = srt_i[:, :kp]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        out_d_ref[:] = acc_d_ref[:]
+        out_i_ref[:] = acc_i_ref[:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kprime", "q_tile", "interpret")
+)
+def ivf_block_topk(
+    queries: jax.Array,  # [Q, D] f32
+    pool: jax.Array,  # [P, T, D] f32
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via cand_ok)
+    pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    cand_ok: jax.Array,  # [Q, C] bool/i32 per-(query, candidate) validity
+    *,
+    kprime: int,
+    q_tile: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] ids)
+    """Streaming top-``kprime``: one HBM read per candidate block, ``[Q, K']``
+    writeback.  Rows of the output are sorted ascending; masked-out slots
+    carry ``inf`` / id ``-1``.
+
+    The accumulator merge uses ``jax.lax.sort`` inside the kernel body; this
+    is validated in interpret mode (CPU CI) but not yet compiled via Mosaic
+    on real TPU hardware — if the sort lowering is unsupported there, swap
+    the merge for a bitonic network or route through ``ivf_block_topk_scan``
+    (same semantics, pure XLA) until it is."""
+    q, d = queries.shape
+    p, t, d2 = pool.shape
+    assert d == d2, (d, d2)
+    c = block_ids.shape[0]
+    qt = min(q_tile, _round_up(q, 8))
+    qp = _round_up(q, qt)
+    queries = jnp.pad(queries, ((0, qp - q), (0, 0)))
+    cand_ok = jnp.pad(cand_ok.astype(jnp.int32), ((0, qp - q), (0, 0)))
+    safe_ids = jnp.maximum(block_ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qp // qt, c),
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
+            pl.BlockSpec((None, t, d), lambda qi, ci, ids: (ids[ci], 0, 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qt, kprime), jnp.float32),
+            pltpu.VMEM((qt, kprime), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        _topk_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kprime), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe_ids, queries, cand_ok, pool, pool_ids)
+    return out_d[:q], out_i[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "chunk"))
+def ivf_block_topk_scan(
+    queries: jax.Array,  # [Q, D] f32
+    pool: jax.Array,  # [P, T, D] f32
+    block_ids: jax.Array,  # [C] i32
+    pool_ids: jax.Array,  # [P, T] i32
+    cand_ok: jax.Array,  # [Q, C] bool/i32
+    *,
+    kprime: int,
+    chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked ``lax.scan`` fallback for the fused path (CPU / interpret
+    mode): same streaming top-``kprime`` semantics, peak intermediate
+    ``[Q, chunk*T]`` instead of ``[C, Q, T]``."""
+    q, d = queries.shape
+    p, t, _ = pool.shape
+    c = block_ids.shape[0]
+    cp = _round_up(c, chunk)
+    nch = cp // chunk
+    ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
+    ok_p = jnp.pad(cand_ok.astype(bool), ((0, 0), (0, cp - c)))
+    safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
+    ok_ch = ok_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+    qn = jnp.sum(queries * queries, axis=-1)[:, None, None]  # [Q, 1, 1]
+
+    def step(carry, xs):
+        acc_d, acc_i = carry
+        sc, ok = xs  # [chunk], [Q, chunk]
+        blocks = pool[sc]  # [chunk, T, D]
+        vids = pool_ids[sc]  # [chunk, T]
+        vn = jnp.sum(blocks * blocks, axis=-1)  # [chunk, T]
+        dots = jnp.einsum("qd,ctd->qct", queries, blocks)
+        scores = qn + vn[None, :, :] - 2.0 * dots  # [Q, chunk, T]
+        okf = ok[:, :, None] & (vids != -1)[None, :, :]
+        scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
+        cids = jnp.where(okf, jnp.broadcast_to(vids, okf.shape), -1)
+        cat_d = jnp.concatenate([acc_d, scores], axis=1)
+        cat_i = jnp.concatenate([acc_i, cids.reshape(q, -1)], axis=1)
+        srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+        return (srt_d[:, :kprime], srt_i[:, :kprime]), None
+
+    init = (
+        jnp.full((q, kprime), jnp.inf, jnp.float32),
+        jnp.full((q, kprime), -1, jnp.int32),
+    )
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ok_ch))
+    return acc_d, acc_i

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.ivf_scan import ivf_block_scan as _ivf_block_scan
+from repro.kernels.ivf_scan import ivf_block_topk as _ivf_block_topk
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_decode_attention,
 )
@@ -23,6 +24,16 @@ def _interpret() -> bool:
 def ivf_block_scan(queries, pool, block_ids):
     """[Q,D] x [P,T,D] x [C] -> [C,Q,T] squared-L2 scores."""
     return _ivf_block_scan(queries, pool, block_ids, interpret=_interpret())
+
+
+def ivf_block_topk(queries, pool, block_ids, pool_ids, cand_ok, *, kprime,
+                   q_tile: int = 128):
+    """Fused streaming selection: [Q,D] x [P,T,D] x [C] -> ([Q,K'], [Q,K'])
+    (ascending dists, vector ids) without materializing [C,Q,T]."""
+    return _ivf_block_topk(
+        queries, pool, block_ids, pool_ids, cand_ok,
+        kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+    )
 
 
 def pq_adc(lut, codes, tile_n: int = 1024):

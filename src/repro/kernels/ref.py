@@ -23,6 +23,34 @@ def ivf_block_scan_ref(
     return qn[None, :, None] + vn[:, None, :] - 2.0 * dots
 
 
+def ivf_block_topk_ref(
+    queries: jax.Array,  # [Q, D]
+    pool: jax.Array,  # [P, T, D]
+    block_ids: jax.Array,  # [C] i32, -1 = hole
+    pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    cand_ok: jax.Array,  # [Q, C] per-(query, candidate) validity mask
+    *,
+    kprime: int,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist ascending, [Q, K'] ids)
+    """Oracle for the fused streaming top-k scan: materialize everything,
+    mask, and sort — invalid slots come back as (inf, -1)."""
+    scores = ivf_block_scan_ref(queries, pool, block_ids)  # [C, Q, T]
+    vids = pool_ids[jnp.maximum(block_ids, 0)]  # [C, T]
+    ok = cand_ok.astype(bool)[:, :, None] & (vids != -1)[None, :, :]
+    q = queries.shape[0]
+    flat_d = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), jnp.inf)
+    flat_d = flat_d.reshape(q, -1)
+    flat_i = jnp.where(ok, jnp.broadcast_to(vids[None], ok.shape), -1)
+    flat_i = flat_i.reshape(q, -1)
+    n = flat_d.shape[1]
+    if n < kprime:
+        pad = kprime - n
+        flat_d = jnp.pad(flat_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        flat_i = jnp.pad(flat_i, ((0, 0), (0, pad)), constant_values=-1)
+    srt_d, srt_i = jax.lax.sort((flat_d, flat_i), dimension=1, num_keys=1)
+    return srt_d[:, :kprime], srt_i[:, :kprime]
+
+
 def pq_adc_ref(
     lut: jax.Array,  # [R, M, K] per-row ADC table
     codes: jax.Array,  # [R, N, M] integer codes in [0, K)

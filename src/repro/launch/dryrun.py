@@ -41,6 +41,8 @@ def _compile_once(spec, shape_name, mesh, cfg_override=None):
         compiled = lowered.compile()
     t1 = time.time()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     return cell, compiled, {
         "compile_s": round(t1 - t0, 1),
         "flops": float(cost.get("flops", 0.0)),

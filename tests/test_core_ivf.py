@@ -218,7 +218,7 @@ def test_insert_latency_independent_of_list_length():
     assert c_long < 5 * c_short + 0.05, (c_short, c_long)
 
 
-@pytest.mark.parametrize("path", ["union", "union_pallas"])
+@pytest.mark.parametrize("path", ["union", "union_pallas", "union_fused_scan"])
 def test_union_search_agrees_with_block_table(small_index, path):
     idx, x = small_index
     rng = np.random.default_rng(21)

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ivf_scan import ivf_block_scan
+from repro.kernels.ivf_scan import (
+    ivf_block_scan,
+    ivf_block_topk,
+    ivf_block_topk_scan,
+)
 from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.pq_adc import pq_adc
 
@@ -28,6 +32,122 @@ def test_ivf_block_scan_matches_ref(q, d, p, t, c):
     got = ivf_block_scan(queries, pool, ids, interpret=True)
     want = ref.ivf_block_scan_ref(queries, pool, ids)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
+                 member_frac=0.7):
+    """Union-scan shaped inputs: hole blocks (-1 in the NULL-padded union),
+    empty (-1) id slots, and per-(query, candidate) membership."""
+    rng = np.random.default_rng(seed)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
+    ids = rng.integers(0, p, size=(c,)).astype(np.int32)
+    ids[rng.random(c) < hole_frac] = -1  # hole blocks
+    pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
+    pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
+    cand_ok = (rng.random((q, c)) < member_frac) & (ids != -1)[None, :]
+    return queries, pool, jnp.asarray(ids), jnp.asarray(pool_ids), jnp.asarray(cand_ok)
+
+
+@pytest.mark.parametrize(
+    "q,d,p,t,c,kp",
+    [
+        (8, 64, 16, 128, 4, 16),
+        (13, 32, 9, 16, 11, 8),  # Q not a multiple of 8 (pad path)
+        (5, 128, 4, 64, 3, 256),  # kprime > live candidates
+        (1, 64, 6, 8, 7, 4),
+        (130, 32, 8, 16, 5, 8),  # Q > q_tile default tile split
+    ],
+)
+def test_ivf_block_topk_matches_ref(q, d, p, t, c, kp):
+    queries, pool, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, seed=q + c)
+    want_d, want_i = ref.ivf_block_topk_ref(
+        queries, pool, ids, pool_ids, ok, kprime=kp
+    )
+    got_d, got_i = ivf_block_topk(
+        queries, pool, ids, pool_ids, ok, kprime=kp, interpret=True
+    )
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(got_i, want_i)
+    sc_d, sc_i = ivf_block_topk_scan(
+        queries, pool, ids, pool_ids, ok, kprime=kp, chunk=4
+    )
+    np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(sc_i, want_i)
+
+
+def test_ivf_block_topk_all_holes_returns_inf():
+    """A NULL-padded union with every candidate masked yields (inf, -1)."""
+    q, d, p, t, c = 4, 16, 3, 8, 5
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
+    ids = jnp.full((c,), -1, jnp.int32)
+    pool_ids = jnp.zeros((p, t), jnp.int32)
+    ok = jnp.zeros((q, c), bool)
+    d_out, i_out = ivf_block_topk(
+        queries, pool, ids, pool_ids, ok, kprime=8, interpret=True
+    )
+    assert np.isinf(np.asarray(d_out)).all()
+    assert (np.asarray(i_out) == -1).all()
+
+
+@pytest.fixture(scope="module")
+def fused_index():
+    from repro.core import build_ivf
+
+    rng = np.random.default_rng(3)
+    corpus = rng.normal(size=(1200, 32)).astype(np.float32)
+    idx = build_ivf(corpus, n_clusters=8, block_size=16, max_chain=32,
+                    nprobe=4, k=10, add_batch=512)
+    q = jnp.asarray(corpus[rng.integers(0, len(corpus), 6)] + 0.001)
+    return corpus, idx, q
+
+
+@pytest.mark.parametrize("k", [1, 10, 100])
+def test_union_fused_bit_identical_to_union(fused_index, k):
+    """Acceptance: (dist, id) bit-identical to search_union, k in {1,10,100}."""
+    from repro.core.search import make_search_fn
+
+    corpus, idx, q = fused_index
+    d0, i0 = make_search_fn(idx.pool_cfg, nprobe=4, k=k, path="union")(
+        idx.state, q
+    )
+    for path in ("union_fused", "union_fused_scan"):
+        d, i = make_search_fn(idx.pool_cfg, nprobe=4, k=k, path=path)(
+            idx.state, q
+        )
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+
+
+def test_union_fused_full_probe_matches_exact_oracle(fused_index):
+    """Probing every cluster, the fused path must equal brute force."""
+    from repro.core.search import exact_search, make_search_fn
+
+    corpus, idx, q = fused_index
+    d, i = make_search_fn(
+        idx.pool_cfg, nprobe=idx.pool_cfg.n_clusters, k=10, path="union_fused"
+    )(idx.state, q)
+    de, ie = exact_search(jnp.asarray(corpus), q, 10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ie))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(de), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_union_fused_k_exceeds_live_candidates(fused_index):
+    """k > vectors in the probed lists: tail must be (inf, NULL)."""
+    from repro.core.search import make_search_fn
+
+    corpus, idx, q = fused_index
+    d, i = make_search_fn(idx.pool_cfg, nprobe=1, k=300, path="union_fused")(
+        idx.state, q
+    )
+    d, i = np.asarray(d), np.asarray(i)
+    assert np.isinf(d).any(), "expected padded tail past the probed list"
+    assert (i[np.isinf(d)] == -1).all()
+    live = ~np.isinf(d)
+    assert (i[live] >= 0).all()
 
 
 @pytest.mark.parametrize(

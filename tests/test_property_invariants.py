@@ -12,7 +12,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core.block_pool import PoolConfig, check_invariants, init_state, snapshot_ids
 from repro.core.insert import assign_clusters, make_insert_fn

@@ -93,6 +93,53 @@ def test_insert_batching_respects_cap(base_index):
         rt.stop()
 
 
+def test_flush_max_overflow_requeued_not_dropped(base_index):
+    """Batches past flush_max are requeued; every future gets exactly the
+    ids of its own vectors (no silent drop, no shared full-batch ids)."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", flush_min=4, flush_max=8,
+                      flush_interval=0.05, nprobe=4, k=5),
+    )
+    try:
+        before = rt.index.ntotal
+        sizes = [6, 6, 6, 5]  # 23 rows: forces several flush_max splits
+        futs = [
+            rt.submit_insert(_data(s, 16, seed=200 + i))
+            for i, s in enumerate(sizes)
+        ]
+        got = [f.result(timeout=20) for f in futs]
+        for s, ids in zip(sizes, got):
+            assert len(ids) == s  # per-item ids, not the whole batch's
+        all_ids = np.concatenate(got)
+        assert len(np.unique(all_ids)) == sum(sizes)  # disjoint, none lost
+        deadline = time.perf_counter() + 10
+        while rt.index.ntotal < before + sum(sizes):
+            assert time.perf_counter() < deadline, "vectors vanished"
+            time.sleep(0.02)
+    finally:
+        rt.stop()
+
+
+def test_search_path_union_fused_serves(base_index):
+    """The fused streaming path plugs into the runtime end to end."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", nprobe=4, k=5,
+                      search_path="union_fused"),
+    )
+    try:
+        futs = [rt.submit_search(x[i : i + 1]) for i in range(4)]
+        for i, f in enumerate(futs):
+            d, ids = f.result(timeout=60)
+            assert ids.shape == (1, 5)
+            assert ids[0, 0] == i  # self-match
+    finally:
+        rt.stop()
+
+
 def test_stats_collected(base_index):
     x, make = base_index
     rt = ServingRuntime(make(), RuntimeConfig(mode="parallel", nprobe=4, k=5))
