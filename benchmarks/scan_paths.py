@@ -15,6 +15,11 @@ path materializes between scoring and selection:
 * union_fused / union_fused_scan: the on-chip accumulator, ``Q * K' * 8``
   bytes (f32 score + i32 id) — the quantity this PR drives to O(Q*K').
 
+The PQ sweep covers the quantized half of the ladder (IVFPQ payload):
+``block_table`` + the ADC score_fn materializes ``[Q, C, T]`` float scores
+from uint8 codes, while ``union_fused`` routes through the PQ-ADC streaming
+kernel (``ivf_pq_block_topk``) and keeps the ``[Q, K']`` accumulator shape.
+
 Writes ``BENCH_scan_paths.json`` at the repo root when run as a script.
 """
 
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import timed
 from repro.core import build_ivf
+from repro.core import pq as pqmod
 from repro.core.search import default_kprime, make_search_fn
 from repro.data.synthetic import sift_like
 
@@ -41,14 +47,21 @@ PATHS = (
     "union_fused_scan",
 )
 
+PQ_PATHS = ("block_table", "union_fused", "union_fused_scan")
+
 
 def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
-                       t: int, k: int) -> int:
+                       t: int, k: int, pq_m: int = 0) -> int:
     """Peak scoring-intermediate bytes between scoring and selection."""
     cb = q * nprobe * budget  # candidate blocks (union is NULL-padded)
     if path == "union_fused":
         return q * default_kprime(k) * 8  # f32 dist + i32 id accumulator
     if path == "union_fused_scan":
+        if pq_m:
+            # PQ scan fallback: one [Q, chunk, T, M] f32 gathered-LUT-terms
+            # chunk per step (chunk = 16 blocks), merged into the [Q, K']
+            # (f32 dist + i32 id) carry
+            return q * 16 * t * pq_m * 4 + q * default_kprime(k) * 8
         # lax.scan fallback: one [Q, chunk*T] score+id chunk per step,
         # merged into the [Q, K'] carry (chunk = 64 blocks)
         return q * (64 * t + default_kprime(k)) * 8
@@ -63,6 +76,57 @@ def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
 # (corpus size, block size T, query batch Q) — spans batch sizes and chain
 # depths (smaller T => deeper per-cluster chains for the same corpus)
 CONFIGS = ((20_000, 64, 10), (20_000, 64, 64), (10_000, 32, 10))
+
+
+def run_pq(nprobe=8, k=10, iters=3, n=10_000, block_size=64, batch=64,
+           pq_m=16):
+    """Quantized-payload sweep at the acceptance batch size Q=64: the fused
+    path's peak scoring intermediate stays [Q, K']-scale while block_table
+    materializes [Q, C, T] ADC scores."""
+    corpus = sift_like(n, 128, seed=7)
+    idx = build_ivf(
+        corpus, n_clusters=64, payload="pq", pq_m=pq_m,
+        block_size=block_size, max_chain=64, nprobe=nprobe, k=k,
+        add_batch=8192, capacity_vectors=int(1.2 * n),
+    )
+    budget = idx._chain_budget()
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+    rows = []
+    ref_d = None
+    for path in PQ_PATHS:
+        fn = make_search_fn(
+            idx.pool_cfg, nprobe=nprobe, k=k, path=path,
+            score_fn=pqmod.pq_score_fn(idx.pq), pq=idx.pq,
+            chain_budget=budget,
+        )
+        d, ids = fn(idx.state, q)
+        jax.block_until_ready(ids)
+        if ref_d is None:
+            ref_d = np.asarray(d)
+        else:
+            # PQ distances tie whenever codes collide, so ids may permute at
+            # equal distance — the distance ladder itself must agree
+            np.testing.assert_allclose(
+                np.asarray(d), ref_d, rtol=1e-4, atol=1e-3,
+                err_msg=f"pq path {path} diverged",
+            )
+        t = timed(lambda: fn(idx.state, q), iters=iters)
+        rows.append({
+            "path": path,
+            "payload": "pq",
+            "pq_m": pq_m,
+            "n": n,
+            "batch": batch,
+            "block_size": block_size,
+            "chain_budget": budget,
+            "us_per_call": round(t * 1e6, 1),
+            "intermediate_bytes": intermediate_bytes(
+                path, q=batch, nprobe=nprobe, budget=budget,
+                t=block_size, k=k, pq_m=pq_m,
+            ),
+        })
+    return rows
 
 
 def run(nprobe=8, k=10, configs=CONFIGS, iters=3):
@@ -107,11 +171,11 @@ def run(nprobe=8, k=10, configs=CONFIGS, iters=3):
 
 
 def main():
-    rows = run()
-    print("path,n,batch,block_size,us_per_call,intermediate_bytes")
+    rows = run() + run_pq()
+    print("path,payload,n,batch,block_size,us_per_call,intermediate_bytes")
     for r in rows:
-        print(f"{r['path']},{r['n']},{r['batch']},{r['block_size']},"
-              f"{r['us_per_call']},{r['intermediate_bytes']}")
+        print(f"{r['path']},{r.get('payload', 'flat')},{r['n']},{r['batch']},"
+              f"{r['block_size']},{r['us_per_call']},{r['intermediate_bytes']}")
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scan_paths.json"
     out.write_text(json.dumps(rows, indent=2) + "\n")
     print(f"wrote {out}")

@@ -118,17 +118,33 @@ def alloc_blocks(state: IVFState, j: jax.Array, valid: jax.Array) -> jax.Array:
     ``j`` are *allocation ranks* 0..total_new-1 for this batch; rank j takes
     the j-th free-stack entry if available, else bump slot ``cur_p + spill``.
     Deterministic equivalent of ``atomicAdd(cur_P, 1)`` per thread.
-    Returns physical block ids (NULL where ``valid`` is False).
+    Returns physical block ids (NULL where ``valid`` is False *or* the bump
+    pointer would run off the pool — an unchecked ``bump_idx >= n_blocks``
+    would flow into ``cluster_blocks`` and make later clamped gathers return
+    wrong vectors silently).
     """
+    n_blocks = state.free_stack.shape[0]
     from_free = j < state.free_top
-    free_idx = jnp.clip(state.free_top - 1 - j, 0, state.free_stack.shape[0] - 1)
+    free_idx = jnp.clip(state.free_top - 1 - j, 0, n_blocks - 1)
     bump_idx = state.cur_p + jnp.maximum(j - state.free_top, 0)
     phys = jnp.where(from_free, state.free_stack[free_idx], bump_idx)
-    return jnp.where(valid, phys, NULL)
+    ok = valid & (from_free | (bump_idx < n_blocks))
+    return jnp.where(ok, phys, NULL)
+
+
+def alloc_available(state: IVFState) -> jax.Array:
+    """How many blocks the allocator can still hand out (free + bump)."""
+    n_blocks = state.free_stack.shape[0]
+    return state.free_top + jnp.maximum(n_blocks - state.cur_p, 0)
 
 
 def commit_alloc(state: IVFState, total_new: jax.Array) -> dict:
-    """Post-allocation counter updates (to be merged with dataclasses.replace)."""
+    """Post-allocation counter updates (to be merged with dataclasses.replace).
+
+    ``total_new`` must be the count of *successful* allocations (callers clip
+    demand against ``alloc_available``), so ``cur_p`` saturates at the pool
+    size instead of running past it.
+    """
     n_from_free = jnp.minimum(total_new, state.free_top)
     return dict(
         free_top=state.free_top - n_from_free,
@@ -137,9 +153,12 @@ def commit_alloc(state: IVFState, total_new: jax.Array) -> dict:
 
 
 def capacity_ok(state: IVFState, cfg: PoolConfig) -> jax.Array:
-    """True while the bump pointer has not run off the pool (alert analogue:
-    the paper fires an alarm at 90% utilisation)."""
-    return state.cur_p <= cfg.n_blocks
+    """True while the allocator can still hand out at least one block (alert
+    analogue: the paper fires an alarm at 90% utilisation).  ``cur_p`` never
+    exceeds ``n_blocks`` (overflowed allocations are masked to NULL and the
+    affected rows rejected), so exhaustion shows up as a full bump region
+    with an empty free stack."""
+    return (state.free_top > 0) | (state.cur_p < cfg.n_blocks)
 
 
 def utilisation(state: IVFState, cfg: PoolConfig) -> jax.Array:

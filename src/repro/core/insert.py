@@ -27,6 +27,7 @@ from repro.core.block_pool import (
     NULL,
     IVFState,
     PoolConfig,
+    alloc_available,
     alloc_blocks,
     commit_alloc,
 )
@@ -77,19 +78,34 @@ def insert_payload(
     cap_vecs = cfg.max_chain * tm
     pre_did = old_len[assign] + rank
     vec_ok = valid & (pre_did < cap_vecs)
+    want = vec_ok  # chain-capacity survivors; pool capacity filters below
+    counts_want = jax.ops.segment_sum(
+        want.astype(jnp.int32), assign, num_segments=cfg.n_clusters
+    )
+    old_nblk = state.cluster_nblocks
+    want_nblk = (old_len + counts_want + tm - 1) // tm
+    nblk_needed = want_nblk - old_nblk  # [N] >= 0 demanded new blocks
+    # exclusive cumsum -> allocation rank base per cluster
+    cum = jnp.cumsum(nblk_needed)
+    base = cum - nblk_needed
+    total_new = cum[-1]
+
+    # Pool exhaustion: allocation ranks are served free-stack-first then
+    # bump, so failure is a *suffix* of [0, total_new).  Clip the demand to
+    # what the allocator can actually hand out; rows that would land in a
+    # failed block are rejected below (again a per-cluster rank suffix, so
+    # surviving dids stay contiguous).
+    succ_total = jnp.minimum(total_new, alloc_available(state))
+    succ_nblk = jnp.clip(succ_total - base, 0, nblk_needed)  # [N] granted
+    usable_cap = jnp.minimum((old_nblk + succ_nblk) * tm, cap_vecs)
+    vec_ok = valid & vec_ok & (pre_did < usable_cap[assign])
     n_rejected = (valid & ~vec_ok).sum().astype(jnp.int32)
     valid = vec_ok
     counts = jax.ops.segment_sum(
         valid.astype(jnp.int32), assign, num_segments=cfg.n_clusters
     )
-    old_nblk = state.cluster_nblocks
     new_len = old_len + counts
     new_nblk = (new_len + tm - 1) // tm
-    nblk_needed = new_nblk - old_nblk  # [N] >= 0
-    # exclusive cumsum -> allocation rank base per cluster
-    cum = jnp.cumsum(nblk_needed)
-    base = cum - nblk_needed
-    total_new = cum[-1]
 
     # ---- allocate new physical blocks (Alg. 2 lines 10-15) --------------
     # at most B new blocks per batch; enumerate candidate slots j in [0, B)
@@ -99,9 +115,10 @@ def insert_payload(
     owner = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
     owner = jnp.clip(owner, 0, cfg.n_clusters - 1)
     jj = j - base[owner]  # index of this new block within its cluster's run
-    phys = alloc_blocks(state, j, j_valid)
+    phys = alloc_blocks(state, j, j_valid)  # NULL past pool capacity
 
     # block-table scatter: cluster_blocks[owner, old_nblk[owner] + jj] = phys
+    # (failed allocations write NULL into slots past new_nblk — a no-op)
     tbl_rows = jnp.where(j_valid, owner, cfg.n_clusters)
     tbl_cols = jnp.where(j_valid, old_nblk[owner] + jj, cfg.max_chain)
     cluster_blocks = state.cluster_blocks.at[tbl_rows, tbl_cols].set(
@@ -115,17 +132,17 @@ def insert_payload(
     prev_same_run = alloc_blocks(state, j - 1, j_valid & (jj > 0))
     old_tail = state.cluster_tail[owner]
     prev_blk = jnp.where(jj > 0, prev_same_run, old_tail)
-    link_valid = j_valid & (prev_blk != NULL)
+    link_valid = j_valid & (prev_blk != NULL) & (phys != NULL)
     next_block = state.next_block.at[
         jnp.where(link_valid, prev_blk, cfg.n_blocks)
     ].set(phys, mode="drop")
 
-    # head/tail updates
-    first_valid = j_valid & (jj == 0) & (old_nblk[owner] == 0)
+    # head/tail updates (only for blocks that were actually granted)
+    first_valid = j_valid & (jj == 0) & (old_nblk[owner] == 0) & (phys != NULL)
     cluster_head = state.cluster_head.at[
         jnp.where(first_valid, owner, cfg.n_clusters)
     ].set(phys, mode="drop")
-    last_valid = j_valid & (jj == nblk_needed[owner] - 1)
+    last_valid = j_valid & (jj == succ_nblk[owner] - 1)
     cluster_tail = state.cluster_tail.at[
         jnp.where(last_valid, owner, cfg.n_clusters)
     ].set(phys, mode="drop")
@@ -157,7 +174,7 @@ def insert_payload(
         new_since_rearrange=state.new_since_rearrange + counts,
         num_vectors=state.num_vectors + n_inserted,
         num_dropped=state.num_dropped + n_rejected,
-        **commit_alloc(state, total_new),
+        **commit_alloc(state, succ_total),
     )
 
 

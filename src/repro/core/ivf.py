@@ -124,8 +124,10 @@ class IVFIndex:
         if key not in self._search_fns:
             score_fn = None
             if self.cfg.payload == "pq":
+                # state-free: centroids come from the traced state argument,
+                # so cached search fns never pin a stale pool copy
                 score_fn = pqmod.pq_score_fn(
-                    self.pq, self.state, use_kernel=self.cfg.use_kernel
+                    self.pq, use_kernel=self.cfg.use_kernel
                 )
             self._search_fns[key] = make_search_fn(
                 self.pool_cfg,
@@ -134,6 +136,7 @@ class IVFIndex:
                 path=self.cfg.search_path,
                 score_fn=score_fn,
                 chain_budget=budget,
+                pq=self.pq,
             )
         return self._search_fns[key]
 

@@ -107,20 +107,36 @@ def make_pq_encode_fn(pq: PQParams):
     return _encode
 
 
-def pq_score_fn(pq: PQParams, state: IVFState, use_kernel: bool = False):
+def probe_residual_luts(
+    pq: PQParams, centroids: jax.Array, queries: jax.Array, probe_idx: jax.Array
+) -> jax.Array:
+    """LUT-building prologue shared by every ADC scorer.
+
+    queries [Q, D], probe_idx [Q, NP] -> [Q, NP, M, KSUB] ADC tables of the
+    query residual against each probed centroid (Faiss IVFPQ semantics:
+    distances are computed in residual space per probe).
+    """
+    qres = queries[:, None, :] - centroids[probe_idx]  # [Q, NP, D]
+    return adc_lut(pq, qres)
+
+
+def pq_score_fn(pq: PQParams, use_kernel: bool = False):
     """score_fn hook for ``search.py``: ADC over candidate block codes.
 
     payload: [Q, C, T, M] uint8 codes where C = nprobe * chain (block-table
     path) or C = nprobe (chain-walk path); probe_idx: [Q, nprobe].
-    Bound to the live state's centroids for residual LUTs.
+    Centroids for the residual LUTs come from the *traced* state argument —
+    closing over a concrete ``IVFState`` would bake them in as jit constants
+    and pin a stale pool copy per cached search fn.
     """
 
-    def _score(queries, payload, probe_idx):
+    def _score(state: IVFState, queries, payload, probe_idx):
         q, c, t, m = payload.shape
         nprobe = probe_idx.shape[1]
         chain = c // nprobe
-        qres = queries[:, None, :] - state.centroids[probe_idx]  # [Q, P, D]
-        lut = adc_lut(pq, qres)  # [Q, P, M, KSUB]
+        lut = probe_residual_luts(
+            pq, state.centroids, queries, probe_idx
+        )  # [Q, P, M, KSUB]
         codes = payload.reshape(q, nprobe, chain * t, m)
         if use_kernel:
             from repro.kernels.ops import pq_adc

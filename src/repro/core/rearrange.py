@@ -120,7 +120,15 @@ def make_rearrange_fn(cfg: PoolConfig, threshold: int):
 
     @jax.jit
     def step(state: IVFState):
-        stat = state.new_since_rearrange
+        # compaction bump-allocates a contiguous run (it cannot use the free
+        # stack); clusters whose run no longer fits the bump region are
+        # masked out of the offender argmax — running off the pool would
+        # record out-of-range block ids (the silent-recall failure mode of
+        # an unchecked alloc_blocks), while gating the whole step on the
+        # single worst offender would stall maintenance for every smaller
+        # cluster that still fits
+        fits = state.cur_p + state.cluster_nblocks <= cfg.n_blocks
+        stat = jnp.where(fits, state.new_since_rearrange, -1)
         worst = jnp.argmax(stat).astype(jnp.int32)
         triggered = stat[worst] > threshold
         new_state = rearrange_cluster(cfg, state, worst)

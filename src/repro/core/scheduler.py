@@ -43,11 +43,7 @@ from repro.core.insert import assign_clusters, insert_payload
 from repro.core.ivf import IVFIndex
 from repro.core.metrics import LatencyStats
 from repro.core import pq as pqmod
-from repro.core.search import (
-    search_block_table,
-    search_union,
-    search_union_fused,
-)
+from repro.core.search import resolve_search_impl
 
 
 class RequestRejected(RuntimeError):
@@ -72,7 +68,10 @@ class RuntimeConfig:
     nprobe: int = 16
     k: int = 10
     mode: str = "parallel"  # serial | parallel | fused
-    search_path: str = "block_table"  # block_table | union | union_fused
+    # any path make_search_fn supports: block_table | chain_walk | union |
+    # union_pallas | union_fused | union_fused_scan (typos raise ValueError
+    # at construction — a silent fallback would serve the wrong path)
+    search_path: str = "block_table"
 
 
 class ServingRuntime:
@@ -103,34 +102,22 @@ class ServingRuntime:
     def _build_steps(self):
         cfg, pc = self.cfg, self.pool_cfg
         pq = self.index.pq
-        if pc.payload != "flat" and cfg.search_path != "block_table":
-            # fail at construction, not inside the worker thread's first
-            # jit trace (the union paths score raw vectors only)
-            raise ValueError(
-                f"search_path={cfg.search_path!r} requires a flat payload; "
-                "PQ indexes must use block_table"
-            )
-        search_impl = {
-            "block_table": search_block_table,
-            "union": search_union,
-            "union_fused": search_union_fused,
-        }.get(cfg.search_path, search_block_table)
-
-        def _score_fn(state):
-            if pq is None:
-                return None
-            return pqmod.pq_score_fn(pq, state)
-
-        # adaptive chain budget (§Perf): scan only the live chain depth
-        # (2x headroom for online growth), not the max_chain capacity
-        budget = min(2 * self.index._chain_budget(), pc.max_chain)
-
-        def _search(state, queries, valid):
-            d, i = search_impl(
-                pc, state, queries, nprobe=cfg.nprobe, k=cfg.k,
-                score_fn=_score_fn(state), chain_budget=budget,
-            )
-            return d, jnp.where(valid[:, None], i, -1)
+        # fail at construction, not inside the worker thread's first jit
+        # trace: raises ValueError on an unknown path (no silent fallback)
+        # and NotImplementedError on a payload mismatch
+        self._search_impl = resolve_search_impl(pc, cfg.search_path)
+        # state-free: centroids come from the traced state argument, so the
+        # cached steps never bake a stale pool copy in as jit constants
+        self._score_fn = pqmod.pq_score_fn(pq) if pq is not None else None
+        # jitted steps are cached per chain budget: the budget is recomputed
+        # at dispatch time (see _current_budget), so online growth costs one
+        # recompile per power-of-two bucket instead of silently truncating
+        self._search_steps: dict[int, object] = {}
+        self._fused_steps: dict[int, object] = {}
+        # cached bucketed budget; None forces a recompute (a host readback
+        # of the live chain depth) — invalidated only by the insert paths,
+        # so pure-search traffic never pays the device sync
+        self._budget: Optional[int] = None
 
         def _insert(state, vectors, ids, valid):
             assign = assign_clusters(state.centroids, vectors)
@@ -140,16 +127,55 @@ class ServingRuntime:
                 payload = pqmod.encode(pq, vectors - state.centroids[assign])
             return insert_payload(pc, state, assign, payload, ids, valid)
 
-        self._search_step = jax.jit(_search)
+        self._insert_fn = _insert
         self._insert_step = jax.jit(_insert, donate_argnums=(0,))
 
-        def _fused(state, queries, qvalid, vectors, ids, ivalid):
-            # two independent subgraphs; XLA overlaps them (multi-stream)
-            d, i = _search(state, queries, qvalid)
-            new_state = _insert(state, vectors, ids, ivalid)
-            return new_state, d, i
+    def _current_budget(self) -> int:
+        """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
 
-        self._fused_step = jax.jit(_fused, donate_argnums=(0,))
+        The budget tracks the live chain depth bucketed to a power of two
+        (2x headroom keeps recompiles rare); computing it once at
+        construction silently truncated chains — and dropped candidates —
+        after online inserts grew them past 2x the initial depth.  The value
+        is cached between inserts (callers hold ``_state_lock``).
+        """
+        if self._budget is None:
+            self._budget = min(
+                2 * self.index._chain_budget(), self.pool_cfg.max_chain
+            )
+        return self._budget
+
+    def _make_search(self, budget: int):
+        cfg, pc = self.cfg, self.pool_cfg
+
+        def _search(state, queries, valid):
+            d, i = self._search_impl(
+                pc, state, queries, nprobe=cfg.nprobe, k=cfg.k,
+                score_fn=self._score_fn, chain_budget=budget,
+                pq=self.index.pq,
+            )
+            return d, jnp.where(valid[:, None], i, -1)
+
+        return _search
+
+    def _search_step_for(self, budget: int):
+        if budget not in self._search_steps:
+            self._search_steps[budget] = jax.jit(self._make_search(budget))
+        return self._search_steps[budget]
+
+    def _fused_step_for(self, budget: int):
+        if budget not in self._fused_steps:
+            _search = self._make_search(budget)
+            _insert = self._insert_fn
+
+            def _fused(state, queries, qvalid, vectors, ids, ivalid):
+                # two independent subgraphs; XLA overlaps them (multi-stream)
+                d, i = _search(state, queries, qvalid)
+                new_state = _insert(state, vectors, ids, ivalid)
+                return new_state, d, i
+
+            self._fused_steps[budget] = jax.jit(_fused, donate_argnums=(0,))
+        return self._fused_steps[budget]
 
     # ------------------------------------------------------------ API ----
     def submit_search(self, queries: np.ndarray) -> Future:
@@ -260,6 +286,7 @@ class ServingRuntime:
                 jnp.asarray(valid),
             )
             st = self.index.state
+            self._budget = None  # chains may have grown
         jax.block_until_ready(st.cluster_len)
         self._resolve_inserts(items, ids)
 
@@ -306,9 +333,8 @@ class ServingRuntime:
         pb, valid = self._padded(batch, self._bucket(len(batch)))
         with self._state_lock:
             st = self.index.state
-            d, i = self._search_step(
-                st, jnp.asarray(pb), jnp.asarray(valid)
-            )
+            step = self._search_step_for(self._current_budget())
+            d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
         d, i = np.asarray(d), np.asarray(i)
         t = time.perf_counter()
         off = 0
@@ -372,7 +398,8 @@ class ServingRuntime:
         pids = np.full((len(ivalid),), -1, np.int32)
         pids[:b] = ids
         with self._state_lock:
-            self.index.state, d, i = self._fused_step(
+            fused_step = self._fused_step_for(self._current_budget())
+            self.index.state, d, i = fused_step(
                 self.index.state,
                 jnp.asarray(pq_),
                 jnp.asarray(qvalid),
@@ -381,6 +408,7 @@ class ServingRuntime:
                 jnp.asarray(ivalid),
             )
             st = self.index.state
+            self._budget = None  # chains may have grown
         d, i = np.asarray(d), np.asarray(i)
         jax.block_until_ready(st.cluster_len)
         t = time.perf_counter()

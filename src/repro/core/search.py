@@ -25,14 +25,19 @@ kernel (``repro.kernels.ivf_scan``) via ``scan_impl="pallas"``.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.block_pool import NULL, IVFState, PoolConfig
+from repro.core.pq import PQParams
 
 INF = jnp.float32(jnp.inf)
+
+# score_fn hooks have signature (state, queries, payload, probe_idx) ->
+# [Q, C, T] scores; centroids and any other index-dependent data must come
+# from the traced ``state`` (see core.pq.pq_score_fn).
 
 
 def l2_sq(queries: jax.Array, points: jax.Array) -> jax.Array:
@@ -103,6 +108,7 @@ def search_block_table(
     k: int,
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
+    pq: Optional[PQParams] = None,  # unused (PQ rides on score_fn here)
 ):
     """Vectorised search. Returns (dists [Q, k], ids [Q, k])."""
     probe_idx, _ = coarse_probe(state, queries, nprobe)
@@ -110,7 +116,7 @@ def search_block_table(
     if score_fn is None:
         scores = flat_block_scores(queries, payload)
     else:
-        scores = score_fn(queries, payload, probe_idx)
+        scores = score_fn(state, queries, payload, probe_idx)
     scores = jnp.where(valid, scores, INF)
     q = queries.shape[0]
     flat_scores = scores.reshape(q, -1)
@@ -135,6 +141,7 @@ def search_chain_walk(
     k: int,
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
+    pq: Optional[PQParams] = None,  # unused (PQ rides on score_fn here)
 ):
     """Follow ``next_block`` headers hop by hop (GPU traversal port)."""
     q = queries.shape[0]
@@ -153,7 +160,7 @@ def search_chain_walk(
                 queries, payload.reshape(q, -1, *payload.shape[2:])
             ).reshape(ids.shape)
         else:
-            scores = score_fn(queries, payload, probe_idx)
+            scores = score_fn(state, queries, payload, probe_idx)
         alive = (cur != NULL)[..., None] & (ids != NULL)
         scores = jnp.where(alive, scores, INF)
         cat_d = jnp.concatenate([best_d, scores.reshape(q, -1)], axis=1)
@@ -180,25 +187,44 @@ def search_chain_walk(
 # ---------------------------------------------------------------------------
 
 
+class UnionCandidates(NamedTuple):
+    flat_blocks: jax.Array  # [CB = CU*MC] candidate block ids, NULL-padded
+    member: jax.Array  # [Q, CU] per-(query, union-cluster) membership
+    mc: int  # chain slots gathered per cluster (static)
+    probe_idx: jax.Array  # [Q, NP] probed cluster ids
+    matches: jax.Array  # [Q, NP, CU] probe_idx == union (member's source)
+
+
 def _union_candidates(
     cfg: PoolConfig,
     state: IVFState,
     queries: jax.Array,
     nprobe: int,
     chain_budget: Optional[int],
-):
+) -> UnionCandidates:
     """Shared prologue of the union paths: probe, dedup across the batch,
-    flatten the block table.  Returns (flat_blocks [CB], member [Q, CU], mc)."""
+    flatten the block table."""
     q = queries.shape[0]
     mc = min(chain_budget or cfg.max_chain, cfg.max_chain)
     probe_idx, _ = coarse_probe(state, queries, nprobe)  # [Q, NP]
     union = jnp.unique(
         probe_idx.reshape(-1), size=q * nprobe, fill_value=NULL
     )  # [CU] sorted, NULL-padded
-    member = (probe_idx[:, :, None] == union[None, None, :]).any(axis=1)  # [Q, CU]
+    matches = probe_idx[:, :, None] == union[None, None, :]  # [Q, NP, CU]
+    member = matches.any(axis=1)  # [Q, CU]
     blocks = state.cluster_blocks[jnp.maximum(union, 0), :mc]  # [CU, MC]
     blocks = jnp.where((union != NULL)[:, None], blocks, NULL)
-    return blocks.reshape(-1), member, mc  # flat_blocks [CB = CU*MC]
+    return UnionCandidates(blocks.reshape(-1), member, mc, probe_idx, matches)
+
+
+def _probe_slot_index(uc: UnionCandidates) -> jax.Array:
+    """[Q, CB] probe-slot index for the PQ fused kernel: the position of each
+    candidate's cluster inside the query's probe list (selects the per-probe
+    residual LUT row), or -1 when the query did not probe that cluster.
+    NULL union padding matches no probe and therefore comes back -1."""
+    slot = jnp.argmax(uc.matches, axis=1).astype(jnp.int32)  # [Q, CU]
+    pslot = jnp.where(uc.member, slot, -1)
+    return jnp.repeat(pslot, uc.mc, axis=1)  # [Q, CB]
 
 
 def search_union(
@@ -211,9 +237,15 @@ def search_union(
     score_fn: Optional[Callable] = None,  # unused (flat payload only)
     scan_impl: str = "jnp",
     chain_budget: Optional[int] = None,
+    pq: Optional[PQParams] = None,
 ):
+    if cfg.payload != "flat":
+        raise NotImplementedError(
+            "union/union_pallas score raw vectors; PQ payloads use "
+            "block_table, chain_walk, or the fused union paths"
+        )
     q = queries.shape[0]
-    flat_blocks, member, mc = _union_candidates(
+    flat_blocks, member, mc, _, _ = _union_candidates(
         cfg, state, queries, nprobe, chain_budget
     )
 
@@ -261,35 +293,72 @@ def search_union_fused(
     *,
     nprobe: int,
     k: int,
-    score_fn: Optional[Callable] = None,  # unused (flat payload only)
+    score_fn: Optional[Callable] = None,  # unused (fused paths score inline)
     scan_impl: str = "pallas",
     chain_budget: Optional[int] = None,
     kprime: Optional[int] = None,
+    pq: Optional[PQParams] = None,  # required for payload == "pq"
 ):
-    if cfg.payload != "flat":
-        raise NotImplementedError(
-            "union_fused scores raw vectors; use block_table for PQ payloads"
+    if cfg.payload == "pq" and pq is None:
+        raise ValueError(
+            "union_fused on a PQ payload needs the trained PQParams "
+            "(pass pq=index.pq / via make_search_fn)"
         )
-    flat_blocks, member, mc = _union_candidates(
-        cfg, state, queries, nprobe, chain_budget
-    )
-    member_b = jnp.repeat(member, mc, axis=1)  # [Q, CB]
+    uc = _union_candidates(cfg, state, queries, nprobe, chain_budget)
+    flat_blocks = uc.flat_blocks
+    member_b = jnp.repeat(uc.member, uc.mc, axis=1)  # [Q, CB]
     cand_ok = member_b & (flat_blocks != NULL)[None, :]
     # Candidate compaction: the union block table is NULL-padded (every
     # probed cluster is padded to the chain budget, and the union itself is
     # padded to Q*nprobe slots) and each dead slot would cost a full grid
     # step / DMA in the streaming kernel.  Each live block appears at most
     # once (chains are disjoint), so the live count is statically bounded by
-    # the pool size P — stable-sort dead slots to the back and truncate.
+    # the pool size P; CB itself is Q*nprobe*budget with the budget taken at
+    # dispatch time, so the cap follows live chain growth.  Stable-sort dead
+    # slots to the back and truncate.
     cb = flat_blocks.shape[0]
     cap = min(cb, state.pool_payload.shape[0])
+    perm = None
     if cap < cb:
         perm = jnp.argsort(flat_blocks == NULL, stable=True)[:cap]
         flat_blocks = flat_blocks[perm]
         cand_ok = cand_ok[:, perm]
     kp = kprime or default_kprime(k)
     assert kp >= k, (kp, k)
-    if scan_impl == "pallas":
+    if cfg.payload == "pq":
+        from repro.core import pq as pqmod
+
+        # per-(query, probe) residual ADC tables + the probe-slot index that
+        # lets the kernel pick the right LUT row per candidate block
+        lut = pqmod.probe_residual_luts(
+            pq, state.centroids, queries, uc.probe_idx
+        )  # [Q, NP, M, KSUB]
+        pslot = _probe_slot_index(uc)  # [Q, CB]
+        if perm is not None:
+            pslot = pslot[:, perm]
+        pslot = jnp.where(cand_ok, pslot, -1)
+        if scan_impl == "pallas":
+            from repro.kernels.ops import ivf_pq_block_topk
+
+            d, i = ivf_pq_block_topk(
+                lut, state.pool_payload, flat_blocks, state.pool_ids,
+                pslot, kprime=kp,
+            )
+        elif scan_impl == "scan":
+            from repro.kernels.ivf_scan import ivf_pq_block_topk_scan
+
+            d, i = ivf_pq_block_topk_scan(
+                lut, state.pool_payload, flat_blocks, state.pool_ids,
+                pslot, kprime=kp,
+            )
+        else:
+            from repro.kernels.ref import ivf_pq_block_topk_ref
+
+            d, i = ivf_pq_block_topk_ref(
+                lut, state.pool_payload, flat_blocks, state.pool_ids,
+                pslot, kprime=kp,
+            )
+    elif scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_topk
 
         d, i = ivf_block_topk(
@@ -317,6 +386,39 @@ def search_union_fused(
     return -neg_d, out_ids
 
 
+# All selectable scan paths (docs/search_paths.md documents the ladder) and
+# the subset that can serve a PQ payload: block_table / chain_walk score
+# through the score_fn hook, the fused union paths route through the PQ-ADC
+# streaming kernel; plain union / union_pallas score raw vectors only.
+SEARCH_IMPLS = {
+    "block_table": search_block_table,
+    "chain_walk": search_chain_walk,
+    "union": search_union,
+    "union_pallas": partial(search_union, scan_impl="pallas"),
+    "union_fused": search_union_fused,
+    "union_fused_scan": partial(search_union_fused, scan_impl="scan"),
+}
+PQ_SEARCH_PATHS = frozenset(
+    {"block_table", "chain_walk", "union_fused", "union_fused_scan"}
+)
+
+
+def resolve_search_impl(cfg: PoolConfig, path: str) -> Callable:
+    """Look up a scan path, rejecting typos and payload mismatches loudly
+    (a silent fallback would benchmark / serve the wrong path)."""
+    if path not in SEARCH_IMPLS:
+        raise ValueError(
+            f"unknown search_path {path!r}; expected one of "
+            f"{sorted(SEARCH_IMPLS)}"
+        )
+    if cfg.payload == "pq" and path not in PQ_SEARCH_PATHS:
+        raise NotImplementedError(
+            f"search_path {path!r} scores raw vectors; PQ payloads support "
+            f"{sorted(PQ_SEARCH_PATHS)}"
+        )
+    return SEARCH_IMPLS[path]
+
+
 def make_search_fn(
     cfg: PoolConfig,
     *,
@@ -325,22 +427,16 @@ def make_search_fn(
     path: str = "block_table",
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
+    pq: Optional[PQParams] = None,
 ):
     """Jitted search step closed over static (nprobe, k, traversal path)."""
-    impl = {
-        "block_table": search_block_table,
-        "chain_walk": search_chain_walk,
-        "union": search_union,
-        "union_pallas": partial(search_union, scan_impl="pallas"),
-        "union_fused": search_union_fused,
-        "union_fused_scan": partial(search_union_fused, scan_impl="scan"),
-    }[path]
+    impl = resolve_search_impl(cfg, path)
 
     @jax.jit
     def step(state: IVFState, queries: jax.Array):
         return impl(
             cfg, state, queries, nprobe=nprobe, k=k, score_fn=score_fn,
-            chain_budget=chain_budget,
+            chain_budget=chain_budget, pq=pq,
         )
 
     return step

@@ -18,7 +18,7 @@ Design (TPU re-derivation of the paper's coalesced scan, DESIGN.md §8):
 
 Hole blocks (id == -1) are clamped to block 0; callers mask their scores.
 
-Two kernels live here:
+Three kernels live here:
 
 * ``ivf_block_scan``   — scores only: emits the full ``[C, Q, T]`` tensor to
   HBM; the caller masks and runs one monolithic ``top_k`` over ``C*T``.
@@ -31,6 +31,14 @@ Two kernels live here:
   intermediate never touches HBM.  The grid is tiled over Q so large batches
   keep the accumulator + query tile inside the VMEM budget (see
   docs/search_paths.md for the budget math).
+* ``ivf_pq_block_topk`` — the same streaming selection over a **PQ-coded**
+  pool (IVFPQ, paper §3.3): per grid step one ``[T, M]`` uint8 code block is
+  DMA'd and scored by asymmetric distance against VMEM-resident per-(query,
+  probe) LUTs, using the one-hot MXU contraction from ``pq_adc.py`` instead
+  of a per-lane byte gather.  Residuals are per-probe, so each query selects
+  its LUT row through a ``[Q, C]`` probe-slot index built in the union
+  prologue (``core/search.py``); slot -1 marks an invalid (non-member /
+  hole) candidate and is fused into the epilogue mask.
 """
 
 from __future__ import annotations
@@ -255,4 +263,199 @@ def ivf_block_topk_scan(
         jnp.full((q, kprime), -1, jnp.int32),
     )
     (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ok_ch))
+    return acc_d, acc_i
+
+
+# ---------------------------------------------------------------------------
+# PQ-ADC fused streaming top-k (IVFPQ payload): LUT resident in VMEM,
+# one [T, M] uint8 code block DMA'd per grid step, [Q, K'] writeback.
+#
+# The PQ family sorts with num_keys=2 (distance, then vector id): quantized
+# payloads produce exact distance ties whenever two vectors share a code, so
+# a deterministic id tiebreak is required for the kernel / scan / oracle to
+# stay bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _pq_topk_kernel(
+    ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    lut_ref,  # [Q_t, NP, M, K] per-(query, probe) ADC tables
+    pslot_ref,  # [Q_t, 1] i32 probe slot of this candidate (-1 = invalid)
+    codes_ref,  # [T, M] uint8 current candidate code block
+    pid_ref,  # [1, T] i32 vector ids of the block
+    out_d_ref,  # [Q_t, K']
+    out_i_ref,  # [Q_t, K'] i32
+    acc_d_ref,  # VMEM scratch [Q_t, K'] running best distances
+    acc_i_ref,  # VMEM scratch [Q_t, K'] i32 running best ids
+):
+    """Grid (qi, ci): ADC-score block ids[ci] and merge into the accumulator."""
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_d_ref[:] = jnp.full(acc_d_ref.shape, jnp.inf, jnp.float32)
+        acc_i_ref[:] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+
+    lut = lut_ref[:]  # [Q_t, NP, M, K]
+    pslot = pslot_ref[:]  # [Q_t, 1]
+    codes = codes_ref[:].astype(jnp.int32)  # [T, M]
+    qt, np_, m, ksub = lut.shape
+    t = codes.shape[0]
+    # Residuals are per-probe: select each query's LUT for this candidate's
+    # probe slot via a one-hot contraction (slot -1 matches nothing; the
+    # zeroed LUT row is masked out below anyway).
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (qt, np_), 1)
+    sel = (pslot == slot_iota).astype(jnp.float32)  # [Q_t, NP]
+    lut_q = jax.lax.dot_general(
+        sel[:, None, :],  # [Q_t, 1, NP]
+        lut.reshape(qt, np_, m * ksub),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).reshape(qt, m, ksub)
+    # ADC accumulation as dense MXU work: one-hot-expand each code column and
+    # contract with the selected LUT row (same trick as pq_adc._adc_kernel).
+    kiota = jax.lax.broadcasted_iota(jnp.int32, (t, ksub), 1)
+    scores = jnp.zeros((qt, t), jnp.float32)
+    for j in range(m):  # static unroll over subquantizers
+        onehot = (codes[:, j][:, None] == kiota).astype(jnp.float32)  # [T, K]
+        scores = scores + jax.lax.dot_general(
+            lut_q[:, j, :],
+            onehot,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [Q_t, T]
+    # fused epilogue: non-member queries, hole blocks, empty NULL-id slots
+    ok = (pslot != -1) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    scores = jnp.where(ok, scores, jnp.inf)
+    cand_i = jnp.where(ok, jnp.broadcast_to(pid_ref[:], scores.shape), -1)
+    cat_d = jnp.concatenate([acc_d_ref[:], scores], axis=1)
+    cat_i = jnp.concatenate([acc_i_ref[:], cand_i], axis=1)
+    srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+    kp = acc_d_ref.shape[1]
+    acc_d_ref[:] = srt_d[:, :kp]
+    acc_i_ref[:] = srt_i[:, :kp]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        out_d_ref[:] = acc_d_ref[:]
+        out_i_ref[:] = acc_i_ref[:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kprime", "q_tile", "interpret")
+)
+def ivf_pq_block_topk(
+    lut: jax.Array,  # [Q, NP, M, K] f32 per-(query, probe) ADC tables
+    pool_codes: jax.Array,  # [P, T, M] uint8 PQ codes
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via pslot)
+    pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    pslot: jax.Array,  # [Q, C] i32 probe slot per (query, candidate); -1 = invalid
+    *,
+    kprime: int,
+    q_tile: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] ids)
+    """Streaming top-``kprime`` over a PQ-coded pool: one HBM read of each
+    ``[T, M]`` uint8 candidate block, ADC against the VMEM-resident LUT tile,
+    ``[Q, K']`` writeback.  Rows come back sorted ascending by (distance,
+    id); invalid slots carry ``inf`` / id ``-1``.
+
+    The LUT tile is the dominant VMEM resident (``q_tile·nprobe·M·256·4B``,
+    see docs/search_paths.md), hence the small default ``q_tile`` of 8."""
+    q, np_, m, ksub = lut.shape
+    p, t, m2 = pool_codes.shape
+    assert m == m2, (lut.shape, pool_codes.shape)
+    c = block_ids.shape[0]
+    qt = min(q_tile, _round_up(q, 8))
+    qp = _round_up(q, qt)
+    lut = jnp.pad(lut, ((0, qp - q), (0, 0), (0, 0), (0, 0)))
+    pslot = jnp.pad(
+        pslot.astype(jnp.int32), ((0, qp - q), (0, 0)), constant_values=-1
+    )
+    safe_ids = jnp.maximum(block_ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qp // qt, c),
+        in_specs=[
+            pl.BlockSpec((qt, np_, m, ksub), lambda qi, ci, ids: (qi, 0, 0, 0)),
+            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
+            pl.BlockSpec((None, t, m), lambda qi, ci, ids: (ids[ci], 0, 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qt, kprime), jnp.float32),
+            pltpu.VMEM((qt, kprime), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        _pq_topk_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kprime), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe_ids, lut, pslot, pool_codes, pool_ids)
+    return out_d[:q], out_i[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "chunk"))
+def ivf_pq_block_topk_scan(
+    lut: jax.Array,  # [Q, NP, M, K] f32
+    pool_codes: jax.Array,  # [P, T, M] uint8
+    block_ids: jax.Array,  # [C] i32
+    pool_ids: jax.Array,  # [P, T] i32
+    pslot: jax.Array,  # [Q, C] i32, -1 = invalid
+    *,
+    kprime: int,
+    chunk: int = 16,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked ``lax.scan`` fallback for the PQ fused path (CPU / interpret
+    mode): same streaming top-``kprime`` semantics, peak intermediate
+    ``[Q, chunk, T, M]`` gathered LUT terms instead of ``[C, Q, T]``."""
+    q = lut.shape[0]
+    p, t, m = pool_codes.shape
+    c = block_ids.shape[0]
+    cp = _round_up(c, chunk)
+    nch = cp // chunk
+    ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
+    ps_p = jnp.pad(
+        pslot.astype(jnp.int32), ((0, 0), (0, cp - c)), constant_values=-1
+    )
+    safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
+    ps_ch = ps_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+
+    def step(carry, xs):
+        acc_d, acc_i = carry
+        sc, ps = xs  # [chunk], [Q, chunk]
+        codes = pool_codes[sc].astype(jnp.int32)  # [chunk, T, M]
+        vids = pool_ids[sc]  # [chunk, T]
+        lq = jnp.take_along_axis(
+            lut, jnp.clip(ps, 0)[:, :, None, None], axis=1
+        )  # [Q, chunk, M, K]
+        gathered = jnp.take_along_axis(
+            lq[:, :, None, :, :],  # [Q, chunk, 1, M, K]
+            codes[None, :, :, :, None],  # [1, chunk, T, M, 1]
+            axis=-1,
+        )[..., 0]  # [Q, chunk, T, M]
+        scores = jnp.sum(gathered, axis=-1)  # [Q, chunk, T]
+        okf = (ps != -1)[:, :, None] & (vids != -1)[None, :, :]
+        scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
+        cids = jnp.where(okf, jnp.broadcast_to(vids, okf.shape), -1)
+        cat_d = jnp.concatenate([acc_d, scores], axis=1)
+        cat_i = jnp.concatenate([acc_i, cids.reshape(q, -1)], axis=1)
+        srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+        return (srt_d[:, :kprime], srt_i[:, :kprime]), None
+
+    init = (
+        jnp.full((q, kprime), jnp.inf, jnp.float32),
+        jnp.full((q, kprime), -1, jnp.int32),
+    )
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ps_ch))
     return acc_d, acc_i

@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels.ivf_scan import ivf_block_scan as _ivf_block_scan
 from repro.kernels.ivf_scan import ivf_block_topk as _ivf_block_topk
+from repro.kernels.ivf_scan import ivf_pq_block_topk as _ivf_pq_block_topk
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_decode_attention,
 )
@@ -32,6 +33,16 @@ def ivf_block_topk(queries, pool, block_ids, pool_ids, cand_ok, *, kprime,
     (ascending dists, vector ids) without materializing [C,Q,T]."""
     return _ivf_block_topk(
         queries, pool, block_ids, pool_ids, cand_ok,
+        kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+    )
+
+
+def ivf_pq_block_topk(lut, pool_codes, block_ids, pool_ids, pslot, *,
+                      kprime, q_tile: int = 8):
+    """PQ-ADC fused streaming selection: [Q,NP,M,K] LUTs x [P,T,M] u8 codes
+    -> ([Q,K'], [Q,K']) without materializing [C,Q,T]."""
+    return _ivf_pq_block_topk(
+        lut, pool_codes, block_ids, pool_ids, pslot,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 

@@ -51,6 +51,45 @@ def ivf_block_topk_ref(
     return srt_d[:, :kprime], srt_i[:, :kprime]
 
 
+def ivf_pq_block_topk_ref(
+    lut: jax.Array,  # [Q, NP, M, K] per-(query, probe) ADC tables
+    pool_codes: jax.Array,  # [P, T, M] uint8/int PQ codes
+    block_ids: jax.Array,  # [C] i32, -1 = hole
+    pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    pslot: jax.Array,  # [Q, C] i32 probe slot per candidate, -1 = invalid
+    *,
+    kprime: int,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist ascending, [Q, K'] ids)
+    """Oracle for the PQ fused streaming top-k: materialize the full ADC
+    score tensor, mask, and sort by (distance, id) — invalid slots come back
+    as (inf, -1).  The (d, id) double sort key makes ties (vectors sharing a
+    code) deterministic across kernel / scan / oracle."""
+    q = lut.shape[0]
+    safe = jnp.maximum(block_ids, 0)
+    codes = pool_codes[safe].astype(jnp.int32)  # [C, T, M]
+    vids = pool_ids[safe]  # [C, T]
+    lq = jnp.take_along_axis(
+        lut, jnp.clip(pslot, 0)[:, :, None, None], axis=1
+    )  # [Q, C, M, K]
+    gathered = jnp.take_along_axis(
+        lq[:, :, None, :, :],  # [Q, C, 1, M, K]
+        codes[None, :, :, :, None],  # [1, C, T, M, 1]
+        axis=-1,
+    )[..., 0]  # [Q, C, T, M]
+    scores = jnp.sum(gathered, axis=-1)  # [Q, C, T]
+    ok = (pslot != -1)[:, :, None] & (vids != -1)[None, :, :]
+    flat_d = jnp.where(ok, scores, jnp.inf).reshape(q, -1)
+    flat_i = jnp.where(ok, jnp.broadcast_to(vids[None], ok.shape), -1)
+    flat_i = flat_i.reshape(q, -1)
+    n = flat_d.shape[1]
+    if n < kprime:
+        pad = kprime - n
+        flat_d = jnp.pad(flat_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        flat_i = jnp.pad(flat_i, ((0, 0), (0, pad)), constant_values=-1)
+    srt_d, srt_i = jax.lax.sort((flat_d, flat_i), dimension=1, num_keys=2)
+    return srt_d[:, :kprime], srt_i[:, :kprime]
+
+
 def pq_adc_ref(
     lut: jax.Array,  # [R, M, K] per-row ADC table
     codes: jax.Array,  # [R, N, M] integer codes in [0, K)

@@ -62,6 +62,47 @@ def test_capacity_rejection_counted():
     assert int(state.cluster_len.max()) <= 8
 
 
+def test_pool_exhaustion_masked_and_counted():
+    """Regression (silent wrong results): when the pool ran out of blocks the
+    bump pointer kept allocating past n_blocks, out-of-range ids landed in
+    cluster_blocks, and later clamped gathers returned the wrong vectors.
+    Overflowed allocations must come back NULL, the affected rows must be
+    rejected through num_dropped, and every accepted vector must stay
+    retrievable."""
+    from repro.core.block_pool import capacity_ok
+    from repro.core.search import make_search_fn
+
+    d, tm = 8, 4
+    cfg = PoolConfig(n_clusters=3, dim=d, block_size=tm, n_blocks=6,
+                     max_chain=16)
+    rng = np.random.default_rng(23)
+    cents = rng.normal(size=(3, d)).astype(np.float32) * 4
+    state = init_state(cfg, jnp.asarray(cents))
+    ins = make_insert_fn(cfg)
+    total, vecs = 0, []
+    for bsz in (5, 9, 7, 11):  # runs past the 6-block / 24-vector pool
+        x = (cents[rng.integers(0, 3, bsz)]
+             + rng.normal(size=(bsz, d)).astype(np.float32))
+        vecs.append(x)
+        state = ins(state, jnp.asarray(x),
+                    jnp.arange(total, total + bsz, dtype=jnp.int32))
+        total += bsz
+        check_invariants(state, cfg)
+    assert int(np.asarray(state.cluster_blocks).max()) < cfg.n_blocks
+    assert int(state.cur_p) <= cfg.n_blocks
+    assert int(state.num_vectors) + int(state.num_dropped) == total
+    assert int(state.num_dropped) > 0
+    assert not bool(capacity_ok(state, cfg))
+    # recall holds for everything that was accepted: full-probe search finds
+    # each resident id from its own vector
+    all_x = np.concatenate(vecs)
+    resident = sorted(i for ids in snapshot_ids(state, cfg).values()
+                      for i in ids)
+    fn = make_search_fn(cfg, nprobe=cfg.n_clusters, k=1, path="block_table")
+    _, got = fn(state, jnp.asarray(all_x[resident]))
+    assert (np.asarray(got)[:, 0] == np.asarray(resident)).all()
+
+
 def test_insert_invariants_random_batches():
     d, n_clusters, tm = 8, 4, 4
     cfg = PoolConfig(

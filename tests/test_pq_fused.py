@@ -1,0 +1,240 @@
+"""PQ-ADC fused streaming top-k: kernel parity + IVFPQ end-to-end parity.
+
+Everything here is marked ``pq`` so CI can run it as its own job slice
+(interpret-mode grid steps cost ~ms each on CPU — grids are kept tiny, but
+the slice still deserves its own wall-clock budget).
+"""
+
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import build_ivf
+from repro.core import pq as pqmod
+from repro.core.search import make_search_fn
+from repro.kernels import ref
+from repro.kernels.ivf_scan import ivf_pq_block_topk, ivf_pq_block_topk_scan
+
+pytestmark = pytest.mark.pq
+
+KSUB = 256
+
+
+def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3):
+    """Union-scan shaped PQ inputs: hole blocks (-1 in the NULL-padded
+    union), empty (-1) id slots, and a probe-slot index with non-members."""
+    rng = np.random.default_rng(seed)
+    lut = jnp.asarray(rng.normal(size=(q, npb, m, KSUB)) ** 2, jnp.float32)
+    codes = jnp.asarray(rng.integers(0, KSUB, size=(p, t, m)), jnp.uint8)
+    ids = rng.integers(0, p, size=(c,)).astype(np.int32)
+    ids[rng.random(c) < hole_frac] = -1  # hole blocks
+    pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
+    pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
+    pslot = rng.integers(-1, npb, size=(q, c)).astype(np.int32)
+    pslot[:, ids == -1] = -1  # hole blocks are invalid for every query
+    return lut, codes, jnp.asarray(ids), jnp.asarray(pool_ids), jnp.asarray(pslot)
+
+
+@pytest.mark.parametrize(
+    "q,npb,m,p,t,c,kp",
+    [
+        (8, 4, 8, 6, 16, 5, 8),
+        (10, 3, 4, 5, 8, 7, 16),  # Q pads to 16 -> two q tiles
+        (4, 2, 8, 4, 32, 3, 128),  # kprime > live candidates
+        (1, 4, 2, 6, 8, 6, 4),
+    ],
+)
+def test_ivf_pq_block_topk_matches_ref(q, npb, m, p, t, c, kp):
+    lut, codes, ids, pool_ids, pslot = _pq_topk_inputs(
+        q, npb, m, p, t, c, seed=q * 10 + c
+    )
+    want_d, want_i = ref.ivf_pq_block_topk_ref(
+        lut, codes, ids, pool_ids, pslot, kprime=kp
+    )
+    got_d, got_i = ivf_pq_block_topk(
+        lut, codes, ids, pool_ids, pslot, kprime=kp, interpret=True
+    )
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(got_i, want_i)
+    sc_d, sc_i = ivf_pq_block_topk_scan(
+        lut, codes, ids, pool_ids, pslot, kprime=kp, chunk=4
+    )
+    np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(sc_i, want_i)
+
+
+def test_ivf_pq_block_topk_ref_matches_adc_accumulate():
+    """The ref oracle is itself checked against core.pq.adc_accumulate (the
+    acceptance oracle): per-candidate LUT rows fed through the jnp ADC."""
+    q, npb, m, p, t, c, kp = 6, 4, 8, 5, 8, 6, 8
+    lut, codes, ids, pool_ids, pslot = _pq_topk_inputs(
+        q, npb, m, p, t, c, seed=77
+    )
+    lq = jnp.take_along_axis(lut, jnp.clip(pslot, 0)[:, :, None, None], axis=1)
+    cb = jnp.broadcast_to(
+        codes[jnp.maximum(ids, 0)][None], (q, c, t, m)
+    )
+    d_acc = pqmod.adc_accumulate(lq, cb)  # [Q, C, T]
+    vids = pool_ids[jnp.maximum(ids, 0)]
+    ok = (pslot != -1)[:, :, None] & (vids != -1)[None]
+    flat = np.where(np.asarray(ok), np.asarray(d_acc), np.inf).reshape(q, -1)
+    want = np.sort(flat, axis=1)[:, :kp]
+    got_d, _ = ref.ivf_pq_block_topk_ref(
+        lut, codes, ids, pool_ids, pslot, kprime=kp
+    )
+    np.testing.assert_allclose(got_d, want, rtol=1e-5, atol=1e-3)
+
+
+def test_ivf_pq_block_topk_all_invalid_returns_inf():
+    q, npb, m, p, t, c = 4, 2, 4, 3, 8, 5
+    rng = np.random.default_rng(0)
+    lut = jnp.asarray(rng.normal(size=(q, npb, m, KSUB)) ** 2, jnp.float32)
+    codes = jnp.asarray(rng.integers(0, KSUB, size=(p, t, m)), jnp.uint8)
+    ids = jnp.full((c,), -1, jnp.int32)
+    pool_ids = jnp.zeros((p, t), jnp.int32)
+    pslot = jnp.full((q, c), -1, jnp.int32)
+    d, i = ivf_pq_block_topk(
+        lut, codes, ids, pool_ids, pslot, kprime=8, interpret=True
+    )
+    assert np.isinf(np.asarray(d)).all()
+    assert (np.asarray(i) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# IVFPQ end-to-end: union_fused (pq) vs block_table + pq_score_fn vs the
+# adc_accumulate oracle, on a pool with holes (rearranged + recycled
+# blocks), NULL padding, and multi-block chains.
+# ---------------------------------------------------------------------------
+
+
+def _clustered(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)).astype(np.float32) * 3
+    return (
+        centers[rng.integers(0, 8, n)]
+        + rng.normal(size=(n, d)).astype(np.float32)
+    ).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def pq_index():
+    x = _clustered(1600, 32, seed=3)
+    idx = build_ivf(
+        x, n_clusters=8, payload="pq", pq_m=8, block_size=16, max_chain=32,
+        add_batch=256, nprobe=4, k=10, rearrange_threshold=60,
+    )
+    # online growth + rearrangement: chains go multi-block, old blocks land
+    # on the free stack, later inserts recycle them -> physically scattered
+    # pool with NULL padding in partially filled tail blocks
+    extra = _clustered(300, 32, seed=4)
+    idx.add(extra)
+    idx.maybe_rearrange(max_passes=6)
+    idx.add(_clustered(150, 32, seed=5))
+    corpus = np.concatenate([x, extra, _clustered(150, 32, seed=5)])
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(corpus[rng.integers(0, len(corpus), 6)] + 0.001)
+    return corpus, idx, q
+
+
+def _oracle_adc(idx, queries, nprobe):
+    """id -> ADC distance maps per query over the probed candidate set,
+    computed straight from pq_score_fn's building blocks."""
+    from repro.core.search import coarse_probe, gather_candidate_blocks
+
+    probe_idx, _ = coarse_probe(idx.state, queries, nprobe)
+    payload, ids, valid = gather_candidate_blocks(idx.state, probe_idx)
+    lut = pqmod.probe_residual_luts(
+        idx.pq, idx.state.centroids, queries, probe_idx
+    )  # [Q, NP, M, K]
+    q, c, t, m = payload.shape
+    chain = c // probe_idx.shape[1]
+    codes = payload.reshape(q, probe_idx.shape[1], chain * t, m)
+    d = pqmod.adc_accumulate(lut, codes).reshape(q, c, t)
+    d = np.where(np.asarray(valid), np.asarray(d), np.inf)
+    maps = []
+    for qi in range(q):
+        m_ = {}
+        for cid, dist in zip(
+            np.asarray(ids)[qi].ravel(), d[qi].ravel()
+        ):
+            if cid >= 0 and np.isfinite(dist):
+                m_[int(cid)] = min(dist, m_.get(int(cid), np.inf))
+        maps.append(m_)
+    return maps
+
+
+@pytest.mark.parametrize("path", ["union_fused", "union_fused_scan"])
+def test_ivfpq_union_fused_matches_block_table(pq_index, path):
+    corpus, idx, q = pq_index
+    budget = idx._chain_budget()
+    d_bt, i_bt = idx.search(np.asarray(q), nprobe=4, k=10)  # block_table
+    fn = make_search_fn(
+        idx.pool_cfg, nprobe=4, k=10, path=path,
+        score_fn=pqmod.pq_score_fn(idx.pq), pq=idx.pq, chain_budget=budget,
+    )
+    d, i = fn(idx.state, q)
+    d, i = np.asarray(d), np.asarray(i)
+    # PQ distances tie whenever two vectors share a code, so ids may differ
+    # at equal distance — distances must agree exactly rank-for-rank, and
+    # every returned id must carry its true oracle ADC distance.
+    np.testing.assert_allclose(d, d_bt, rtol=1e-4, atol=1e-3)
+    oracle = _oracle_adc(idx, q, nprobe=4)
+    for qi in range(len(oracle)):
+        for dist, cid in zip(d[qi], i[qi]):
+            assert cid in oracle[qi], (qi, cid)
+            np.testing.assert_allclose(dist, oracle[qi][cid], atol=1e-3)
+
+
+def test_ivfpq_union_fused_k_exceeds_live(pq_index):
+    corpus, idx, q = pq_index
+    fn = make_search_fn(
+        idx.pool_cfg, nprobe=1, k=300, path="union_fused",
+        pq=idx.pq, chain_budget=idx._chain_budget(),
+    )
+    d, i = fn(idx.state, q)
+    d, i = np.asarray(d), np.asarray(i)
+    assert np.isinf(d).any(), "expected padded tail past the probed list"
+    assert (i[np.isinf(d)] == -1).all()
+    assert (i[~np.isinf(d)] >= 0).all()
+
+
+def test_ivfpq_union_fused_serves():
+    """The serving runtime can now route a PQ index through the fused path
+    (the 'PQ must use block_table' restriction is gone)."""
+    from repro.core.scheduler import RuntimeConfig, ServingRuntime
+
+    x = _clustered(900, 16, seed=11)
+    idx = build_ivf(x, n_clusters=4, payload="pq", pq_m=4, block_size=16,
+                    max_chain=32, add_batch=256)
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(mode="parallel", nprobe=4, k=5,
+                      search_path="union_fused", flush_min=4,
+                      flush_interval=0.05),
+    )
+    try:
+        d, ids = rt.submit_search(x[:4]).result(timeout=120)
+        hit = (ids[:, :1] == np.arange(4)[:, None]).mean()
+        assert hit > 0.5, ids[:, 0]  # PQ is lossy; self-match mostly holds
+        new = _clustered(12, 16, seed=12) + 60.0
+        new_ids = rt.submit_insert(new).result(timeout=30)
+        time.sleep(0.1)
+        d, ids = rt.submit_search(new[:2]).result(timeout=60)
+        assert (ids[:, 0] == new_ids[:2]).all()
+    finally:
+        rt.stop()
+
+
+def test_ivfpq_union_fused_self_recall(pq_index):
+    corpus, idx, q = pq_index
+    fn = make_search_fn(
+        idx.pool_cfg, nprobe=8, k=10, path="union_fused",
+        pq=idx.pq, chain_budget=idx._chain_budget(),
+    )
+    rng = np.random.default_rng(9)
+    sel = rng.integers(0, len(corpus), 8)
+    d, i = fn(idx.state, jnp.asarray(corpus[sel]))
+    hit = (np.asarray(i) == sel[:, None]).any(axis=1).mean()
+    assert hit > 0.8, hit

@@ -5,7 +5,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import build_ivf
+from repro.core import IVFIndex, IVFIndexConfig, build_ivf
 from repro.core.scheduler import RequestRejected, RuntimeConfig, ServingRuntime
 
 
@@ -138,6 +138,71 @@ def test_search_path_union_fused_serves(base_index):
             assert ids[0, 0] == i  # self-match
     finally:
         rt.stop()
+
+
+def test_unknown_search_path_raises(base_index):
+    """A typo'd path must fail at construction, not silently benchmark
+    block_table (regression: the impl map used .get with a default)."""
+    x, make = base_index
+    with pytest.raises(ValueError, match="union_fusde"):
+        ServingRuntime(make(), RuntimeConfig(search_path="union_fusde"))
+
+
+@pytest.mark.parametrize("path", ["union_pallas", "union_fused_scan"])
+def test_runtime_accepts_full_path_set(base_index, path):
+    """Every path make_search_fn supports must be dispatchable."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(), RuntimeConfig(mode="parallel", nprobe=4, k=5, search_path=path)
+    )
+    try:
+        d, ids = rt.submit_search(x[:1]).result(timeout=60)
+        assert ids[0, 0] == 0
+    finally:
+        rt.stop()
+
+
+def test_chain_budget_recomputed_after_growth():
+    """Regression (silent recall loss): the chain budget was frozen at
+    construction, so chains grown past 2x the initial depth were truncated
+    and their candidates dropped.  A runtime that inserted far past the
+    initial depth must return the same ids as a freshly-built index over the
+    same corpus."""
+    rng = np.random.default_rng(17)
+    d = 16
+    x0 = _data(120, d, seed=31)  # ~4 blocks/cluster at block_size 8
+    x1 = _data(2000, d, seed=32)  # grows chains ~16x
+    cfg = IVFIndexConfig(
+        n_clusters=4, dim=d, block_size=8, max_chain=128, nprobe=4, k=5,
+        capacity_vectors=6000,
+    )
+    idx = IVFIndex(cfg)
+    idx.train(x0)
+    idx.add(x0)
+    init_depth = idx._chain_budget()
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(mode="parallel", nprobe=4, k=5, flush_min=4,
+                      flush_interval=0.02),
+    )
+    try:
+        chunks = [x1[i : i + 250] for i in range(0, len(x1), 250)]
+        for ch in chunks:  # sequential: deterministic insertion order
+            rt.submit_insert(ch).result(timeout=30)
+        assert idx._chain_budget() > 2 * init_depth, "test must outgrow 2x"
+        q = x1[-20:]
+        d_rt, i_rt = rt.submit_search(q).result(timeout=60)
+    finally:
+        rt.stop()
+    # oracle: same centroids (trained on x0), same insertion order
+    fresh = IVFIndex(cfg)
+    fresh.train(x0)
+    fresh.add(x0)
+    for ch in chunks:
+        fresh.add(ch)
+    d_f, i_f = fresh.search(q, nprobe=4, k=5)
+    np.testing.assert_allclose(d_rt, d_f, rtol=1e-5, atol=1e-4)
+    assert (i_rt == i_f).all()
 
 
 def test_stats_collected(base_index):
