@@ -2,25 +2,39 @@
 
 chain_walk (paper-faithful linked list) -> block_table (vectorised gather)
 -> union (dedup across batch) -> union_pallas (scalar-prefetch kernel)
--> union_fused (streaming top-k selection, no [C, Q, T] HBM writeback).
+-> union_fused (streaming top-k selection, no [C, Q, T] HBM writeback)
+-> union_fused over quantized payloads (bf16 / int8 / PQ) [+ exact re-rank].
 
 CPU wall-clock; the structural deltas (dependent-gather hops vs one gather;
 per-query vs per-batch block reads; [C, Q, T] score writeback vs [Q, K']
-accumulator) carry to TPU where they are DMA-count and HBM-traffic
-differences.  ``intermediate_bytes`` is the peak scoring intermediate each
-path materializes between scoring and selection:
+accumulator; 4 vs 2 vs 1 payload bytes per dimension) carry to TPU where
+they are DMA-count and HBM-traffic differences.
 
-* union / union_pallas: the full score tensor, ``CB * Q * T * 4`` bytes
-  (plus the same again for the masked copy fed to top_k);
-* union_fused / union_fused_scan: the on-chip accumulator, ``Q * K' * 8``
-  bytes (f32 score + i32 id) — the quantity this PR drives to O(Q*K').
+INTERPRET-MODE CAVEAT (the reason every row records ``grid_steps``): off-TPU
+the Pallas kernels run ``interpret=True`` and each grid step costs ~1-10 ms
+on this CPU regardless of how little it computes, so ``us_per_call`` for the
+pallas paths measures *step count*, not kernel quality — a fused kernel that
+moves 4x fewer HBM bytes can still wall-clock slower than its pure-XLA
+``lax.scan`` fallback here.  Sweeps are therefore sized by step count
+(configs keep every launched grid under ``MAX_GRID_STEPS``; larger ones are
+recorded as skipped), and the byte metrics — not us_per_call — are the
+quantities that transfer to hardware.
 
-The PQ sweep covers the quantized half of the ladder (IVFPQ payload):
-``block_table`` + the ADC score_fn materializes ``[Q, C, T]`` float scores
-from uint8 codes, while ``union_fused`` routes through the PQ-ADC streaming
-kernel (``ivf_pq_block_topk``) and keeps the ``[Q, K']`` accumulator shape.
+Metrics per row:
 
-Writes ``BENCH_scan_paths.json`` at the repo root when run as a script.
+* ``intermediate_bytes`` — peak scoring intermediate between scoring and
+  selection ([CB, Q, T] f32 writeback for the union paths vs the [Q, K']
+  on-chip accumulator for the fused ones);
+* ``payload_bytes_moved`` — pool-payload bytes DMA'd by the scan loop
+  (C * T * D * itemsize): the quantity the dtype axis divides (f32 -> bf16
+  halves it, f32 -> int8 quarters it);
+* ``side_bytes_moved`` — non-payload per-slot bytes riding along (i32 ids,
+  plus f32 scales for int8);
+* ``grid_steps`` — Pallas grid steps launched (0 for pure-XLA paths);
+* ``recall_at_10`` — dtype sweep only, vs the exact fp32 brute-force oracle.
+
+Writes ``BENCH_scan_paths.json`` ({"meta": ..., "rows": [...]}) at the repo
+root when run as a script.
 """
 
 from __future__ import annotations
@@ -35,7 +49,8 @@ import jax.numpy as jnp
 from benchmarks.common import timed
 from repro.core import build_ivf
 from repro.core import pq as pqmod
-from repro.core.search import default_kprime, make_search_fn
+from repro.core.metrics import recall_at_k
+from repro.core.search import default_kprime, exact_search, make_search_fn
 from repro.data.synthetic import sift_like
 
 PATHS = (
@@ -48,6 +63,39 @@ PATHS = (
 )
 
 PQ_PATHS = ("block_table", "union_fused", "union_fused_scan")
+
+DTYPES = ("float32", "bfloat16", "int8")
+
+# interpret-mode grid-step budget per launched kernel (see module docstring):
+# ~1-10 ms/step on CPU puts 512 steps at single-digit seconds per call.
+MAX_GRID_STEPS = 512
+
+ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def candidate_cap(*, q: int, nprobe: int, budget: int, pool_blocks: int) -> int:
+    """Static candidate-block count the fused kernels launch over: the
+    NULL-padded union [Q*nprobe*budget] compacted to at most the pool size
+    (every live block appears at most once)."""
+    return min(q * nprobe * budget, pool_blocks)
+
+
+def grid_steps(path: str, *, q: int, nprobe: int, budget: int,
+               pool_blocks: int, pq: bool = False,
+               rerank: bool = False) -> int:
+    """Pallas grid steps a config launches (0 = no kernel: pure XLA)."""
+    if path == "union_pallas":
+        # ivf_block_scan runs over the *uncompacted* NULL-padded union
+        return q * nprobe * budget
+    if path == "union_fused":
+        cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                            pool_blocks=pool_blocks)
+        q_tile = 8 if pq else 128  # kernel defaults (LUT tile vs query tile)
+        steps = -(-q // q_tile) * cap
+        if rerank:
+            steps += -(-q // 8)  # one re-rank step per 8-query tile
+        return steps
+    return 0
 
 
 def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
@@ -73,16 +121,179 @@ def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
     return q * nprobe * t * 4
 
 
+def payload_bytes_moved(path: str, *, q: int, nprobe: int, budget: int,
+                        t: int, d: int, pool_blocks: int,
+                        dtype: str = "float32", pq_m: int = 0) -> int:
+    """Pool-payload bytes the scan loop reads from HBM.  This is the
+    latency floor the dtype axis attacks: bf16 halves it, int8 quarters it,
+    PQ reads 1 byte per subquantizer."""
+    per_vec = pq_m if pq_m else d * ITEMSIZE[dtype]
+    if path in ("union_fused", "union_fused_scan"):
+        cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                            pool_blocks=pool_blocks)
+        return cap * t * per_vec
+    # plain union reads the NULL-padded (uncompacted) union once per batch;
+    # the per-query gather paths read q*nprobe*budget slots — numerically
+    # the same expression, since union padding equals the per-query total
+    return q * nprobe * budget * t * per_vec
+
+
+def side_bytes_moved(path: str, *, q: int, nprobe: int, budget: int,
+                     t: int, pool_blocks: int, dtype: str = "float32") -> int:
+    """Non-payload per-slot bytes riding along with the scan (i32 vector
+    ids; int8 additionally streams one f32 scale per vector)."""
+    per_slot = 4 + (4 if dtype == "int8" else 0)
+    if path in ("union_fused", "union_fused_scan"):
+        cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                            pool_blocks=pool_blocks)
+        return cap * t * per_slot
+    return q * nprobe * budget * t * per_slot
+
+
 # (corpus size, block size T, query batch Q) — spans batch sizes and chain
-# depths (smaller T => deeper per-cluster chains for the same corpus)
-CONFIGS = ((20_000, 64, 10), (20_000, 64, 64), (10_000, 32, 10))
+# depths (smaller T => deeper per-cluster chains for the same corpus),
+# sized so every launched Pallas grid stays under MAX_GRID_STEPS.
+CONFIGS = ((6_000, 64, 10), (6_000, 64, 64), (4_000, 32, 10))
 
 
-def run_pq(nprobe=8, k=10, iters=3, n=10_000, block_size=64, batch=64,
+def _row_common(path, idx, *, n, batch, nprobe, budget, block_size, k,
+                dtype="float32", pq_m=0, rerank=False):
+    pool_blocks = idx.pool_cfg.n_blocks
+    return {
+        "path": path,
+        "payload": "pq" if pq_m else "flat",
+        "dtype": "uint8-codes" if pq_m else dtype,
+        "rerank": rerank,
+        "n": n,
+        "batch": batch,
+        "block_size": block_size,
+        "chain_budget": budget,
+        "grid_steps": grid_steps(
+            path, q=batch, nprobe=nprobe, budget=budget,
+            pool_blocks=pool_blocks, pq=bool(pq_m), rerank=rerank,
+        ),
+        "intermediate_bytes": intermediate_bytes(
+            path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
+            k=k, pq_m=pq_m,
+        ),
+        "payload_bytes_moved": payload_bytes_moved(
+            path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
+            d=idx.pool_cfg.dim, pool_blocks=pool_blocks, dtype=dtype,
+            pq_m=pq_m,
+        ),
+        "side_bytes_moved": side_bytes_moved(
+            path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
+            pool_blocks=pool_blocks, dtype=dtype,
+        ),
+    }
+
+
+def run(nprobe=8, k=10, configs=CONFIGS, iters=3):
+    """Flat-f32 ladder: every path cross-checked against the first, timed
+    unless its grid would blow the interpret-mode step budget."""
+    rows = []
+    indexes: dict = {}
+    for n, block_size, batch in configs:
+        if (n, block_size) not in indexes:
+            corpus = sift_like(n, 128, seed=7)
+            indexes[(n, block_size)] = (corpus, build_ivf(
+                corpus, n_clusters=64, block_size=block_size,
+                max_chain=64, nprobe=nprobe, k=k, add_batch=8192))
+        corpus, idx = indexes[(n, block_size)]
+        budget = idx._chain_budget()  # live chain depth, pow2-bucketed
+        rng = np.random.default_rng(8)
+        q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+        ref_ids = None
+        for path in PATHS:
+            row = _row_common(path, idx, n=n, batch=batch, nprobe=nprobe,
+                              budget=budget, block_size=block_size, k=k)
+            if row["grid_steps"] > MAX_GRID_STEPS:
+                row.update(us_per_call=None, skipped="grid_steps over "
+                           f"MAX_GRID_STEPS={MAX_GRID_STEPS}")
+                rows.append(row)
+                continue
+            fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k,
+                                path=path, chain_budget=budget)
+            d, ids = fn(idx.state, q)
+            jax.block_until_ready(ids)
+            if ref_ids is None:
+                ref_ids = np.asarray(ids)
+            else:
+                assert (np.asarray(ids) == ref_ids).all(), (
+                    f"{path} diverged (batch={batch}, T={block_size})"
+                )
+            t = timed(lambda: fn(idx.state, q), iters=iters)
+            row["us_per_call"] = round(t * 1e6, 1)
+            rows.append(row)
+    return rows
+
+
+def run_dtypes(nprobe=8, k=10, iters=3, n=8_000, block_size=64, batch=64,
+               n_clusters=384):
+    """The dtype axis on ``union_fused`` at the acceptance batch Q=64:
+    payload bytes drop 2x (bf16) / 4x (int8) while the exact re-rank
+    epilogue holds recall@10 at the fp32 level.  Asserts the acceptance
+    criteria so regeneration enforces them.
+
+    The coarse quantizer is finer here (384 lists) than in the f32 ladder:
+    int8 rows are *residual* codes, so more centroids directly shrink the
+    8-bit quantization step (the same nprobe/cluster geometry is used for
+    every dtype, so the comparison is apples-to-apples)."""
+    corpus = sift_like(n, 128, seed=7)
+    rng = np.random.default_rng(8)
+    qsel = rng.integers(0, n, batch)
+    q = jnp.asarray(corpus[qsel] + 0.01)
+    _, true_ids = exact_search(jnp.asarray(corpus), q, k)
+    true_ids = np.asarray(true_ids)
+
+    rows = []
+    recalls = {}
+    for dtype in DTYPES:
+        idx = build_ivf(
+            corpus, n_clusters=n_clusters, block_size=block_size,
+            max_chain=64, nprobe=nprobe, k=k, add_batch=8192, dtype=dtype,
+        )
+        budget = idx._chain_budget()
+        variants = [False] if dtype == "float32" else [False, True]
+        for rerank in variants:
+            row = _row_common(
+                "union_fused", idx, n=n, batch=batch, nprobe=nprobe,
+                budget=budget, block_size=block_size, k=k, dtype=dtype,
+                rerank=rerank,
+            )
+            assert row["grid_steps"] <= MAX_GRID_STEPS, row
+            fn = make_search_fn(
+                idx.pool_cfg, nprobe=nprobe, k=k, path="union_fused",
+                chain_budget=budget, rerank=rerank,
+            )
+            d, ids = fn(idx.state, q)
+            jax.block_until_ready(ids)
+            rec = recall_at_k(np.asarray(ids), true_ids, k)
+            recalls[(dtype, rerank)] = rec
+            t = timed(lambda: fn(idx.state, q), iters=iters)
+            row.update(us_per_call=round(t * 1e6, 1),
+                       recall_at_10=round(rec, 4))
+            rows.append(row)
+
+    # acceptance: payload bytes 2x / 4x down, int8+rerank recall within
+    # 0.5% of the fp32 fused path
+    f32 = next(r for r in rows if r["dtype"] == "float32")
+    bf16 = next(r for r in rows if r["dtype"] == "bfloat16")
+    i8 = next(r for r in rows if r["dtype"] == "int8")
+    assert f32["payload_bytes_moved"] >= 2 * bf16["payload_bytes_moved"]
+    assert f32["payload_bytes_moved"] >= 4 * i8["payload_bytes_moved"]
+    gap = recalls[("float32", False)] - recalls[("int8", True)]
+    assert gap <= 0.005, (
+        f"int8+rerank recall {recalls[('int8', True)]:.4f} more than 0.5% "
+        f"below fp32 {recalls[('float32', False)]:.4f}"
+    )
+    return rows
+
+
+def run_pq(nprobe=8, k=10, iters=3, n=4_000, block_size=32, batch=16,
            pq_m=16):
-    """Quantized-payload sweep at the acceptance batch size Q=64: the fused
-    path's peak scoring intermediate stays [Q, K']-scale while block_table
-    materializes [Q, C, T] ADC scores."""
+    """Quantized-PQ sweep (batch sized by grid steps: the PQ kernel's
+    q_tile is 8, so Q=16 keeps the grid at 2 * cap steps)."""
     corpus = sift_like(n, 128, seed=7)
     idx = build_ivf(
         corpus, n_clusters=64, payload="pq", pq_m=pq_m,
@@ -95,6 +306,14 @@ def run_pq(nprobe=8, k=10, iters=3, n=10_000, block_size=64, batch=64,
     rows = []
     ref_d = None
     for path in PQ_PATHS:
+        row = _row_common(path, idx, n=n, batch=batch, nprobe=nprobe,
+                          budget=budget, block_size=block_size, k=k,
+                          pq_m=pq_m)
+        if row["grid_steps"] > MAX_GRID_STEPS:
+            row.update(us_per_call=None, skipped="grid_steps over "
+                       f"MAX_GRID_STEPS={MAX_GRID_STEPS}")
+            rows.append(row)
+            continue
         fn = make_search_fn(
             idx.pool_cfg, nprobe=nprobe, k=k, path=path,
             score_fn=pqmod.pq_score_fn(idx.pq), pq=idx.pq,
@@ -112,72 +331,48 @@ def run_pq(nprobe=8, k=10, iters=3, n=10_000, block_size=64, batch=64,
                 err_msg=f"pq path {path} diverged",
             )
         t = timed(lambda: fn(idx.state, q), iters=iters)
-        rows.append({
-            "path": path,
-            "payload": "pq",
-            "pq_m": pq_m,
-            "n": n,
-            "batch": batch,
-            "block_size": block_size,
-            "chain_budget": budget,
-            "us_per_call": round(t * 1e6, 1),
-            "intermediate_bytes": intermediate_bytes(
-                path, q=batch, nprobe=nprobe, budget=budget,
-                t=block_size, k=k, pq_m=pq_m,
-            ),
-        })
+        row["us_per_call"] = round(t * 1e6, 1)
+        rows.append(row)
     return rows
 
 
-def run(nprobe=8, k=10, configs=CONFIGS, iters=3):
-    rows = []
-    indexes: dict = {}
-    for n, block_size, batch in configs:
-        if (n, block_size) not in indexes:
-            corpus = sift_like(n, 128, seed=7)
-            indexes[(n, block_size)] = (corpus, build_ivf(
-                corpus, n_clusters=64, block_size=block_size,
-                max_chain=64, nprobe=nprobe, k=k, add_batch=8192))
-        corpus, idx = indexes[(n, block_size)]
-        budget = idx._chain_budget()  # live chain depth, pow2-bucketed
-        rng = np.random.default_rng(8)
-        q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
-        ref_ids = None
-        for path in PATHS:
-            fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k,
-                                path=path, chain_budget=budget)
-            d, ids = fn(idx.state, q)
-            jax.block_until_ready(ids)
-            if ref_ids is None:
-                ref_ids = np.asarray(ids)
-            else:
-                assert (np.asarray(ids) == ref_ids).all(), (
-                    f"{path} diverged (batch={batch}, T={block_size})"
-                )
-            t = timed(lambda: fn(idx.state, q), iters=iters)
-            rows.append({
-                "path": path,
-                "n": n,
-                "batch": batch,
-                "block_size": block_size,
-                "chain_budget": budget,
-                "us_per_call": round(t * 1e6, 1),
-                "intermediate_bytes": intermediate_bytes(
-                    path, q=batch, nprobe=nprobe, budget=budget,
-                    t=block_size, k=k,
-                ),
-            })
-    return rows
+META = {
+    "schema": {
+        "us_per_call": "median wall-clock; null when skipped (see "
+                       "interpret_mode_caveat)",
+        "grid_steps": "Pallas grid steps launched; 0 = pure-XLA path",
+        "intermediate_bytes": "peak scoring intermediate between scoring "
+                              "and selection",
+        "payload_bytes_moved": "pool-payload bytes the scan loop reads "
+                               "(C*T*D*itemsize) — the dtype axis divides "
+                               "this 2x (bf16) / 4x (int8)",
+        "side_bytes_moved": "per-slot i32 ids (+ f32 scales for int8) "
+                            "riding along with the scan",
+        "recall_at_10": "dtype sweep only: vs exact fp32 brute force",
+        "skipped": "present when the config was not timed",
+    },
+    "interpret_mode_caveat": (
+        "Off-TPU, Pallas kernels run interpret=True at ~1-10 ms per grid "
+        "step regardless of compute, so us_per_call for pallas paths "
+        "measures grid-step count, not kernel quality; sweeps are sized by "
+        "step count (grid_steps <= MAX_GRID_STEPS) and the byte columns "
+        "are the quantities that carry to TPU."
+    ),
+    "max_grid_steps": MAX_GRID_STEPS,
+}
 
 
 def main():
-    rows = run() + run_pq()
-    print("path,payload,n,batch,block_size,us_per_call,intermediate_bytes")
+    rows = run() + run_dtypes() + run_pq()
+    print("path,payload,dtype,rerank,n,batch,block_size,us_per_call,"
+          "grid_steps,intermediate_bytes,payload_bytes_moved")
     for r in rows:
-        print(f"{r['path']},{r.get('payload', 'flat')},{r['n']},{r['batch']},"
-              f"{r['block_size']},{r['us_per_call']},{r['intermediate_bytes']}")
+        print(f"{r['path']},{r['payload']},{r['dtype']},{r['rerank']},"
+              f"{r['n']},{r['batch']},{r['block_size']},{r['us_per_call']},"
+              f"{r['grid_steps']},{r['intermediate_bytes']},"
+              f"{r['payload_bytes_moved']}")
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scan_paths.json"
-    out.write_text(json.dumps(rows, indent=2) + "\n")
+    out.write_text(json.dumps({"meta": META, "rows": rows}, indent=2) + "\n")
     print(f"wrote {out}")
     return rows
 

@@ -33,6 +33,17 @@ import numpy as np
 
 NULL = jnp.int32(-1)  # null block pointer / empty id slot
 
+# admissible flat-payload dtypes (the dtype axis of the whole stack):
+# float32 is exact, bfloat16 halves and int8 quarters the HBM bytes of the
+# dominant scan loop.  int8 rows are symmetric per-vector quantized
+# (code = round(v / s), s = max|v| / 127) with the scale stored in
+# ``IVFState.pool_scales`` alongside ``pool_ids``.
+FLAT_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+}
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -46,13 +57,25 @@ class PoolConfig:
     max_chain: int  # longest admissible block chain per cluster
     payload: str = "flat"  # "flat" (raw vectors) | "pq" (codes)
     pq_m: int = 0  # number of PQ subquantizers (payload == "pq")
-    dtype: Any = jnp.float32
+    dtype: Any = jnp.float32  # flat payload dtype: float32 | bfloat16 | int8
 
     def __post_init__(self):
         if self.payload not in ("flat", "pq"):
             raise ValueError(f"unknown payload {self.payload!r}")
         if self.payload == "pq" and self.pq_m <= 0:
             raise ValueError("pq payload requires pq_m > 0")
+        if isinstance(self.dtype, str):
+            if self.dtype not in FLAT_DTYPES:
+                raise ValueError(
+                    f"flat payload dtype must be one of "
+                    f"{sorted(FLAT_DTYPES)}, got {self.dtype!r}"
+                )
+            object.__setattr__(self, "dtype", FLAT_DTYPES[self.dtype])
+        if self.payload == "flat" and self.dtype not in FLAT_DTYPES.values():
+            raise ValueError(
+                f"flat payload dtype must be one of {sorted(FLAT_DTYPES)}, "
+                f"got {self.dtype}"
+            )
 
     # fields that define pytree-static identity
     def payload_shape(self) -> tuple:
@@ -63,6 +86,18 @@ class PoolConfig:
     def payload_dtype(self):
         return self.dtype if self.payload == "flat" else jnp.uint8
 
+    @property
+    def has_scales(self) -> bool:
+        """int8 flat payloads carry a per-vector dequantization scale."""
+        return self.payload == "flat" and self.dtype == jnp.int8
+
+    def scales_shape(self) -> tuple:
+        # zero-size when unused so the state pytree stays lean; every
+        # access is statically gated on ``has_scales``
+        if self.has_scales:
+            return (self.n_blocks, self.block_size)
+        return (0, 0)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +107,7 @@ class IVFState:
     centroids: jax.Array  # [N, D] coarse quantizer
     pool_payload: jax.Array  # [P, T_m, D] vectors | [P, T_m, M] u8 codes
     pool_ids: jax.Array  # [P, T_m] i32 global ids, NULL = empty slot
+    pool_scales: jax.Array  # [P, T_m] f32 int8 dequant scales ([0,0] unused)
     next_block: jax.Array  # [P] i32 linked-list next pointer (paper header)
     cluster_head: jax.Array  # [N] i32 first block of each chain
     cluster_tail: jax.Array  # [N] i32 last block of each chain
@@ -94,9 +130,12 @@ def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
             f"centroids {centroids.shape} != {(n, cfg.dim)} from config"
         )
     return IVFState(
-        centroids=jnp.asarray(centroids, cfg.dtype),
+        # the coarse quantizer stays full precision regardless of the
+        # payload dtype — quantization applies to pool rows, not centroids
+        centroids=jnp.asarray(centroids, jnp.float32),
         pool_payload=jnp.zeros(cfg.payload_shape(), cfg.payload_dtype()),
         pool_ids=jnp.full((p, cfg.block_size), NULL, jnp.int32),
+        pool_scales=jnp.zeros(cfg.scales_shape(), jnp.float32),
         next_block=jnp.full((p,), NULL, jnp.int32),
         cluster_head=jnp.full((n,), NULL, jnp.int32),
         cluster_tail=jnp.full((n,), NULL, jnp.int32),
@@ -110,6 +149,23 @@ def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
         num_vectors=jnp.zeros((), jnp.int32),
         num_dropped=jnp.zeros((), jnp.int32),
     )
+
+
+def quantize_int8(rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector int8 quantization: rows [..., D] f32 ->
+    (codes [..., D] i8, scales [...] f32) with v ~= codes * scale.
+
+    The scale floor keeps all-zero rows representable (codes 0, scale tiny)
+    without a divide-by-zero."""
+    scale = jnp.max(jnp.abs(rows), axis=-1) / 127.0
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    codes = jnp.clip(jnp.round(rows / scale[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """codes [..., D] i8, scales [...] f32 -> reconstructed rows f32."""
+    return codes.astype(jnp.float32) * scales[..., None]
 
 
 def alloc_blocks(state: IVFState, j: jax.Array, valid: jax.Array) -> jax.Array:

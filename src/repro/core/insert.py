@@ -30,6 +30,7 @@ from repro.core.block_pool import (
     alloc_available,
     alloc_blocks,
     commit_alloc,
+    quantize_int8,
 )
 
 
@@ -153,6 +154,17 @@ def insert_payload(
     moff = did % tm
     vec_blk = cluster_blocks[assign, jnp.clip(mid, 0, cfg.max_chain - 1)]
     rows = jnp.where(valid, vec_blk, cfg.n_blocks)
+    # quantize-on-insert (int8 flat payloads): the raw f32 rows are encoded
+    # once here — as *residuals* against their coarse centroid (Faiss
+    # IVF-SQ by_residual semantics: the residual dynamic range is a
+    # fraction of the raw vectors', so the 8-bit step shrinks with it) —
+    # and only the codes + per-vector scales become resident; resident data
+    # is never re-encoded or copied (paper Alg. 2 invariant)
+    pool_scales = state.pool_scales
+    if cfg.has_scales:
+        residuals = payload.astype(jnp.float32) - state.centroids[assign]
+        payload, scales = quantize_int8(residuals)
+        pool_scales = pool_scales.at[rows, moff].set(scales, mode="drop")
     pool_payload = state.pool_payload.at[rows, moff].set(
         payload.astype(state.pool_payload.dtype), mode="drop"
     )
@@ -165,6 +177,7 @@ def insert_payload(
         state,
         pool_payload=pool_payload,
         pool_ids=pool_ids,
+        pool_scales=pool_scales,
         next_block=next_block,
         cluster_head=cluster_head,
         cluster_tail=cluster_tail,

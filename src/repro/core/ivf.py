@@ -34,6 +34,8 @@ class IVFIndexConfig:
     capacity_vectors: Optional[int] = None
     payload: str = "flat"  # "flat" | "pq"
     pq_m: int = 0
+    dtype: str = "float32"  # flat payload dtype: float32 | bfloat16 | int8
+    rerank: bool = False  # exact-fp32 re-rank epilogue (fused paths only)
     nprobe: int = 16
     k: int = 10
     rearrange_threshold: int = 10_000  # T'_m (paper Table 1 sweeps this)
@@ -59,6 +61,7 @@ class IVFIndexConfig:
             max_chain=self.max_chain,
             payload=self.payload,
             pq_m=self.pq_m,
+            dtype=self.dtype,
         )
 
 
@@ -120,7 +123,8 @@ class IVFIndex:
         return min(b, self.cfg.max_chain)
 
     def _search_fn(self, nprobe: int, k: int, budget: int):
-        key = (nprobe, k, self.cfg.search_path, self.cfg.use_kernel, budget)
+        key = (nprobe, k, self.cfg.search_path, self.cfg.use_kernel, budget,
+               self.cfg.rerank)
         if key not in self._search_fns:
             score_fn = None
             if self.cfg.payload == "pq":
@@ -137,6 +141,7 @@ class IVFIndex:
                 score_fn=score_fn,
                 chain_budget=budget,
                 pq=self.pq,
+                rerank=self.cfg.rerank,
             )
         return self._search_fns[key]
 

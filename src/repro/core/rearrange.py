@@ -52,6 +52,8 @@ def rearrange_cluster(
     safe = jnp.where(chain_valid, table, 0)
     tmp_payload = state.pool_payload[safe]  # [mc, T, ...]
     tmp_ids = state.pool_ids[safe]  # [mc, T]
+    if cfg.has_scales:  # int8 dequant scales travel with their rows
+        tmp_scales = state.pool_scales[safe]  # [mc, T]
 
     # ---- allocate a contiguous run of nblk fresh blocks ------------------
     # Bump-only (NOT via the free stack): the whole point of rearrangement
@@ -65,6 +67,9 @@ def rearrange_cluster(
     # dense rewrite (the "merge" of Alg. 3 lines 9-11)
     pool_payload = state.pool_payload.at[rows].set(tmp_payload, mode="drop")
     pool_ids = state.pool_ids.at[rows].set(tmp_ids, mode="drop")
+    pool_scales = state.pool_scales
+    if cfg.has_scales:
+        pool_scales = pool_scales.at[rows].set(tmp_scales, mode="drop")
 
     # ---- header/table updates (paper line 11) ----------------------------
     nxt = jnp.where(
@@ -98,6 +103,7 @@ def rearrange_cluster(
         state,
         pool_payload=pool_payload,
         pool_ids=pool_ids,
+        pool_scales=pool_scales,
         next_block=next_block,
         cluster_head=cluster_head,
         cluster_tail=cluster_tail,

@@ -28,6 +28,7 @@ mechanisms (DESIGN.md §2, §5):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -72,6 +73,12 @@ class RuntimeConfig:
     # union_pallas | union_fused | union_fused_scan (typos raise ValueError
     # at construction — a silent fallback would serve the wrong path)
     search_path: str = "block_table"
+    # exact-fp32 re-rank epilogue over the fused survivors (fused paths
+    # only; rejected at construction otherwise)
+    rerank: bool = False
+    # latency samples kept for stats(); unbounded lists grow forever under
+    # sustained traffic
+    latency_window: int = 10_000
 
 
 class ServingRuntime:
@@ -86,8 +93,17 @@ class ServingRuntime:
         self._stop = threading.Event()
         self._search_q: queue.Queue = queue.Queue()
         self._insert_q: queue.Queue = queue.Queue()
-        self._search_lat: list[float] = []
-        self._insert_lat: list[float] = []
+        # bounded: stats() reports over a sliding window instead of every
+        # sample since process start.  Appends and snapshots share a lock —
+        # iterating a deque while a worker appends raises RuntimeError
+        # (unlike the copy-a-list-under-GIL idiom it replaced).
+        self._lat_lock = threading.Lock()
+        self._search_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
+        self._insert_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
         self._rejects = 0
         self._fused_pending = queue.Queue()
         self._build_steps()
@@ -105,7 +121,9 @@ class ServingRuntime:
         # fail at construction, not inside the worker thread's first jit
         # trace: raises ValueError on an unknown path (no silent fallback)
         # and NotImplementedError on a payload mismatch
-        self._search_impl = resolve_search_impl(pc, cfg.search_path)
+        self._search_impl = resolve_search_impl(
+            pc, cfg.search_path, cfg.rerank
+        )
         # state-free: centroids come from the traced state argument, so the
         # cached steps never bake a stale pool copy in as jit constants
         self._score_fn = pqmod.pq_score_fn(pq) if pq is not None else None
@@ -152,7 +170,7 @@ class ServingRuntime:
             d, i = self._search_impl(
                 pc, state, queries, nprobe=cfg.nprobe, k=cfg.k,
                 score_fn=self._score_fn, chain_budget=budget,
-                pq=self.index.pq,
+                pq=self.index.pq, rerank=cfg.rerank,
             )
             return d, jnp.where(valid[:, None], i, -1)
 
@@ -197,9 +215,12 @@ class ServingRuntime:
             t.join(timeout=5)
 
     def stats(self, timeout_ms: float = 20.0):
+        with self._lat_lock:
+            search = tuple(self._search_lat)
+            insert = tuple(self._insert_lat)
         return {
-            "search": LatencyStats.from_samples(self._search_lat, timeout_ms),
-            "insert": LatencyStats.from_samples(self._insert_lat, timeout_ms),
+            "search": LatencyStats.from_samples(search, timeout_ms),
+            "insert": LatencyStats.from_samples(insert, timeout_ms),
             "rejected": self._rejects,
         }
 
@@ -264,31 +285,42 @@ class ServingRuntime:
         valid[:n] = True
         return out, valid
 
+    @staticmethod
+    def _fail_futures(items: list[_Timed], exc: BaseException):
+        """Propagate a mid-step failure: an unresolved future would hang its
+        caller forever."""
+        for it in items:
+            if not it.future.done():
+                it.future.set_exception(exc)
+
     def _apply_insert(self, items: list[_Timed]):
         items, overflow = self._split_flush(items)
         for it in overflow:  # beyond flush_max: requeue, never drop
             self._insert_q.put(it)
-        vecs = self._pending_vectors(items)
-        b = len(vecs)
-        ids = np.arange(
-            self.index._next_id, self.index._next_id + b, dtype=np.int32
-        )
-        self.index._next_id += b
-        bucket = self._bucket(b)
-        pv, valid = self._padded(vecs, bucket)
-        pids = np.full((bucket,), -1, np.int32)
-        pids[:b] = ids
-        with self._state_lock:
-            self.index.state = self._insert_step(
-                self.index.state,
-                jnp.asarray(pv),
-                jnp.asarray(pids),
-                jnp.asarray(valid),
+        try:
+            vecs = self._pending_vectors(items)
+            b = len(vecs)
+            ids = np.arange(
+                self.index._next_id, self.index._next_id + b, dtype=np.int32
             )
-            st = self.index.state
-            self._budget = None  # chains may have grown
-        jax.block_until_ready(st.cluster_len)
-        self._resolve_inserts(items, ids)
+            self.index._next_id += b
+            bucket = self._bucket(b)
+            pv, valid = self._padded(vecs, bucket)
+            pids = np.full((bucket,), -1, np.int32)
+            pids[:b] = ids
+            with self._state_lock:
+                self.index.state = self._insert_step(
+                    self.index.state,
+                    jnp.asarray(pv),
+                    jnp.asarray(pids),
+                    jnp.asarray(valid),
+                )
+                st = self.index.state
+                self._budget = None  # chains may have grown
+            jax.block_until_ready(st.cluster_len)
+            self._resolve_inserts(items, ids)
+        except Exception as e:
+            self._fail_futures(items, e)
 
     def _resolve_inserts(self, items: list[_Timed], ids: np.ndarray):
         """Each future gets exactly the ids of its own vectors."""
@@ -296,7 +328,8 @@ class ServingRuntime:
         off = 0
         for it in items:
             n = len(np.atleast_2d(it.payload))
-            self._insert_lat.append(t - it.t_arrival)
+            with self._lat_lock:
+                self._insert_lat.append(t - it.t_arrival)
             it.future.set_result(ids[off : off + n])
             off += n
 
@@ -327,22 +360,32 @@ class ServingRuntime:
         return items
 
     def _run_search(self, items: list[_Timed]):
-        qs = [np.atleast_2d(i.payload) for i in items]
-        counts = [len(q) for q in qs]
-        batch = np.concatenate(qs, 0)
-        pb, valid = self._padded(batch, self._bucket(len(batch)))
-        with self._state_lock:
-            st = self.index.state
-            step = self._search_step_for(self._current_budget())
-            d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
-        d, i = np.asarray(d), np.asarray(i)
-        t = time.perf_counter()
-        off = 0
-        for it, c in zip(items, counts):
-            self._search_lat.append(t - it.t_arrival)
-            it.future.set_result((d[off : off + c], i[off : off + c]))
-            off += c
-            self._slots.release()
+        """Dispatch one search batch.  A mid-step exception (bad payload
+        shape, jit failure, ...) must not leak: every batched future is
+        resolved — result or exception — and every acquired slot is
+        released in the ``finally`` (one slot per item, taken at submit)."""
+        try:
+            qs = [np.atleast_2d(i.payload) for i in items]
+            counts = [len(q) for q in qs]
+            batch = np.concatenate(qs, 0)
+            pb, valid = self._padded(batch, self._bucket(len(batch)))
+            with self._state_lock:
+                st = self.index.state
+                step = self._search_step_for(self._current_budget())
+                d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
+            d, i = np.asarray(d), np.asarray(i)
+            t = time.perf_counter()
+            off = 0
+            for it, c in zip(items, counts):
+                with self._lat_lock:
+                    self._search_lat.append(t - it.t_arrival)
+                it.future.set_result((d[off : off + c], i[off : off + c]))
+                off += c
+        except Exception as e:
+            self._fail_futures(items, e)
+        finally:
+            for _ in items:
+                self._slots.release()
 
     def _search_loop(self):
         serial_insert_items: list[_Timed] = []
@@ -381,41 +424,52 @@ class ServingRuntime:
                 self._run_search(items)
 
     def _run_fused(self, s_items: list[_Timed], i_items: list[_Timed]):
-        qs = [np.atleast_2d(x.payload) for x in s_items]
-        counts = [len(q) for q in qs]
-        qbatch = np.concatenate(qs, 0)
+        """One fused search+insert dispatch.  Same leak discipline as
+        ``_run_search``: a mid-step exception resolves every search *and*
+        insert future, and the search slots are released in the ``finally``
+        (requeued overflow items are excluded — they will be re-dispatched)."""
         i_items, overflow = self._split_flush(i_items)
         for it in overflow:  # beyond flush_max: requeue, never drop
             self._insert_q.put(it)
-        vecs = self._pending_vectors(i_items)
-        b = len(vecs)
-        ids = np.arange(
-            self.index._next_id, self.index._next_id + b, dtype=np.int32
-        )
-        self.index._next_id += b
-        pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
-        pv, ivalid = self._padded(vecs, self._bucket(b))
-        pids = np.full((len(ivalid),), -1, np.int32)
-        pids[:b] = ids
-        with self._state_lock:
-            fused_step = self._fused_step_for(self._current_budget())
-            self.index.state, d, i = fused_step(
-                self.index.state,
-                jnp.asarray(pq_),
-                jnp.asarray(qvalid),
-                jnp.asarray(pv),
-                jnp.asarray(pids),
-                jnp.asarray(ivalid),
+        try:
+            qs = [np.atleast_2d(x.payload) for x in s_items]
+            counts = [len(q) for q in qs]
+            qbatch = np.concatenate(qs, 0)
+            vecs = self._pending_vectors(i_items)
+            b = len(vecs)
+            ids = np.arange(
+                self.index._next_id, self.index._next_id + b, dtype=np.int32
             )
-            st = self.index.state
-            self._budget = None  # chains may have grown
-        d, i = np.asarray(d), np.asarray(i)
-        jax.block_until_ready(st.cluster_len)
-        t = time.perf_counter()
-        off = 0
-        for it, c in zip(s_items, counts):
-            self._search_lat.append(t - it.t_arrival)
-            it.future.set_result((d[off : off + c], i[off : off + c]))
-            off += c
-            self._slots.release()
-        self._resolve_inserts(i_items, ids)
+            self.index._next_id += b
+            pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
+            pv, ivalid = self._padded(vecs, self._bucket(b))
+            pids = np.full((len(ivalid),), -1, np.int32)
+            pids[:b] = ids
+            with self._state_lock:
+                fused_step = self._fused_step_for(self._current_budget())
+                self.index.state, d, i = fused_step(
+                    self.index.state,
+                    jnp.asarray(pq_),
+                    jnp.asarray(qvalid),
+                    jnp.asarray(pv),
+                    jnp.asarray(pids),
+                    jnp.asarray(ivalid),
+                )
+                st = self.index.state
+                self._budget = None  # chains may have grown
+            d, i = np.asarray(d), np.asarray(i)
+            jax.block_until_ready(st.cluster_len)
+            t = time.perf_counter()
+            off = 0
+            for it, c in zip(s_items, counts):
+                with self._lat_lock:
+                    self._search_lat.append(t - it.t_arrival)
+                it.future.set_result((d[off : off + c], i[off : off + c]))
+                off += c
+            self._resolve_inserts(i_items, ids)
+        except Exception as e:
+            self._fail_futures(s_items, e)
+            self._fail_futures(i_items, e)
+        finally:
+            for _ in s_items:
+                self._slots.release()

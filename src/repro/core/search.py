@@ -20,6 +20,19 @@ kernel (``repro.kernels.ivf_scan``) via ``scan_impl="pallas"``.
   accumulator in VMEM, so the ``[C, Q, T]`` score tensor is never
   materialized to HBM (``union_fused_scan`` is the chunked ``lax.scan``
   fallback with the same semantics).  See ``docs/search_paths.md``.
+
+The fused paths dispatch on the payload dtype (``PoolConfig.dtype``):
+float32 and bfloat16 blocks route through ``ivf_block_topk``, int8
+*residual* codes through the integer-MXU ``ivf_block_topk_int8``
+(per-vector scales from ``IVFState.pool_scales``, per-probe query residual
+codes selected via the probe-slot index), PQ codes through
+``ivf_pq_block_topk``.  The fused kernels identify candidates by *packed
+pool location* (``block*T + offset``, derived in-kernel from the prefetched
+block id at zero HBM cost); the final top-k resolves locations to global
+ids with one ``[Q, k]`` gather.  With ``rerank=True`` the K' survivor rows
+are gathered by location and an exact-fp32 re-rank epilogue
+(``rerank_topk``; jnp fallback for the scan impl) re-sorts them before the
+final top-k — recovering the recall a low-precision first pass gives up.
 """
 
 from __future__ import annotations
@@ -92,10 +105,17 @@ def gather_candidate_blocks(
 
 
 def flat_block_scores(queries: jax.Array, payload: jax.Array) -> jax.Array:
-    """queries [Q, D], payload [Q, C, T, D] -> squared L2 [Q, C, T]."""
-    vn = jnp.sum(payload * payload, axis=-1)
+    """queries [Q, D], payload [Q, C, T, D] -> squared L2 [Q, C, T].
+
+    bf16 payloads accumulate norms and dots in f32 (matching the fused
+    kernels) — a bf16-accumulated norm would silently skew distances."""
+    pf = payload.astype(jnp.float32)
+    vn = jnp.sum(pf * pf, axis=-1)
     qn = jnp.sum(queries * queries, axis=-1)[:, None, None]
-    dots = jnp.einsum("qd,qctd->qct", queries, payload)
+    dots = jnp.einsum(
+        "qd,qctd->qct", queries.astype(payload.dtype), payload,
+        preferred_element_type=jnp.float32,
+    )
     return qn + vn - 2.0 * dots
 
 
@@ -109,8 +129,13 @@ def search_block_table(
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
     pq: Optional[PQParams] = None,  # unused (PQ rides on score_fn here)
+    rerank: bool = False,
 ):
     """Vectorised search. Returns (dists [Q, k], ids [Q, k])."""
+    if rerank:
+        raise NotImplementedError(
+            "rerank is a fused-path epilogue; use union_fused[_scan]"
+        )
     probe_idx, _ = coarse_probe(state, queries, nprobe)
     payload, ids, valid = gather_candidate_blocks(state, probe_idx, chain_budget)
     if score_fn is None:
@@ -142,8 +167,13 @@ def search_chain_walk(
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
     pq: Optional[PQParams] = None,  # unused (PQ rides on score_fn here)
+    rerank: bool = False,
 ):
     """Follow ``next_block`` headers hop by hop (GPU traversal port)."""
+    if rerank:
+        raise NotImplementedError(
+            "rerank is a fused-path epilogue; use union_fused[_scan]"
+        )
     q = queries.shape[0]
     probe_idx, _ = coarse_probe(state, queries, nprobe)
     cur0 = state.cluster_head[probe_idx]  # [Q, nprobe]
@@ -238,11 +268,17 @@ def search_union(
     scan_impl: str = "jnp",
     chain_budget: Optional[int] = None,
     pq: Optional[PQParams] = None,
+    rerank: bool = False,
 ):
-    if cfg.payload != "flat":
+    if cfg.payload != "flat" or cfg.has_scales:
         raise NotImplementedError(
-            "union/union_pallas score raw vectors; PQ payloads use "
-            "block_table, chain_walk, or the fused union paths"
+            "union/union_pallas score raw f32/bf16 vectors; PQ and int8 "
+            "payloads use the fused union paths (or block_table/chain_walk "
+            "for PQ)"
+        )
+    if rerank:
+        raise NotImplementedError(
+            "rerank is a fused-path epilogue; use union_fused[_scan]"
         )
     q = queries.shape[0]
     flat_blocks, member, mc, _, _ = _union_candidates(
@@ -286,6 +322,64 @@ def default_kprime(k: int) -> int:
     return max(128, -(-k // 128) * 128)
 
 
+def _block_cluster_map(state: IVFState) -> jax.Array:
+    """[P] owning cluster of each live block, by inverting the block table
+    (residual payloads reconstruct as ``centroid[owner] + dequant(code)``)."""
+    p = state.pool_ids.shape[0]
+    n, mc = state.cluster_blocks.shape
+    cb = state.cluster_blocks
+    owners = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[:, None], (n, mc)
+    )
+    return (
+        jnp.zeros((p,), jnp.int32)
+        .at[jnp.where(cb == NULL, p, cb)]
+        .set(owners, mode="drop")
+    )
+
+
+def _rerank_dispatch(queries, rows, scales, loc, scan_impl):
+    if scan_impl == "pallas":
+        from repro.kernels.ops import rerank_topk
+
+        return rerank_topk(queries, rows, scales, loc)
+    from repro.kernels.ref import rerank_topk_ref
+
+    return rerank_topk_ref(queries, rows, scales, loc)
+
+
+def _rerank_flat(cfg, state, queries, loc, scan_impl):
+    """Exact-fp32 re-rank of flat-payload survivors: gather the K' rows by
+    packed location (one XLA gather), then fused dequant + distance +
+    (distance, location) sort.  int8 rows are residual codes, so the owning
+    cluster's centroid is added back before scoring.  Returns
+    ([Q, K'] dists asc, [Q, K'] locs)."""
+    p, t = state.pool_ids.shape
+    safe = jnp.clip(loc, 0)
+    rows = state.pool_payload.reshape(p * t, -1)[safe]  # [Q, K', D]
+    scales = jnp.ones(loc.shape, jnp.float32)
+    if cfg.has_scales:
+        svs = state.pool_scales.reshape(-1)[safe]
+        cent = state.centroids[_block_cluster_map(state)[safe // t]]
+        rows = cent + rows.astype(jnp.float32) * svs[..., None]
+    return _rerank_dispatch(queries, rows, scales, loc, scan_impl)
+
+
+def _rerank_pq(cfg, state, pq, queries, loc, scan_impl):
+    """Re-rank PQ survivors at full precision: decode codes, add the
+    owning cluster's centroid back (residual semantics), exact fp32
+    distance."""
+    from repro.core import pq as pqmod
+
+    p, t = state.pool_ids.shape
+    safe = jnp.clip(loc, 0)
+    codes = state.pool_payload.reshape(p * t, -1)[safe]  # [Q, K', M]
+    cent = state.centroids[_block_cluster_map(state)[safe // t]]
+    recon = cent + pqmod.decode(pq, codes)
+    ones = jnp.ones(loc.shape, jnp.float32)
+    return _rerank_dispatch(queries, recon, ones, loc, scan_impl)
+
+
 def search_union_fused(
     cfg: PoolConfig,
     state: IVFState,
@@ -298,6 +392,7 @@ def search_union_fused(
     chain_budget: Optional[int] = None,
     kprime: Optional[int] = None,
     pq: Optional[PQParams] = None,  # required for payload == "pq"
+    rerank: bool = False,
 ):
     if cfg.payload == "pq" and pq is None:
         raise ValueError(
@@ -325,18 +420,21 @@ def search_union_fused(
         cand_ok = cand_ok[:, perm]
     kp = kprime or default_kprime(k)
     assert kp >= k, (kp, k)
-    if cfg.payload == "pq":
-        from repro.core import pq as pqmod
-
-        # per-(query, probe) residual ADC tables + the probe-slot index that
-        # lets the kernel pick the right LUT row per candidate block
-        lut = pqmod.probe_residual_luts(
-            pq, state.centroids, queries, uc.probe_idx
-        )  # [Q, NP, M, KSUB]
+    if cfg.payload == "pq" or cfg.has_scales:
+        # residual payloads (PQ codes, int8 residual codes): each candidate
+        # block selects the query's per-probe residual data through the
+        # probe-slot index built in the union prologue
         pslot = _probe_slot_index(uc)  # [Q, CB]
         if perm is not None:
             pslot = pslot[:, perm]
         pslot = jnp.where(cand_ok, pslot, -1)
+    if cfg.payload == "pq":
+        from repro.core import pq as pqmod
+
+        # per-(query, probe) residual ADC tables
+        lut = pqmod.probe_residual_luts(
+            pq, state.centroids, queries, uc.probe_idx
+        )  # [Q, NP, M, KSUB]
         if scan_impl == "pallas":
             from repro.kernels.ops import ivf_pq_block_topk
 
@@ -357,6 +455,34 @@ def search_union_fused(
             d, i = ivf_pq_block_topk_ref(
                 lut, state.pool_payload, flat_blocks, state.pool_ids,
                 pslot, kprime=kp,
+            )
+    elif cfg.has_scales:
+        # int8 residual payload: quantize the per-probe query residuals
+        # once, then the integer-MXU variant scores codes against codes
+        from repro.kernels.ivf_scan import quantize_queries
+
+        qres = queries[:, None, :] - state.centroids[uc.probe_idx]
+        q_codes, q_meta = quantize_queries(qres)  # [Q, NP, D], [Q, NP, 2]
+        if scan_impl == "pallas":
+            from repro.kernels.ops import ivf_block_topk_int8
+
+            d, i = ivf_block_topk_int8(
+                q_codes, q_meta, state.pool_payload, state.pool_scales,
+                flat_blocks, state.pool_ids, pslot, kprime=kp,
+            )
+        elif scan_impl == "scan":
+            from repro.kernels.ivf_scan import ivf_block_topk_int8_scan
+
+            d, i = ivf_block_topk_int8_scan(
+                q_codes, q_meta, state.pool_payload, state.pool_scales,
+                flat_blocks, state.pool_ids, pslot, kprime=kp,
+            )
+        else:
+            from repro.kernels.ref import ivf_block_topk_int8_ref
+
+            d, i = ivf_block_topk_int8_ref(
+                q_codes, q_meta, state.pool_payload, state.pool_scales,
+                flat_blocks, state.pool_ids, pslot, kprime=kp,
             )
     elif scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_topk
@@ -379,10 +505,25 @@ def search_union_fused(
             queries, state.pool_payload, flat_blocks, state.pool_ids,
             cand_ok, kprime=kp,
         )
-    # second selection stage: k out of the K' streamed survivors
+    # the fused kernels emit packed pool locations (block*T + offset,
+    # derived in-kernel from the prefetched block id at zero HBM cost)
+    if rerank:
+        # exact re-rank epilogue over the K' survivors; output rows come
+        # back sorted ascending by (exact distance, location)
+        if cfg.payload == "pq":
+            d, loc = _rerank_pq(cfg, state, pq, queries, i, scan_impl)
+        else:
+            d, loc = _rerank_flat(cfg, state, queries, i, scan_impl)
+        d, loc = d[:, :k], loc[:, :k]
+        out_ids = state.pool_ids.reshape(-1)[jnp.clip(loc, 0)]
+        out_ids = jnp.where((loc == NULL) | jnp.isinf(d), NULL, out_ids)
+        return d, out_ids
+    # second selection stage: k out of the K' streamed survivors, then one
+    # [Q, k] gather resolves locations to caller-visible global ids
     neg_d, sel = jax.lax.top_k(-d, k)
-    out_ids = jnp.take_along_axis(i, sel, axis=1)
-    out_ids = jnp.where(jnp.isinf(-neg_d), NULL, out_ids)
+    loc = jnp.take_along_axis(i, sel, axis=1)
+    out_ids = state.pool_ids.reshape(-1)[jnp.clip(loc, 0)]
+    out_ids = jnp.where((loc == NULL) | jnp.isinf(-neg_d), NULL, out_ids)
     return -neg_d, out_ids
 
 
@@ -401,9 +542,16 @@ SEARCH_IMPLS = {
 PQ_SEARCH_PATHS = frozenset(
     {"block_table", "chain_walk", "union_fused", "union_fused_scan"}
 )
+# the fused union paths are the only ones that understand int8 payloads
+# (everything else would score the raw codes as numbers) and the only ones
+# with the re-rank epilogue
+FUSED_SEARCH_PATHS = frozenset({"union_fused", "union_fused_scan"})
+INT8_SEARCH_PATHS = FUSED_SEARCH_PATHS
 
 
-def resolve_search_impl(cfg: PoolConfig, path: str) -> Callable:
+def resolve_search_impl(
+    cfg: PoolConfig, path: str, rerank: bool = False
+) -> Callable:
     """Look up a scan path, rejecting typos and payload mismatches loudly
     (a silent fallback would benchmark / serve the wrong path)."""
     if path not in SEARCH_IMPLS:
@@ -415,6 +563,16 @@ def resolve_search_impl(cfg: PoolConfig, path: str) -> Callable:
         raise NotImplementedError(
             f"search_path {path!r} scores raw vectors; PQ payloads support "
             f"{sorted(PQ_SEARCH_PATHS)}"
+        )
+    if cfg.has_scales and path not in INT8_SEARCH_PATHS:
+        raise NotImplementedError(
+            f"search_path {path!r} scores raw vectors; int8 payloads "
+            f"support {sorted(INT8_SEARCH_PATHS)}"
+        )
+    if rerank and path not in FUSED_SEARCH_PATHS:
+        raise NotImplementedError(
+            f"rerank is a fused-path epilogue; search_path {path!r} does "
+            f"not support it (use one of {sorted(FUSED_SEARCH_PATHS)})"
         )
     return SEARCH_IMPLS[path]
 
@@ -428,15 +586,16 @@ def make_search_fn(
     score_fn: Optional[Callable] = None,
     chain_budget: Optional[int] = None,
     pq: Optional[PQParams] = None,
+    rerank: bool = False,
 ):
     """Jitted search step closed over static (nprobe, k, traversal path)."""
-    impl = resolve_search_impl(cfg, path)
+    impl = resolve_search_impl(cfg, path, rerank)
 
     @jax.jit
     def step(state: IVFState, queries: jax.Array):
         return impl(
             cfg, state, queries, nprobe=nprobe, k=k, score_fn=score_fn,
-            chain_budget=chain_budget, pq=pq,
+            chain_budget=chain_budget, pq=pq, rerank=rerank,
         )
 
     return step

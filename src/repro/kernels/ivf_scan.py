@@ -18,7 +18,16 @@ Design (TPU re-derivation of the paper's coalesced scan, DESIGN.md §8):
 
 Hole blocks (id == -1) are clamped to block 0; callers mask their scores.
 
-Three kernels live here:
+The payload dtype is a first-class axis: ``ivf_block_topk`` serves float32
+*and* bfloat16 blocks (bf16 halves the HBM bytes of the dominant scan loop;
+the MXU takes bf16 natively with f32 accumulation), ``ivf_block_topk_int8``
+quarters them by contracting int8 query codes against int8 pool codes on
+the integer MXU — blocks are never dequantized; only the per-step epilogue
+tile and the ``[Q, K']`` accumulator are float32.  ``rerank_topk`` is the
+exact re-rank epilogue over the K' fused survivors (gather + fused
+dequant/distance/sort) that buys the recall back.
+
+Kernels living here:
 
 * ``ivf_block_scan``   — scores only: emits the full ``[C, Q, T]`` tensor to
   HBM; the caller masks and runs one monolithic ``top_k`` over ``C*T``.
@@ -27,8 +36,10 @@ Three kernels live here:
   grid.  Each grid step scores one pool block, fuses hole/membership/empty
   masking into the epilogue, and merges the masked ``[Q_t, T]`` partials into
   the accumulator with a co-sorted concat (two-stage selection).  Only
-  ``[Q, K']`` (score, vector-id) pairs ever leave the kernel — the ``C·Q·T``
-  intermediate never touches HBM.  The grid is tiled over Q so large batches
+  ``[Q, K']`` (score, packed pool location) pairs ever leave the kernel —
+  the ``C·Q·T`` intermediate never touches HBM; callers resolve locations
+  (``block*T + offset``) to global ids with one gather, and the re-rank
+  epilogue decodes them straight back to rows.  The grid is tiled over Q so large batches
   keep the accumulator + query tile inside the VMEM budget (see
   docs/search_paths.md for the budget math).
 * ``ivf_pq_block_topk`` — the same streaming selection over a **PQ-coded**
@@ -54,11 +65,12 @@ from jax.experimental.pallas import tpu as pltpu
 def _scan_kernel(ids_ref, q_ref, pool_ref, out_ref):
     """Grid step c: score all queries against pool block ids[c]."""
     q = q_ref[:]  # [Q, D]
-    blk = pool_ref[:]  # [T, D]
+    blk = pool_ref[:]  # [T, D] payload dtype (f32 | bf16)
     qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q, 1]
-    vn = jnp.sum(blk * blk, axis=-1)[None, :]  # [1, T]
+    blkf = blk.astype(jnp.float32)
+    vn = jnp.sum(blkf * blkf, axis=-1)[None, :]  # [1, T]
     dots = jax.lax.dot_general(
-        q,
+        q.astype(blk.dtype),
         blk,
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -126,19 +138,31 @@ def _topk_kernel(
         acc_d_ref[:] = jnp.full(acc_d_ref.shape, jnp.inf, jnp.float32)
         acc_i_ref[:] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
 
-    q = q_ref[:]  # [Q_t, D]
-    blk = pool_ref[:]  # [T, D]
+    q = q_ref[:]  # [Q_t, D] f32
+    blk = pool_ref[:]  # [T, D] payload dtype (f32 | bf16)
     qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q_t, 1]
-    vn = jnp.sum(blk * blk, axis=-1)[None, :]  # [1, T]
+    blkf = blk.astype(jnp.float32)  # VMEM-local; HBM moved `blk.dtype` bytes
+    vn = jnp.sum(blkf * blkf, axis=-1)[None, :]  # [1, T]
+    # bf16 payloads feed the MXU natively (bf16 x bf16 -> f32 accumulate);
+    # the cast is a no-op for f32
     dots = jax.lax.dot_general(
-        q, blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        q.astype(blk.dtype), blk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )  # [Q_t, T] on the MXU
     scores = qn + vn - 2.0 * dots
     # fused epilogue: invalid slots (hole block, non-member query, empty
     # NULL-id slot) never leave the kernel
     ok = (ok_ref[:] != 0) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
     scores = jnp.where(ok, scores, jnp.inf)
-    cand_i = jnp.where(ok, jnp.broadcast_to(pid_ref[:], scores.shape), -1)
+    # candidates carry their packed pool location (block*T + offset),
+    # derived from the prefetched block id at zero HBM cost — it decodes
+    # back to the row for the re-rank gather, which a caller-assigned
+    # global id cannot; callers resolve locations to ids with one gather
+    t = scores.shape[1]
+    loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, t), 1
+    )
+    cand_i = jnp.where(ok, jnp.broadcast_to(loc_row, scores.shape), -1)
     # two-stage selection: merge the masked partial into the running top-K'
     # via co-sorted concat (stable ascending sort keyed on distance)
     cat_d = jnp.concatenate([acc_d_ref[:], scores], axis=1)
@@ -167,10 +191,12 @@ def ivf_block_topk(
     kprime: int,
     q_tile: int = 128,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] ids)
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Streaming top-``kprime``: one HBM read per candidate block, ``[Q, K']``
-    writeback.  Rows of the output are sorted ascending; masked-out slots
-    carry ``inf`` / id ``-1``.
+    writeback.  Rows of the output are sorted ascending; the id channel
+    carries packed pool locations (``block*T + offset``; resolve to global
+    ids via ``pool_ids.reshape(-1)[loc]``); masked-out slots carry
+    ``inf`` / ``-1``.
 
     The accumulator merge uses ``jax.lax.sort`` inside the kernel body; this
     is validated in interpret mode (CPU CI) but not yet compiled via Mosaic
@@ -245,14 +271,19 @@ def ivf_block_topk_scan(
     def step(carry, xs):
         acc_d, acc_i = carry
         sc, ok = xs  # [chunk], [Q, chunk]
-        blocks = pool[sc]  # [chunk, T, D]
+        blocks = pool[sc]  # [chunk, T, D] payload dtype (f32 | bf16)
         vids = pool_ids[sc]  # [chunk, T]
-        vn = jnp.sum(blocks * blocks, axis=-1)  # [chunk, T]
-        dots = jnp.einsum("qd,ctd->qct", queries, blocks)
+        bf = blocks.astype(jnp.float32)
+        vn = jnp.sum(bf * bf, axis=-1)  # [chunk, T]
+        dots = jnp.einsum(
+            "qd,ctd->qct", queries.astype(pool.dtype), blocks,
+            preferred_element_type=jnp.float32,
+        )
         scores = qn + vn[None, :, :] - 2.0 * dots  # [Q, chunk, T]
+        locs = sc[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
         okf = ok[:, :, None] & (vids != -1)[None, :, :]
         scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
-        cids = jnp.where(okf, jnp.broadcast_to(vids, okf.shape), -1)
+        cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
         cat_d = jnp.concatenate([acc_d, scores], axis=1)
         cat_i = jnp.concatenate([acc_i, cids.reshape(q, -1)], axis=1)
         srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
@@ -267,10 +298,341 @@ def ivf_block_topk_scan(
 
 
 # ---------------------------------------------------------------------------
+# int8 fused streaming top-k: the candidate blocks stay int8 end to end —
+# the MXU contracts int8 query codes against int8 pool codes into an int32
+# accumulator, and only the [Q_t, T] score tile of the epilogue (and the
+# [Q, K'] accumulator) is ever in float32.  HBM payload traffic is 1 byte
+# per dimension plus one f32 scale per vector.
+#
+# Pool rows are quantized as *residuals* against their coarse centroid
+# (Faiss IVF-SQ ``by_residual`` semantics, same as the PQ payload): the
+# residual dynamic range is a fraction of the raw vectors', so the 8-bit
+# step — and the recall cost — shrinks with it.  Queries arrive as
+# per-(query, probe) quantized residuals and each candidate block selects
+# its probe slot through the same [Q, C] probe-slot index the PQ kernel
+# uses (built in the union prologue).
+#
+# The int8 family sorts with num_keys=2 (distance, then location):
+# quantization produces exact distance ties whenever two vectors share
+# codes + scale, so
+# a deterministic id tiebreak keeps the returned ids identical across
+# kernel / scan / oracle (the integer dot is exact everywhere; the f32
+# epilogue may differ by ulps from XLA fusion, hence ids — not raw float
+# bits — are the cross-impl contract).
+# ---------------------------------------------------------------------------
+
+
+def quantize_queries(x: jax.Array):
+    """Symmetric per-row int8 quantization for the int8 scan's query side.
+
+    x [..., D] f32 -> (codes [..., D] i8, meta [..., 2] f32) where
+    meta[..., 0] is the scale s and meta[..., 1] the reconstructed norm
+    ``s^2 * sum(codes^2)`` — so the kernel's scores are exactly
+    ``||s_q c_q - s_v c_v||^2`` between the two reconstructions.  For the
+    residual scheme, x is the [Q, NP, D] batch of query residuals against
+    every probed centroid."""
+    from repro.core.block_pool import quantize_int8
+
+    # same quantizer as the insert path — query codes and pool codes must
+    # share range/rounding for the exact-reconstruction-distance contract
+    codes, scale = quantize_int8(x)
+    ci = codes.astype(jnp.int32)
+    qn = (scale * scale) * jnp.sum(ci * ci, axis=-1).astype(jnp.float32)
+    return codes, jnp.stack([scale, qn], axis=-1)
+
+
+def _int8_scores(qn_b, vterm_b, coef_b, dotf):
+    """Shared epilogue expression — identical op order across kernel /
+    lax.scan fallback / oracle so int8 results stay bit-identical (the
+    integer dot itself is exact in every impl)."""
+    return qn_b + vterm_b - 2.0 * (coef_b * dotf)
+
+
+def _topk_int8_kernel(
+    ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    qc_ref,  # [Q_t, NP, D] i8 per-probe quantized query residuals
+    qmeta_ref,  # [Q_t, NP, 2] f32 (scale, reconstructed norm) per probe
+    pslot_ref,  # [Q_t, 1] i32 probe slot of this candidate (-1 = invalid)
+    pool_ref,  # [T, D] i8 current candidate code block
+    scale_ref,  # [1, T] f32 per-vector dequant scales of the block
+    pid_ref,  # [1, T] i32 vector ids of the block
+    out_d_ref,  # [Q_t, K']
+    out_i_ref,  # [Q_t, K'] i32
+    acc_d_ref,  # VMEM scratch [Q_t, K']
+    acc_i_ref,  # VMEM scratch [Q_t, K'] i32
+):
+    """Grid (qi, ci): int8-score block ids[ci], merge into the accumulator."""
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_d_ref[:] = jnp.full(acc_d_ref.shape, jnp.inf, jnp.float32)
+        acc_i_ref[:] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+
+    qc = qc_ref[:]  # [Q_t, NP, D] i8
+    qmeta = qmeta_ref[:]  # [Q_t, NP, 2]
+    pslot = pslot_ref[:]  # [Q_t, 1]
+    qt, np_, _ = qc.shape
+    # Residuals are per-probe: select each query's quantized residual for
+    # this candidate's probe slot via a one-hot reduction (exact in int32;
+    # slot -1 selects nothing and is masked below).
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (qt, np_), 1)
+    onehot = (pslot == slot_iota).astype(jnp.int32)  # [Q_t, NP]
+    qsel = jnp.sum(
+        onehot[:, :, None] * qc.astype(jnp.int32), axis=1
+    ).astype(jnp.int8)  # [Q_t, D]
+    onef = onehot.astype(jnp.float32)
+    sq = jnp.sum(onef * qmeta[:, :, 0], axis=1, keepdims=True)  # [Q_t, 1]
+    qn = jnp.sum(onef * qmeta[:, :, 1], axis=1, keepdims=True)  # [Q_t, 1]
+    codes = pool_ref[:]  # [T, D] i8 — never dequantized
+    sv = scale_ref[:]  # [1, T] f32
+    # integer MXU contraction: i8 x i8 -> i32, exact
+    dots = jax.lax.dot_general(
+        qsel, codes, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [Q_t, T]
+    ci32 = codes.astype(jnp.int32)
+    cn = jnp.sum(ci32 * ci32, axis=-1)[None, :].astype(jnp.float32)  # [1, T]
+    vterm = (sv * sv) * cn  # [1, T]
+    coef = sq * sv  # [Q_t, T]
+    scores = _int8_scores(qn, vterm, coef, dots.astype(jnp.float32))
+    ok = (pslot != -1) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    scores = jnp.where(ok, scores, jnp.inf)
+    t = scores.shape[1]
+    loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, t), 1
+    )  # packed pool locations (see _topk_kernel)
+    cand_i = jnp.where(ok, jnp.broadcast_to(loc_row, scores.shape), -1)
+    cat_d = jnp.concatenate([acc_d_ref[:], scores], axis=1)
+    cat_i = jnp.concatenate([acc_i_ref[:], cand_i], axis=1)
+    srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+    kp = acc_d_ref.shape[1]
+    acc_d_ref[:] = srt_d[:, :kp]
+    acc_i_ref[:] = srt_i[:, :kp]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        out_d_ref[:] = acc_d_ref[:]
+        out_i_ref[:] = acc_i_ref[:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kprime", "q_tile", "interpret")
+)
+def ivf_block_topk_int8(
+    q_codes: jax.Array,  # [Q, NP, D] i8 per-probe quantized query residuals
+    q_meta: jax.Array,  # [Q, NP, 2] f32 (scale, reconstructed norm)
+    pool: jax.Array,  # [P, T, D] i8 residual codes
+    pool_scales: jax.Array,  # [P, T] f32 per-vector dequant scales
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via pslot)
+    pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    pslot: jax.Array,  # [Q, C] i32 probe slot per (query, candidate); -1 = invalid
+    *,
+    kprime: int,
+    q_tile: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
+    """Streaming top-``kprime`` over an int8 residual-quantized pool: one
+    HBM read of each ``[T, D]`` int8 block + its ``[T]`` scale row, integer
+    MXU scoring against the per-probe query residual codes, ``[Q, K']``
+    writeback.  Rows come back sorted ascending by (distance, location);
+    invalid
+    slots carry ``inf`` / id ``-1``."""
+    q, np_, d = q_codes.shape
+    p, t, d2 = pool.shape
+    assert d == d2, (d, d2)
+    assert pool.dtype == jnp.int8, pool.dtype
+    c = block_ids.shape[0]
+    qt = min(q_tile, _round_up(q, 8))
+    qp = _round_up(q, qt)
+    q_codes = jnp.pad(q_codes, ((0, qp - q), (0, 0), (0, 0)))
+    q_meta = jnp.pad(q_meta, ((0, qp - q), (0, 0), (0, 0)))
+    pslot = jnp.pad(
+        pslot.astype(jnp.int32), ((0, qp - q), (0, 0)), constant_values=-1
+    )
+    safe_ids = jnp.maximum(block_ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qp // qt, c),
+        in_specs=[
+            pl.BlockSpec((qt, np_, d), lambda qi, ci, ids: (qi, 0, 0)),
+            pl.BlockSpec((qt, np_, 2), lambda qi, ci, ids: (qi, 0, 0)),
+            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
+            pl.BlockSpec((None, t, d), lambda qi, ci, ids: (ids[ci], 0, 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qt, kprime), jnp.float32),
+            pltpu.VMEM((qt, kprime), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        _topk_int8_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kprime), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe_ids, q_codes, q_meta, pslot, pool, pool_scales, pool_ids)
+    return out_d[:q], out_i[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "chunk"))
+def ivf_block_topk_int8_scan(
+    q_codes: jax.Array,  # [Q, NP, D] i8
+    q_meta: jax.Array,  # [Q, NP, 2] f32
+    pool: jax.Array,  # [P, T, D] i8
+    pool_scales: jax.Array,  # [P, T] f32
+    block_ids: jax.Array,  # [C] i32
+    pool_ids: jax.Array,  # [P, T] i32
+    pslot: jax.Array,  # [Q, C] i32, -1 = invalid
+    *,
+    kprime: int,
+    chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked ``lax.scan`` fallback for the int8 fused path: same streaming
+    top-``kprime`` semantics and identical returned ids, peak intermediate
+    ``[Q, chunk*T]`` instead of ``[C, Q, T]``."""
+    q = q_codes.shape[0]
+    c = block_ids.shape[0]
+    cp = _round_up(c, chunk)
+    nch = cp // chunk
+    ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
+    ps_p = jnp.pad(
+        pslot.astype(jnp.int32), ((0, 0), (0, cp - c)), constant_values=-1
+    )
+    safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
+    ps_ch = ps_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+    qci = q_codes.astype(jnp.int32)
+
+    def step(carry, xs):
+        acc_d, acc_i = carry
+        sc, ps = xs  # [chunk], [Q, chunk]
+        codes = pool[sc]  # [chunk, T, D] i8
+        svs = pool_scales[sc]  # [chunk, T]
+        vids = pool_ids[sc]  # [chunk, T]
+        sel = jnp.clip(ps, 0)  # [Q, chunk]
+        qsel = jnp.take_along_axis(
+            qci, sel[:, :, None], axis=1
+        )  # [Q, chunk, D] i32
+        meta = jnp.take_along_axis(
+            q_meta, sel[:, :, None], axis=1
+        )  # [Q, chunk, 2]
+        sq, qn = meta[..., 0], meta[..., 1]  # [Q, chunk]
+        ci32 = codes.astype(jnp.int32)
+        cn = jnp.sum(ci32 * ci32, axis=-1).astype(jnp.float32)  # [chunk, T]
+        dots = jnp.einsum("qcd,ctd->qct", qsel, ci32)  # exact int32
+        vterm = (svs * svs) * cn  # [chunk, T]
+        coef = sq[:, :, None] * svs[None]  # [Q, chunk, T]
+        scores = _int8_scores(
+            qn[:, :, None], vterm[None], coef, dots.astype(jnp.float32)
+        )
+        t_ = vids.shape[1]
+        locs = sc[:, None] * t_ + jnp.arange(t_, dtype=jnp.int32)[None, :]
+        okf = (ps != -1)[:, :, None] & (vids != -1)[None, :, :]
+        scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
+        cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
+        cat_d = jnp.concatenate([acc_d, scores], axis=1)
+        cat_i = jnp.concatenate([acc_i, cids.reshape(q, -1)], axis=1)
+        srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+        return (srt_d[:, :kprime], srt_i[:, :kprime]), None
+
+    init = (
+        jnp.full((q, kprime), jnp.inf, jnp.float32),
+        jnp.full((q, kprime), -1, jnp.int32),
+    )
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ps_ch))
+    return acc_d, acc_i
+
+
+# ---------------------------------------------------------------------------
+# Exact re-rank epilogue: the K' fused survivors are gathered (one XLA gather
+# — a data-dependent gather belongs in the gather HLO, not a grid of tiny
+# DMAs), then one grid step per query tile fuses dequantization, exact fp32
+# distance, and the final (distance, id) sort.  This is what lets the low-
+# precision first pass run with aggressive K' without recall loss.
+# ---------------------------------------------------------------------------
+
+
+def _rerank_kernel(
+    q_ref,  # [Q_t, D] f32 exact queries
+    rows_ref,  # [Q_t, K', D] survivor rows (payload dtype)
+    scale_ref,  # [Q_t, K'] f32 dequant scales (ones for f32/bf16)
+    loc_ref,  # [Q_t, K'] i32 packed candidate ids (-1 = invalid)
+    out_d_ref,  # [Q_t, K'] exact distances, ascending
+    out_i_ref,  # [Q_t, K'] i32 co-sorted candidate ids
+):
+    """Grid (qi,): dequantize + exact fp32 distance + re-sort, fused."""
+    q = q_ref[:]  # [Q_t, D]
+    v = rows_ref[:].astype(jnp.float32) * scale_ref[:][..., None]
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q_t, 1]
+    vn = jnp.sum(v * v, axis=-1)  # [Q_t, K']
+    dots = jax.lax.dot_general(
+        q[:, None, :], v, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]  # [Q_t, K']
+    d = qn + vn - 2.0 * dots
+    ok = loc_ref[:] != -1
+    d = jnp.where(ok, d, jnp.inf)
+    loc = jnp.where(ok, loc_ref[:], -1)
+    srt_d, srt_i = jax.lax.sort((d, loc), dimension=1, num_keys=2)
+    out_d_ref[:] = srt_d
+    out_i_ref[:] = srt_i
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "interpret"))
+def rerank_topk(
+    queries: jax.Array,  # [Q, D] f32
+    rows: jax.Array,  # [Q, K', D] gathered survivor rows (f32|bf16|i8)
+    scales: jax.Array,  # [Q, K'] f32 dequant scales (ones for f32/bf16)
+    loc: jax.Array,  # [Q, K'] i32 packed candidate ids, -1 = invalid
+    *,
+    q_tile: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] exact dist asc, [Q, K'] locs)
+    """Fused exact re-rank of the fused-scan survivors (see module notes)."""
+    q, kp, d = rows.shape
+    qt = min(q_tile, _round_up(q, 8))
+    qp = _round_up(q, qt)
+    queries = jnp.pad(queries, ((0, qp - q), (0, 0)))
+    rows = jnp.pad(rows, ((0, qp - q), (0, 0), (0, 0)))
+    scales = jnp.pad(scales, ((0, qp - q), (0, 0)))
+    loc = jnp.pad(loc, ((0, qp - q), (0, 0)), constant_values=-1)
+    out_d, out_i = pl.pallas_call(
+        _rerank_kernel,
+        grid=(qp // qt,),
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda qi: (qi, 0)),
+            pl.BlockSpec((qt, kp, d), lambda qi: (qi, 0, 0)),
+            pl.BlockSpec((qt, kp), lambda qi: (qi, 0)),
+            pl.BlockSpec((qt, kp), lambda qi: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, kp), lambda qi: (qi, 0)),
+            pl.BlockSpec((qt, kp), lambda qi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((qp, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, rows, scales, loc)
+    return out_d[:q], out_i[:q]
+
+
+# ---------------------------------------------------------------------------
 # PQ-ADC fused streaming top-k (IVFPQ payload): LUT resident in VMEM,
 # one [T, M] uint8 code block DMA'd per grid step, [Q, K'] writeback.
 #
-# The PQ family sorts with num_keys=2 (distance, then vector id): quantized
+# The PQ family sorts with num_keys=2 (distance, then pool location): quantized
 # payloads produce exact distance ties whenever two vectors share a code, so
 # a deterministic id tiebreak is required for the kernel / scan / oracle to
 # stay bit-identical.
@@ -328,7 +690,10 @@ def _pq_topk_kernel(
     # fused epilogue: non-member queries, hole blocks, empty NULL-id slots
     ok = (pslot != -1) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
     scores = jnp.where(ok, scores, jnp.inf)
-    cand_i = jnp.where(ok, jnp.broadcast_to(pid_ref[:], scores.shape), -1)
+    loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, t), 1
+    )  # packed pool locations (see _topk_kernel)
+    cand_i = jnp.where(ok, jnp.broadcast_to(loc_row, scores.shape), -1)
     cat_d = jnp.concatenate([acc_d_ref[:], scores], axis=1)
     cat_i = jnp.concatenate([acc_i_ref[:], cand_i], axis=1)
     srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
@@ -355,11 +720,11 @@ def ivf_pq_block_topk(
     kprime: int,
     q_tile: int = 8,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] ids)
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Streaming top-``kprime`` over a PQ-coded pool: one HBM read of each
     ``[T, M]`` uint8 candidate block, ADC against the VMEM-resident LUT tile,
     ``[Q, K']`` writeback.  Rows come back sorted ascending by (distance,
-    id); invalid slots carry ``inf`` / id ``-1``.
+    location); invalid slots carry ``inf`` / ``-1``.
 
     The LUT tile is the dominant VMEM resident (``q_tile·nprobe·M·256·4B``,
     see docs/search_paths.md), hence the small default ``q_tile`` of 8."""
@@ -445,9 +810,10 @@ def ivf_pq_block_topk_scan(
             axis=-1,
         )[..., 0]  # [Q, chunk, T, M]
         scores = jnp.sum(gathered, axis=-1)  # [Q, chunk, T]
+        locs = sc[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
         okf = (ps != -1)[:, :, None] & (vids != -1)[None, :, :]
         scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
-        cids = jnp.where(okf, jnp.broadcast_to(vids, okf.shape), -1)
+        cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
         cat_d = jnp.concatenate([acc_d, scores], axis=1)
         cat_i = jnp.concatenate([acc_i, cids.reshape(q, -1)], axis=1)
         srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)

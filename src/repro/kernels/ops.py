@@ -11,7 +11,11 @@ import jax
 
 from repro.kernels.ivf_scan import ivf_block_scan as _ivf_block_scan
 from repro.kernels.ivf_scan import ivf_block_topk as _ivf_block_topk
+from repro.kernels.ivf_scan import (
+    ivf_block_topk_int8 as _ivf_block_topk_int8,
+)
 from repro.kernels.ivf_scan import ivf_pq_block_topk as _ivf_pq_block_topk
+from repro.kernels.ivf_scan import rerank_topk as _rerank_topk
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_decode_attention,
 )
@@ -34,6 +38,26 @@ def ivf_block_topk(queries, pool, block_ids, pool_ids, cand_ok, *, kprime,
     return _ivf_block_topk(
         queries, pool, block_ids, pool_ids, cand_ok,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+    )
+
+
+def ivf_block_topk_int8(q_codes, q_meta, pool, pool_scales, block_ids,
+                        pool_ids, pslot, *, kprime, q_tile: int = 128):
+    """int8 fused streaming selection: [Q,NP,D] i8 per-probe query residual
+    codes contracted against [P,T,D] i8 residual codes on the integer MXU
+    -> ([Q,K'], [Q,K']) without materializing [C,Q,T] or dequantizing any
+    block."""
+    return _ivf_block_topk_int8(
+        q_codes, q_meta, pool, pool_scales, block_ids, pool_ids, pslot,
+        kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+    )
+
+
+def rerank_topk(queries, rows, scales, loc, *, q_tile: int = 8):
+    """Exact re-rank epilogue: [Q,K',D] gathered survivor rows (any flat
+    dtype) -> fused dequant + exact fp32 distance + (dist, id) sort."""
+    return _rerank_topk(
+        queries, rows, scales, loc, q_tile=q_tile, interpret=_interpret(),
     )
 
 

@@ -11,15 +11,21 @@ import jax.numpy as jnp
 
 
 def ivf_block_scan_ref(
-    queries: jax.Array,  # [Q, D]
-    pool: jax.Array,  # [P, T, D]
+    queries: jax.Array,  # [Q, D] f32
+    pool: jax.Array,  # [P, T, D] f32 | bf16
     block_ids: jax.Array,  # [C] i32, -1 = hole (scores still computed vs block 0)
 ) -> jax.Array:  # [C, Q, T] squared L2
     safe = jnp.maximum(block_ids, 0)
     blocks = pool[safe]  # [C, T, D]
     qn = jnp.sum(queries * queries, axis=-1)  # [Q]
-    vn = jnp.sum(blocks * blocks, axis=-1)  # [C, T]
-    dots = jnp.einsum("qd,ctd->cqt", queries, blocks)
+    bf = blocks.astype(jnp.float32)
+    vn = jnp.sum(bf * bf, axis=-1)  # [C, T]
+    # bf16 payloads: same formulation as the kernel (bf16 operands, f32
+    # accumulation); a no-op for f32
+    dots = jnp.einsum(
+        "qd,ctd->cqt", queries.astype(pool.dtype), blocks,
+        preferred_element_type=jnp.float32,
+    )
     return qn[None, :, None] + vn[:, None, :] - 2.0 * dots
 
 
@@ -31,16 +37,20 @@ def ivf_block_topk_ref(
     cand_ok: jax.Array,  # [Q, C] per-(query, candidate) validity mask
     *,
     kprime: int,
-) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist ascending, [Q, K'] ids)
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Oracle for the fused streaming top-k scan: materialize everything,
-    mask, and sort — invalid slots come back as (inf, -1)."""
+    mask, and sort — the id channel carries packed pool locations
+    (``block*T + offset``); invalid slots come back as (inf, -1)."""
     scores = ivf_block_scan_ref(queries, pool, block_ids)  # [C, Q, T]
-    vids = pool_ids[jnp.maximum(block_ids, 0)]  # [C, T]
+    safe = jnp.maximum(block_ids, 0)
+    t = pool_ids.shape[1]
+    vids = pool_ids[safe]  # [C, T]
+    locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
     ok = cand_ok.astype(bool)[:, :, None] & (vids != -1)[None, :, :]
     q = queries.shape[0]
     flat_d = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), jnp.inf)
     flat_d = flat_d.reshape(q, -1)
-    flat_i = jnp.where(ok, jnp.broadcast_to(vids[None], ok.shape), -1)
+    flat_i = jnp.where(ok, jnp.broadcast_to(locs[None], ok.shape), -1)
     flat_i = flat_i.reshape(q, -1)
     n = flat_d.shape[1]
     if n < kprime:
@@ -51,6 +61,77 @@ def ivf_block_topk_ref(
     return srt_d[:, :kprime], srt_i[:, :kprime]
 
 
+def ivf_block_topk_int8_ref(
+    q_codes: jax.Array,  # [Q, NP, D] i8 per-probe quantized query residuals
+    q_meta: jax.Array,  # [Q, NP, 2] f32 (scale, reconstructed norm)
+    pool: jax.Array,  # [P, T, D] i8 residual codes
+    pool_scales: jax.Array,  # [P, T] f32 per-vector dequant scales
+    block_ids: jax.Array,  # [C] i32, -1 = hole
+    pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    pslot: jax.Array,  # [Q, C] i32 probe slot per candidate, -1 = invalid
+    *,
+    kprime: int,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
+    """Oracle for the int8 fused streaming top-k: materialize every score
+    with the kernel's exact integer-dot formulation, mask, and sort by
+    (distance, location) — the location tiebreak keeps quantization-induced
+    exact ties deterministic across kernel / scan / oracle."""
+    from repro.kernels.ivf_scan import _int8_scores
+
+    q = q_codes.shape[0]
+    safe = jnp.maximum(block_ids, 0)
+    codes = pool[safe].astype(jnp.int32)  # [C, T, D]
+    svs = pool_scales[safe]  # [C, T]
+    vids = pool_ids[safe]  # [C, T]
+    t = pool_ids.shape[1]
+    locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
+    sel = jnp.clip(pslot, 0)  # [Q, C]
+    qsel = jnp.take_along_axis(
+        q_codes.astype(jnp.int32), sel[:, :, None], axis=1
+    )  # [Q, C, D]
+    meta = jnp.take_along_axis(q_meta, sel[:, :, None], axis=1)  # [Q, C, 2]
+    sq, qn = meta[..., 0], meta[..., 1]  # [Q, C]
+    cn = jnp.sum(codes * codes, axis=-1).astype(jnp.float32)  # [C, T]
+    dots = jnp.einsum("qcd,ctd->qct", qsel, codes)  # exact int32
+    vterm = (svs * svs) * cn  # [C, T]
+    coef = sq[:, :, None] * svs[None]  # [Q, C, T]
+    scores = _int8_scores(
+        qn[:, :, None], vterm[None], coef, dots.astype(jnp.float32)
+    )
+    ok = (pslot != -1)[:, :, None] & (vids != -1)[None, :, :]
+    flat_d = jnp.where(ok, scores, jnp.inf).reshape(q, -1)
+    flat_i = jnp.where(ok, jnp.broadcast_to(locs[None], ok.shape), -1)
+    flat_i = flat_i.reshape(q, -1)
+    n = flat_d.shape[1]
+    if n < kprime:
+        pad = kprime - n
+        flat_d = jnp.pad(flat_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        flat_i = jnp.pad(flat_i, ((0, 0), (0, pad)), constant_values=-1)
+    srt_d, srt_i = jax.lax.sort((flat_d, flat_i), dimension=1, num_keys=2)
+    return srt_d[:, :kprime], srt_i[:, :kprime]
+
+
+def rerank_topk_ref(
+    queries: jax.Array,  # [Q, D] f32
+    rows: jax.Array,  # [Q, K', D] survivor rows (f32 | bf16 | i8)
+    scales: jax.Array,  # [Q, K'] f32 dequant scales (ones for f32/bf16)
+    loc: jax.Array,  # [Q, K'] i32 packed candidate ids, -1 = invalid
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] exact dist asc, [Q, K'] locs)
+    """Oracle for the exact re-rank epilogue: dequantize, exact fp32
+    distance, (distance, id) sort."""
+    v = rows.astype(jnp.float32) * scales[..., None]
+    qn = jnp.sum(queries * queries, axis=-1, keepdims=True)  # [Q, 1]
+    vn = jnp.sum(v * v, axis=-1)  # [Q, K']
+    dots = jnp.einsum(
+        "qd,qkd->qk", queries, v, preferred_element_type=jnp.float32
+    )
+    d = qn + vn - 2.0 * dots
+    ok = loc != -1
+    d = jnp.where(ok, d, jnp.inf)
+    li = jnp.where(ok, loc, -1)
+    return jax.lax.sort((d, li), dimension=1, num_keys=2)
+
+
 def ivf_pq_block_topk_ref(
     lut: jax.Array,  # [Q, NP, M, K] per-(query, probe) ADC tables
     pool_codes: jax.Array,  # [P, T, M] uint8/int PQ codes
@@ -59,15 +140,17 @@ def ivf_pq_block_topk_ref(
     pslot: jax.Array,  # [Q, C] i32 probe slot per candidate, -1 = invalid
     *,
     kprime: int,
-) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist ascending, [Q, K'] ids)
+) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Oracle for the PQ fused streaming top-k: materialize the full ADC
-    score tensor, mask, and sort by (distance, id) — invalid slots come back
-    as (inf, -1).  The (d, id) double sort key makes ties (vectors sharing a
-    code) deterministic across kernel / scan / oracle."""
+    score tensor, mask, and sort by (distance, location) — invalid slots
+    come back as (inf, -1).  The double sort key makes ties (vectors
+    sharing a code) deterministic across kernel / scan / oracle."""
     q = lut.shape[0]
     safe = jnp.maximum(block_ids, 0)
     codes = pool_codes[safe].astype(jnp.int32)  # [C, T, M]
     vids = pool_ids[safe]  # [C, T]
+    t = pool_ids.shape[1]
+    locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
     lq = jnp.take_along_axis(
         lut, jnp.clip(pslot, 0)[:, :, None, None], axis=1
     )  # [Q, C, M, K]
@@ -79,7 +162,7 @@ def ivf_pq_block_topk_ref(
     scores = jnp.sum(gathered, axis=-1)  # [Q, C, T]
     ok = (pslot != -1)[:, :, None] & (vids != -1)[None, :, :]
     flat_d = jnp.where(ok, scores, jnp.inf).reshape(q, -1)
-    flat_i = jnp.where(ok, jnp.broadcast_to(vids[None], ok.shape), -1)
+    flat_i = jnp.where(ok, jnp.broadcast_to(locs[None], ok.shape), -1)
     flat_i = flat_i.reshape(q, -1)
     n = flat_d.shape[1]
     if n < kprime:

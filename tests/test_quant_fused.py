@@ -1,0 +1,458 @@
+"""Quantized flat payloads (bf16/int8) + exact re-rank epilogue.
+
+Kernel parity, insert round-trip, end-to-end parity vs the fp32 oracle, and
+the tie-restoration regression.  Everything here is marked ``quant`` so CI
+can run it as its own job slice (interpret-mode grid steps cost ~ms each on
+CPU — grids are kept tiny, but the slice still deserves its own wall-clock
+budget).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import build_ivf
+from repro.core.block_pool import quantize_int8
+from repro.core.search import exact_search, make_search_fn, search_union_fused
+from repro.kernels import ref
+from repro.kernels.ivf_scan import (
+    ivf_block_topk,
+    ivf_block_topk_int8,
+    ivf_block_topk_int8_scan,
+    ivf_block_topk_scan,
+    quantize_queries,
+    rerank_topk,
+)
+
+
+def _block_cluster(state):
+    """[P] owning cluster per block (host-side), NULL-safe."""
+    cb = np.asarray(state.cluster_blocks)
+    bc = np.zeros(state.pool_ids.shape[0], np.int32)
+    for cl in range(cb.shape[0]):
+        for b in cb[cl]:
+            if b >= 0:
+                bc[b] = cl
+    return bc
+
+
+def _reconstruct(state):
+    """Host-side int8 reconstruction: centroid[owner] + code * scale."""
+    bc = _block_cluster(state)
+    cents = np.asarray(state.centroids)
+    codes = np.asarray(state.pool_payload).astype(np.float32)
+    scales = np.asarray(state.pool_scales)
+    return cents[bc][:, None, :] + codes * scales[..., None]
+
+pytestmark = pytest.mark.quant
+
+
+def _topk_inputs(q, d, p, t, c, seed, dtype=np.float32):
+    """Union-scan shaped inputs: hole blocks, empty id slots, membership."""
+    rng = np.random.default_rng(seed)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    pool_f = rng.normal(size=(p, t, d)).astype(np.float32)
+    ids = rng.integers(0, p, size=(c,)).astype(np.int32)
+    ids[rng.random(c) < 0.25] = -1  # hole blocks
+    pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
+    pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
+    cand_ok = (rng.random((q, c)) < 0.7) & (ids != -1)[None, :]
+    return (queries, pool_f, jnp.asarray(ids), jnp.asarray(pool_ids),
+            jnp.asarray(cand_ok))
+
+
+def _int8_topk_inputs(q, npb, d, p, t, c, seed):
+    """Residual-int8 kernel inputs: per-probe quantized query residuals and
+    a probe-slot index with non-members, over union-shaped candidates."""
+    rng = np.random.default_rng(seed)
+    qres = jnp.asarray(rng.normal(size=(q, npb, d)), jnp.float32)
+    q_codes, q_meta = quantize_queries(qres)
+    codes, scales = quantize_int8(
+        jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
+    )
+    ids = rng.integers(0, p, size=(c,)).astype(np.int32)
+    ids[rng.random(c) < 0.25] = -1  # hole blocks
+    pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
+    pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
+    pslot = rng.integers(-1, npb, size=(q, c)).astype(np.int32)
+    pslot[:, ids == -1] = -1  # hole blocks are invalid for every query
+    return (q_codes, q_meta, codes, scales, jnp.asarray(ids),
+            jnp.asarray(pool_ids), jnp.asarray(pslot))
+
+
+@pytest.mark.parametrize(
+    "q,npb,d,p,t,c,kp",
+    [
+        (8, 4, 64, 16, 128, 4, 16),
+        (13, 3, 32, 9, 16, 11, 8),  # Q not a multiple of 8 (pad path)
+        (5, 2, 128, 4, 64, 3, 256),  # kprime > live candidates
+        (1, 4, 64, 6, 8, 7, 4),
+    ],
+)
+def test_ivf_block_topk_int8_matches_ref(q, npb, d, p, t, c, kp):
+    """Kernel / lax.scan fallback / oracle agree: identical ids (the
+    (distance, id) sort makes quantization ties deterministic), distances
+    to float ulps."""
+    qc, qm, codes, scales, ids, pool_ids, pslot = _int8_topk_inputs(
+        q, npb, d, p, t, c, q + c
+    )
+    want_d, want_i = ref.ivf_block_topk_int8_ref(
+        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp
+    )
+    got_d, got_i = ivf_block_topk_int8(
+        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp,
+        interpret=True,
+    )
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(got_i, want_i)
+    sc_d, sc_i = ivf_block_topk_int8_scan(
+        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp, chunk=4
+    )
+    np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(sc_i, want_i)
+
+
+def test_ivf_block_topk_int8_approximates_fp32():
+    """With a zero centroid (residual == vector, NP=1) the int8 scores are
+    the exact distances between the reconstructions, so they track the fp32
+    scores to quantization error."""
+    q, d, p, t, c, kp = 8, 64, 10, 16, 9, 16
+    queries, pool_f, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, 5)
+    codes, scales = quantize_int8(jnp.asarray(pool_f))
+    q_codes, q_meta = quantize_queries(queries[:, None, :])  # NP=1
+    pslot = jnp.where(ok, 0, -1).astype(jnp.int32)
+    qd, _ = ivf_block_topk_int8(
+        q_codes, q_meta, codes, scales, ids, pool_ids, pslot, kprime=kp,
+        interpret=True,
+    )
+    fd, _ = ref.ivf_block_topk_ref(
+        queries, jnp.asarray(pool_f), ids, pool_ids, ok, kprime=kp
+    )
+    qd, fd = np.asarray(qd), np.asarray(fd)
+    live = np.isfinite(fd) & np.isfinite(qd)
+    rel = np.abs(qd[live] - fd[live]) / np.maximum(fd[live], 1e-3)
+    assert rel.max() < 0.05, rel.max()
+
+
+def test_ivf_block_topk_int8_all_invalid_returns_inf():
+    q, npb, d, p, t, c = 4, 2, 16, 3, 8, 5
+    rng = np.random.default_rng(0)
+    q_codes, q_meta = quantize_queries(
+        jnp.asarray(rng.normal(size=(q, npb, d)), jnp.float32)
+    )
+    codes, scales = quantize_int8(
+        jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
+    )
+    ids = jnp.full((c,), -1, jnp.int32)
+    pool_ids = jnp.zeros((p, t), jnp.int32)
+    pslot = jnp.full((q, c), -1, jnp.int32)
+    d_out, i_out = ivf_block_topk_int8(
+        q_codes, q_meta, codes, scales, ids, pool_ids, pslot, kprime=8,
+        interpret=True,
+    )
+    assert np.isinf(np.asarray(d_out)).all()
+    assert (np.asarray(i_out) == -1).all()
+
+
+@pytest.mark.parametrize("q,d,p,t,c,kp", [(8, 64, 16, 128, 4, 16),
+                                          (13, 32, 9, 16, 11, 8)])
+def test_ivf_block_topk_bf16_matches_ref(q, d, p, t, c, kp):
+    """bf16 payloads flow through the same fused kernel (bf16 operands,
+    f32 accumulation on the MXU)."""
+    queries, pool_f, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, q * c)
+    pool = jnp.asarray(pool_f, jnp.bfloat16)
+    want_d, want_i = ref.ivf_block_topk_ref(
+        queries, pool, ids, pool_ids, ok, kprime=kp
+    )
+    got_d, got_i = ivf_block_topk(
+        queries, pool, ids, pool_ids, ok, kprime=kp, interpret=True
+    )
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(got_i, want_i)
+    sc_d, sc_i = ivf_block_topk_scan(
+        queries, pool, ids, pool_ids, ok, kprime=kp, chunk=4
+    )
+    np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(sc_i, want_i)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_rerank_topk_matches_ref(dtype):
+    """The fused re-rank kernel (dequant + exact distance + sort) against
+    its jnp oracle, across payload dtypes and with invalid (-1) locations."""
+    q, kp, d = 11, 16, 32
+    rng = np.random.default_rng(3)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    rows_f = jnp.asarray(rng.normal(size=(q, kp, d)), jnp.float32)
+    loc = jnp.asarray(rng.integers(-1, 99, size=(q, kp)), jnp.int32)
+    if dtype == "int8":
+        rows, scales = quantize_int8(rows_f)
+    else:
+        rows = rows_f.astype(dtype)
+        scales = jnp.ones((q, kp), jnp.float32)
+    want_d, want_i = ref.rerank_topk_ref(queries, rows, scales, loc)
+    got_d, got_i = rerank_topk(queries, rows, scales, loc, interpret=True)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(got_i, want_i)
+    # ascending, invalid slots at the tail as (inf, -1)
+    gd = np.asarray(got_d)
+    assert (np.diff(gd, axis=1) >= 0).all()
+    assert (np.asarray(got_i)[np.isinf(gd)] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Insert round-trip + end-to-end across dtypes (pool with holes, NULL
+# padding, multi-block chains, rearranged + recycled blocks).
+# ---------------------------------------------------------------------------
+
+
+def _clustered(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)).astype(np.float32) * 3
+    return (
+        centers[rng.integers(0, 8, n)]
+        + rng.normal(size=(n, d)).astype(np.float32)
+    ).astype(np.float32)
+
+
+def _grown_index(dtype):
+    x = _clustered(900, 32, seed=3)
+    idx = build_ivf(
+        x, n_clusters=8, block_size=16, max_chain=32, add_batch=256,
+        nprobe=4, k=10, rearrange_threshold=60, dtype=dtype,
+        capacity_vectors=4000,
+    )
+    # online growth + rearrangement: multi-block chains, freed blocks
+    # recycled -> scales must travel with their rows through compaction
+    extra = _clustered(200, 32, seed=4)
+    idx.add(extra)
+    idx.maybe_rearrange(max_passes=6)
+    tail = _clustered(100, 32, seed=5)
+    idx.add(tail)
+    corpus = np.concatenate([x, extra, tail])
+    return corpus, idx
+
+
+@pytest.fixture(scope="module")
+def int8_index():
+    return _grown_index("int8")
+
+
+@pytest.fixture(scope="module")
+def bf16_index():
+    return _grown_index("bfloat16")
+
+
+@pytest.fixture(scope="module")
+def f32_index():
+    return _grown_index("float32")
+
+
+def test_int8_insert_roundtrip(int8_index):
+    """insert -> reconstruct (centroid + dequantized residual) reproduces
+    every resident row to within the per-vector quantization step (s/2 per
+    coordinate) — including rows that moved through rearrangement."""
+    corpus, idx = int8_index
+    from repro.core.block_pool import check_invariants
+
+    check_invariants(idx.state, idx.pool_cfg)
+    pool_ids = np.asarray(idx.state.pool_ids)
+    mask = pool_ids != -1
+    assert mask.sum() == len(corpus)
+    recon = _reconstruct(idx.state)[mask]
+    scales = np.asarray(idx.state.pool_scales)[mask]
+    orig = corpus[pool_ids[mask]]
+    err = np.abs(recon - orig)
+    assert (err <= scales[:, None] * 0.5 + 1e-5).all(), err.max()
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("rerank", [False, True])
+def test_union_fused_impls_agree(dtype, rerank, request):
+    """Pallas kernel / lax.scan fallback / jnp oracle return identical ids
+    across dtypes, with and without the re-rank epilogue."""
+    fixture = {"float32": "f32_index", "bfloat16": "bf16_index",
+               "int8": "int8_index"}[dtype]
+    corpus, idx = request.getfixturevalue(fixture)
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(corpus[rng.integers(0, len(corpus), 6)] + 0.001)
+    budget = idx._chain_budget()
+    d0 = i0 = None
+    for path in ("union_fused", "union_fused_scan"):
+        fn = make_search_fn(
+            idx.pool_cfg, nprobe=4, k=10, path=path, chain_budget=budget,
+            rerank=rerank,
+        )
+        d, i = fn(idx.state, q)
+        if d0 is None:
+            d0, i0 = np.asarray(d), np.asarray(i)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(d), d0, rtol=1e-4, atol=1e-3
+            )
+            np.testing.assert_array_equal(np.asarray(i), i0)
+    # the jnp oracle branch of the dispatcher agrees too
+    d, i = search_union_fused(
+        idx.pool_cfg, idx.state, q, nprobe=4, k=10, scan_impl="jnp",
+        chain_budget=budget, rerank=rerank,
+    )
+    np.testing.assert_allclose(np.asarray(d), d0, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i), i0)
+
+
+def test_fp32_rerank_is_identity(f32_index):
+    """On a float32 payload the re-rank epilogue recomputes the same exact
+    distances, so results are unchanged (locations map back to the same
+    ids)."""
+    corpus, idx = f32_index
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(corpus[rng.integers(0, len(corpus), 6)] + 0.001)
+    budget = idx._chain_budget()
+    f0 = make_search_fn(idx.pool_cfg, nprobe=4, k=10,
+                        path="union_fused_scan", chain_budget=budget)
+    f1 = make_search_fn(idx.pool_cfg, nprobe=4, k=10,
+                        path="union_fused_scan", chain_budget=budget,
+                        rerank=True)
+    d0, i0 = f0(idx.state, q)
+    d1, i1 = f1(idx.state, q)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d0), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_int8_rerank_distances_match_dequant_oracle(int8_index):
+    """Re-ranked distances are exact fp32 distances to the reconstructed
+    (centroid + dequantized residual) rows, and recall tracks the fp32
+    index."""
+    corpus, idx = int8_index
+    rng = np.random.default_rng(8)
+    sel = rng.integers(0, len(corpus), 8)
+    q = jnp.asarray(corpus[sel] + 0.001)
+    fn = make_search_fn(
+        idx.pool_cfg, nprobe=8, k=10, path="union_fused_scan",
+        chain_budget=idx._chain_budget(), rerank=True,
+    )
+    d, i = fn(idx.state, q)
+    d, i = np.asarray(d), np.asarray(i)
+    # oracle: id -> exact distance to the reconstructed resident row
+    pool_ids = np.asarray(idx.state.pool_ids)
+    recon = _reconstruct(idx.state)
+    id2row = {int(v): recon[p, t]
+              for (p, t) in zip(*np.nonzero(pool_ids != -1))
+              for v in [pool_ids[p, t]]}
+    for qi in range(len(sel)):
+        for dist, cid in zip(d[qi], i[qi]):
+            if cid < 0:
+                continue
+            want = float(np.sum((np.asarray(q)[qi] - id2row[int(cid)]) ** 2))
+            np.testing.assert_allclose(dist, want, rtol=1e-4, atol=1e-3)
+    # self-recall: the quantized-scan + exact-rerank path finds the query
+    hit = (i == sel[:, None]).any(axis=1).mean()
+    assert hit > 0.8, hit
+
+
+def test_int8_k_exceeds_live_masks_tail(int8_index):
+    """k > vectors in the probed list: (inf, -1) tail with and without
+    re-rank (hole/NULL masking survives the epilogue)."""
+    corpus, idx = int8_index
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(corpus[rng.integers(0, len(corpus), 4)])
+    for rerank in (False, True):
+        fn = make_search_fn(
+            idx.pool_cfg, nprobe=1, k=300, path="union_fused_scan",
+            chain_budget=idx._chain_budget(), rerank=rerank,
+        )
+        d, i = fn(idx.state, q)
+        d, i = np.asarray(d), np.asarray(i)
+        assert np.isinf(d).any(), "expected padded tail past the probed list"
+        assert (i[np.isinf(d)] == -1).all()
+        assert (i[~np.isinf(d)] >= 0).all()
+
+
+def test_rerank_restores_int8_tie_ordering():
+    """Two vectors whose int8-quantized first-pass distances tie exactly
+    come back in id order from the quantized pass but in true fp32 order
+    after the re-rank.
+
+    Construction (centroid at the origin, so residual == vector): v1/v2
+    share the quantization scale and differ only in the sign of one
+    coordinate; the query's component along that coordinate is below half
+    its own quantization step, so the *quantized* query is exactly
+    equidistant from both codes — while the exact fp32 query prefers v1."""
+    from repro.core.block_pool import PoolConfig, init_state
+    from repro.core.insert import make_insert_fn
+
+    dim = 16
+    s = np.float32(1.27) / 127
+    v1 = np.zeros(dim, np.float32)
+    v2 = np.zeros(dim, np.float32)
+    v1[0], v1[1] = 1.27, 1.0  # codes [127, 100, 0, ...], scale s
+    v2[0], v2[1] = 1.27, -1.0  # codes [127, -100, 0, ...], same scale
+    query = np.zeros((1, dim), np.float32)
+    query[0, 0], query[0, 1] = 1.0, 0.003  # 0.003 < (1.0/127)/2: rounds to 0
+    filler = np.abs(_clustered(60, dim, seed=11)) + 100.0
+    cents = np.zeros((2, dim), np.float32)
+    cents[1] = 110.0
+    cfg = PoolConfig(n_clusters=2, dim=dim, block_size=16, n_blocks=16,
+                     max_chain=4, dtype="int8")
+    state = init_state(cfg, jnp.asarray(cents))
+    insert = make_insert_fn(cfg)
+    corpus = np.concatenate([v2[None], v1[None], filler])  # v2 gets id 0
+    state = insert(state, jnp.asarray(corpus),
+                   jnp.arange(len(corpus), dtype=jnp.int32))
+    plain = make_search_fn(cfg, nprobe=2, k=2, path="union_fused_scan")
+    rer = make_search_fn(cfg, nprobe=2, k=2, path="union_fused_scan",
+                         rerank=True)
+    qd, qi = plain(state, jnp.asarray(query))
+    assert np.asarray(qd)[0, 0] == np.asarray(qd)[0, 1], "expected exact tie"
+    # tie breaks by pool location == insertion order here, not by distance
+    assert list(np.asarray(qi)[0]) == [0, 1]
+    rd, ri = rer(state, jnp.asarray(query))
+    assert list(np.asarray(ri)[0]) == [1, 0], "rerank must restore fp32 order"
+    assert np.asarray(rd)[0, 0] < np.asarray(rd)[0, 1]
+    # and the restored order is the true fp32 order
+    _, ei = exact_search(jnp.asarray(corpus), jnp.asarray(query), 2)
+    np.testing.assert_array_equal(np.asarray(ri)[0], np.asarray(ei)[0])
+
+
+def test_int8_requires_fused_path():
+    """Non-fused paths would score raw int8 codes as numbers — rejected
+    loudly; ditto rerank on a path without the epilogue."""
+    import dataclasses
+
+    corpus = _clustered(200, 16, seed=12)
+    idx = build_ivf(corpus, n_clusters=2, block_size=16, max_chain=16,
+                    add_batch=64, dtype="int8")
+    with pytest.raises(NotImplementedError, match="int8"):
+        make_search_fn(idx.pool_cfg, nprobe=2, k=5, path="block_table")
+    f32_cfg = dataclasses.replace(idx.pool_cfg, dtype="float32")
+    with pytest.raises(NotImplementedError, match="rerank"):
+        make_search_fn(f32_cfg, nprobe=2, k=5, path="union", rerank=True)
+
+
+def test_int8_serving_runtime_rerank():
+    """The serving runtime routes an int8 index through the fused path with
+    the re-rank epilogue."""
+    import time
+
+    from repro.core.scheduler import RuntimeConfig, ServingRuntime
+
+    x = _clustered(600, 16, seed=13)
+    idx = build_ivf(x, n_clusters=4, block_size=16, max_chain=32,
+                    add_batch=256, dtype="int8", capacity_vectors=3000)
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(mode="parallel", nprobe=4, k=5,
+                      search_path="union_fused_scan", rerank=True,
+                      flush_min=4, flush_interval=0.05),
+    )
+    try:
+        d, ids = rt.submit_search(x[:4]).result(timeout=120)
+        assert (ids[:, 0] == np.arange(4)).all()
+        new = _clustered(12, 16, seed=14) + 60.0
+        new_ids = rt.submit_insert(new).result(timeout=30)
+        time.sleep(0.1)
+        d, ids = rt.submit_search(new[:2]).result(timeout=60)
+        assert (ids[:, 0] == new_ids[:2]).all()
+    finally:
+        rt.stop()

@@ -205,6 +205,98 @@ def test_chain_budget_recomputed_after_growth():
     assert (i_rt == i_f).all()
 
 
+def test_search_failure_resolves_futures_and_releases_slots(base_index):
+    """Regression (slot/future leak): an exception mid-dispatch used to
+    leave every batched future unresolved and the semaphore slots acquired
+    forever — after a few failures the runtime rejected all traffic."""
+    x, make = base_index
+    n_slots = 4
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", n_slots=n_slots, nprobe=4, k=5),
+    )
+    try:
+        # wrong dimensionality -> the jitted step raises inside the worker
+        bad = [rt.submit_search(np.zeros((1, 3), np.float32))
+               for _ in range(n_slots)]
+        for f in bad:
+            with pytest.raises(Exception):
+                f.result(timeout=30)
+        # every slot must be back: a full burst of valid searches succeeds
+        good = [rt.submit_search(x[i : i + 1]) for i in range(n_slots)]
+        for i, f in enumerate(good):
+            d, ids = f.result(timeout=30)
+            assert ids[0, 0] == i
+    finally:
+        rt.stop()
+
+
+def test_insert_failure_resolves_futures(base_index):
+    """A failing insert batch must fail its futures, not hang them, and the
+    insert lane must keep serving afterwards."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", nprobe=4, k=5, flush_min=1,
+                      flush_interval=0.05),
+    )
+    try:
+        bad = rt.submit_insert(np.zeros((2, 3), np.float32))  # wrong dim
+        with pytest.raises(Exception):
+            bad.result(timeout=30)
+        ok = rt.submit_insert(_data(4, 16, seed=300))
+        assert len(ok.result(timeout=30)) == 4
+    finally:
+        rt.stop()
+
+
+def test_latency_samples_bounded(base_index):
+    """Regression: _search_lat/_insert_lat grew forever under sustained
+    traffic; stats() now reports over a bounded sliding window."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", nprobe=4, k=5, latency_window=8),
+    )
+    try:
+        for _ in range(3):
+            futs = [rt.submit_search(x[:1]) for _ in range(7)]
+            for f in futs:
+                f.result(timeout=30)
+        assert len(rt._search_lat) == 8  # maxlen, not 21
+        assert rt.stats()["search"].n == 8
+    finally:
+        rt.stop()
+
+
+def test_rerank_requires_fused_path(base_index):
+    """rerank on a non-fused path must fail at construction."""
+    x, make = base_index
+    with pytest.raises(NotImplementedError, match="rerank"):
+        ServingRuntime(
+            make(), RuntimeConfig(search_path="block_table", rerank=True)
+        )
+
+
+def test_search_path_union_fused_rerank_serves(base_index):
+    """The exact re-rank epilogue plugs into the runtime end to end (fp32
+    payload: identical results to the plain fused path)."""
+    x, make = base_index
+    rt = ServingRuntime(
+        make(),
+        RuntimeConfig(mode="parallel", nprobe=4, k=5,
+                      search_path="union_fused_scan", rerank=True),
+    )
+    try:
+        futs = [rt.submit_search(x[i : i + 1]) for i in range(4)]
+        for i, f in enumerate(futs):
+            d, ids = f.result(timeout=60)
+            assert ids.shape == (1, 5)
+            assert ids[0, 0] == i  # self-match
+    finally:
+        rt.stop()
+
+
 def test_stats_collected(base_index):
     x, make = base_index
     rt = ServingRuntime(make(), RuntimeConfig(mode="parallel", nprobe=4, k=5))
