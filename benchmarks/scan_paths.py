@@ -30,7 +30,16 @@ Metrics per row:
   halves it, f32 -> int8 quarters it);
 * ``side_bytes_moved`` — non-payload per-slot bytes riding along (i32 ids,
   plus f32 scales for int8);
-* ``grid_steps`` — Pallas grid steps launched (0 for pure-XLA paths);
+* ``prologue_bytes_moved`` — routing-operand bytes of the search prologue
+  (coarse-probe output + candidate list + membership/probe-slot data the
+  scan consumes).  The fused prologue pays O(Q*NP + CB): [Q, NP] probe
+  ids/dists + [CB] block ids/owners — membership is derived in-kernel.
+* ``prologue_bytes_moved_old`` — same accounting for the PR-3 prologue
+  (dense [Q, N_clusters] coarse matrix in HBM + [Q, CB] cand_ok/pslot
+  operand + [CB] block ids); the acceptance criterion is a >= 10x
+  reduction at Q=64, nprobe=32 on the default synthetic config.
+* ``grid_steps`` — Pallas grid steps launched (0 for pure-XLA paths; the
+  pallas paths now include the ``coarse_topk`` prologue steps);
 * ``recall_at_10`` — dtype sweep only, vs the exact fp32 brute-force oracle.
 
 Writes ``BENCH_scan_paths.json`` ({"meta": ..., "rows": [...]}) at the repo
@@ -80,28 +89,43 @@ def candidate_cap(*, q: int, nprobe: int, budget: int, pool_blocks: int) -> int:
     return min(q * nprobe * budget, pool_blocks)
 
 
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def coarse_grid_steps(q: int, n_clusters: int, q_tile: int = 128,
+                      c_tile: int = 128) -> int:
+    """Grid steps of the streaming coarse probe (coarse_topk defaults)."""
+    qt = min(q_tile, _ceil_div(q, 8) * 8)
+    tc = min(c_tile, _ceil_div(n_clusters, 8) * 8)
+    return _ceil_div(q, qt) * _ceil_div(n_clusters, tc)
+
+
 def grid_steps(path: str, *, q: int, nprobe: int, budget: int,
-               pool_blocks: int, pq: bool = False,
+               pool_blocks: int, n_clusters: int, pq: bool = False,
                rerank: bool = False) -> int:
     """Pallas grid steps a config launches (0 = no kernel: pure XLA)."""
+    cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                        pool_blocks=pool_blocks)
     if path == "union_pallas":
-        # ivf_block_scan runs over the *uncompacted* NULL-padded union
-        return q * nprobe * budget
+        # ivf_block_scan now runs over the *compacted* candidate list
+        # (the prologue dedups + truncates), plus the coarse prologue
+        return cap + coarse_grid_steps(q, n_clusters)
     if path == "union_fused":
-        cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
-                            pool_blocks=pool_blocks)
         q_tile = 8 if pq else 128  # kernel defaults (LUT tile vs query tile)
-        steps = -(-q // q_tile) * cap
+        steps = _ceil_div(q, q_tile) * cap + coarse_grid_steps(q, n_clusters)
         if rerank:
-            steps += -(-q // 8)  # one re-rank step per 8-query tile
+            steps += _ceil_div(q, 8)  # one re-rank step per 8-query tile
         return steps
     return 0
 
 
 def intermediate_bytes(path: str, *, q: int, nprobe: int, budget: int,
-                       t: int, k: int, pq_m: int = 0) -> int:
+                       t: int, k: int, pool_blocks: int,
+                       pq_m: int = 0) -> int:
     """Peak scoring-intermediate bytes between scoring and selection."""
-    cb = q * nprobe * budget  # candidate blocks (union is NULL-padded)
+    cb = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                       pool_blocks=pool_blocks)  # compacted union list
     if path == "union_fused":
         return q * default_kprime(k) * 8  # f32 dist + i32 id accumulator
     if path == "union_fused_scan":
@@ -128,13 +152,14 @@ def payload_bytes_moved(path: str, *, q: int, nprobe: int, budget: int,
     latency floor the dtype axis attacks: bf16 halves it, int8 quarters it,
     PQ reads 1 byte per subquantizer."""
     per_vec = pq_m if pq_m else d * ITEMSIZE[dtype]
-    if path in ("union_fused", "union_fused_scan"):
+    if path.startswith("union"):
+        # the whole union family now scans the deduped *compacted*
+        # candidate list (plain union/union_pallas included — they used to
+        # score every NULL-padded slot against clamped block 0)
         cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
                             pool_blocks=pool_blocks)
         return cap * t * per_vec
-    # plain union reads the NULL-padded (uncompacted) union once per batch;
-    # the per-query gather paths read q*nprobe*budget slots — numerically
-    # the same expression, since union padding equals the per-query total
+    # the per-query gather paths read q*nprobe*budget slots
     return q * nprobe * budget * t * per_vec
 
 
@@ -143,11 +168,48 @@ def side_bytes_moved(path: str, *, q: int, nprobe: int, budget: int,
     """Non-payload per-slot bytes riding along with the scan (i32 vector
     ids; int8 additionally streams one f32 scale per vector)."""
     per_slot = 4 + (4 if dtype == "int8" else 0)
-    if path in ("union_fused", "union_fused_scan"):
+    if path.startswith("union"):
         cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
                             pool_blocks=pool_blocks)
         return cap * t * per_slot
     return q * nprobe * budget * t * per_slot
+
+
+UNION_PATHS = ("union", "union_pallas", "union_fused", "union_fused_scan")
+
+
+def prologue_bytes_moved(path: str, *, q: int, nprobe: int, budget: int,
+                         pool_blocks: int, n_clusters: int) -> int:
+    """Routing-operand bytes of the *current* search prologue: everything
+    the dispatch moves to decide which rows each query scores, excluding
+    the payload/id/scale traffic counted above.
+
+    Union family (fused prologue): the streaming coarse probe emits
+    [Q, NP] probe ids + dists (8 B/entry, the [Q, N] matrix never exists),
+    and the kernels consume the [CB] candidate block ids + [CB] owners
+    (4 B each) — membership/probe slots are derived on-chip, so per-query
+    routing is O(NP).  block_table/chain_walk still materialize the dense
+    [Q, N] coarse matrix and gather per query."""
+    cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                        pool_blocks=pool_blocks)
+    if path in UNION_PATHS:
+        return q * nprobe * 8 + cap * 8
+    return q * n_clusters * 4 + q * nprobe * 4
+
+
+def prologue_bytes_moved_old(path: str, *, q: int, nprobe: int, budget: int,
+                             pool_blocks: int, n_clusters: int) -> int:
+    """Same accounting for the PR-3 prologue: dense [Q, N_clusters] f32
+    coarse matrix in HBM, a [Q, CB] i32 cand_ok/pslot operand shipped into
+    the fused kernels, and the [CB] i32 block ids.  Non-union paths are
+    unchanged."""
+    cap = candidate_cap(q=q, nprobe=nprobe, budget=budget,
+                        pool_blocks=pool_blocks)
+    if path in UNION_PATHS:
+        return q * n_clusters * 4 + q * cap * 4 + cap * 4
+    return prologue_bytes_moved(path, q=q, nprobe=nprobe, budget=budget,
+                                pool_blocks=pool_blocks,
+                                n_clusters=n_clusters)
 
 
 # (corpus size, block size T, query batch Q) — spans batch sizes and chain
@@ -159,6 +221,7 @@ CONFIGS = ((6_000, 64, 10), (6_000, 64, 64), (4_000, 32, 10))
 def _row_common(path, idx, *, n, batch, nprobe, budget, block_size, k,
                 dtype="float32", pq_m=0, rerank=False):
     pool_blocks = idx.pool_cfg.n_blocks
+    n_clusters = idx.pool_cfg.n_clusters
     return {
         "path": path,
         "payload": "pq" if pq_m else "flat",
@@ -166,15 +229,18 @@ def _row_common(path, idx, *, n, batch, nprobe, budget, block_size, k,
         "rerank": rerank,
         "n": n,
         "batch": batch,
+        "nprobe": nprobe,
+        "n_clusters": n_clusters,
         "block_size": block_size,
         "chain_budget": budget,
         "grid_steps": grid_steps(
             path, q=batch, nprobe=nprobe, budget=budget,
-            pool_blocks=pool_blocks, pq=bool(pq_m), rerank=rerank,
+            pool_blocks=pool_blocks, n_clusters=n_clusters, pq=bool(pq_m),
+            rerank=rerank,
         ),
         "intermediate_bytes": intermediate_bytes(
             path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
-            k=k, pq_m=pq_m,
+            k=k, pool_blocks=pool_blocks, pq_m=pq_m,
         ),
         "payload_bytes_moved": payload_bytes_moved(
             path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
@@ -184,6 +250,14 @@ def _row_common(path, idx, *, n, batch, nprobe, budget, block_size, k,
         "side_bytes_moved": side_bytes_moved(
             path, q=batch, nprobe=nprobe, budget=budget, t=block_size,
             pool_blocks=pool_blocks, dtype=dtype,
+        ),
+        "prologue_bytes_moved": prologue_bytes_moved(
+            path, q=batch, nprobe=nprobe, budget=budget,
+            pool_blocks=pool_blocks, n_clusters=n_clusters,
+        ),
+        "prologue_bytes_moved_old": prologue_bytes_moved_old(
+            path, q=batch, nprobe=nprobe, budget=budget,
+            pool_blocks=pool_blocks, n_clusters=n_clusters,
         ),
     }
 
@@ -290,6 +364,106 @@ def run_dtypes(nprobe=8, k=10, iters=3, n=8_000, block_size=64, batch=64,
     return rows
 
 
+def run_prologue(nprobe=32, k=10, iters=3, n=8_000, block_size=64, batch=64,
+                 n_clusters=384):
+    """Acceptance sweep for the fused routing prologue at Q=64, nprobe=32
+    on the default synthetic config: the routing-operand bytes of the
+    fused dispatch must be >= 10x below the PR-3 prologue (dense [Q, N]
+    coarse matrix + [Q, CB] membership/probe-slot operands).  Asserted
+    in-script so regeneration enforces it."""
+    corpus = sift_like(n, 128, seed=7)
+    idx = build_ivf(
+        corpus, n_clusters=n_clusters, block_size=block_size, max_chain=64,
+        nprobe=nprobe, k=k, add_batch=8192,
+    )
+    budget = idx._chain_budget()
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(corpus[rng.integers(0, n, batch)] + 0.01)
+    rows = []
+    ref_ids = None
+    for path in ("block_table", "union_fused", "union_fused_scan"):
+        row = _row_common(path, idx, n=n, batch=batch, nprobe=nprobe,
+                          budget=budget, block_size=block_size, k=k)
+        row["sweep"] = "prologue"
+        if row["grid_steps"] > MAX_GRID_STEPS:
+            row.update(us_per_call=None, skipped="grid_steps over "
+                       f"MAX_GRID_STEPS={MAX_GRID_STEPS}")
+            rows.append(row)
+            continue
+        fn = make_search_fn(idx.pool_cfg, nprobe=nprobe, k=k, path=path,
+                            chain_budget=budget)
+        d, ids = fn(idx.state, q)
+        jax.block_until_ready(ids)
+        if ref_ids is None:
+            ref_ids = np.asarray(ids)
+        else:
+            assert (np.asarray(ids) == ref_ids).all(), f"{path} diverged"
+        t = timed(lambda: fn(idx.state, q), iters=iters)
+        row["us_per_call"] = round(t * 1e6, 1)
+        rows.append(row)
+    fused = next(r for r in rows if r["path"] == "union_fused")
+    ratio = fused["prologue_bytes_moved_old"] / fused["prologue_bytes_moved"]
+    assert ratio >= 10.0, (
+        f"prologue routing bytes only dropped {ratio:.1f}x "
+        f"(old {fused['prologue_bytes_moved_old']}, "
+        f"new {fused['prologue_bytes_moved']}) at Q={batch}, nprobe={nprobe}"
+    )
+    return rows
+
+
+def run_coarse(nprobe=16, iters=3, batch=64, dim=128,
+               sweep=(64, 128, 256, 512)):
+    """Coarse-probe sweep over N_clusters: the streaming ``coarse_topk``
+    kernel (interpret mode off-TPU — grid steps dominate wall clock, the
+    byte column is what transfers) vs the dense ``coarse_probe`` matmul.
+    Results are cross-checked bit-exact per N."""
+    import types
+
+    from repro.kernels.ivf_scan import coarse_topk
+    from repro.core.search import coarse_probe
+
+    rng = np.random.default_rng(9)
+    queries = jnp.asarray(rng.normal(size=(batch, dim)), jnp.float32)
+    rows = []
+    for n_clusters in sweep:
+        cents = jnp.asarray(
+            rng.normal(size=(n_clusters, dim)), jnp.float32
+        )
+        probe_fn = jax.jit(
+            lambda c, qs: coarse_probe(types.SimpleNamespace(centroids=c),
+                                       qs, nprobe)
+        )
+        kern_fn = jax.jit(
+            lambda c, qs: coarse_topk(qs, c, nprobe=nprobe, interpret=True)
+        )
+        want_i, want_d = probe_fn(cents, queries)
+        got_i, got_d = kern_fn(cents, queries)
+        assert (np.asarray(got_i) == np.asarray(want_i)).all(), n_clusters
+        assert (np.asarray(got_d) == np.asarray(want_d)).all(), n_clusters
+        steps = coarse_grid_steps(batch, n_clusters)
+        for name, fn, gsteps, pbytes in (
+            ("coarse_probe", probe_fn, 0,
+             batch * n_clusters * 4 + batch * nprobe * 8),
+            ("coarse_topk", kern_fn, steps, batch * nprobe * 8),
+        ):
+            if gsteps > MAX_GRID_STEPS:
+                rows.append({"path": name, "sweep": "coarse",
+                             "n_clusters": n_clusters, "batch": batch,
+                             "nprobe": nprobe, "grid_steps": gsteps,
+                             "prologue_bytes_moved": pbytes,
+                             "us_per_call": None,
+                             "skipped": "grid_steps over "
+                                        f"MAX_GRID_STEPS={MAX_GRID_STEPS}"})
+                continue
+            t = timed(lambda: fn(cents, queries), iters=iters)
+            rows.append({"path": name, "sweep": "coarse",
+                         "n_clusters": n_clusters, "batch": batch,
+                         "nprobe": nprobe, "grid_steps": gsteps,
+                         "prologue_bytes_moved": pbytes,
+                         "us_per_call": round(t * 1e6, 1)})
+    return rows
+
+
 def run_pq(nprobe=8, k=10, iters=3, n=4_000, block_size=32, batch=16,
            pq_m=16):
     """Quantized-PQ sweep (batch sized by grid steps: the PQ kernel's
@@ -348,6 +522,15 @@ META = {
                                "this 2x (bf16) / 4x (int8)",
         "side_bytes_moved": "per-slot i32 ids (+ f32 scales for int8) "
                             "riding along with the scan",
+        "prologue_bytes_moved": "routing-operand bytes of the search "
+                                "prologue (union family: [Q,NP] probe "
+                                "ids/dists + [CB] block ids/owners — "
+                                "membership derived in-kernel)",
+        "prologue_bytes_moved_old": "the PR-3 prologue's routing bytes "
+                                    "([Q,N] coarse matrix + [Q,CB] "
+                                    "cand_ok/pslot + [CB] ids); acceptance "
+                                    "is >= 10x reduction at Q=64, "
+                                    "nprobe=32 (asserted in run_prologue)",
         "recall_at_10": "dtype sweep only: vs exact fp32 brute force",
         "skipped": "present when the config was not timed",
     },
@@ -363,14 +546,17 @@ META = {
 
 
 def main():
-    rows = run() + run_dtypes() + run_pq()
+    rows = run() + run_dtypes() + run_prologue() + run_coarse() + run_pq()
     print("path,payload,dtype,rerank,n,batch,block_size,us_per_call,"
-          "grid_steps,intermediate_bytes,payload_bytes_moved")
+          "grid_steps,intermediate_bytes,payload_bytes_moved,"
+          "prologue_bytes_moved")
     for r in rows:
-        print(f"{r['path']},{r['payload']},{r['dtype']},{r['rerank']},"
-              f"{r['n']},{r['batch']},{r['block_size']},{r['us_per_call']},"
-              f"{r['grid_steps']},{r['intermediate_bytes']},"
-              f"{r['payload_bytes_moved']}")
+        print(f"{r['path']},{r.get('payload')},{r.get('dtype')},"
+              f"{r.get('rerank')},{r.get('n')},{r['batch']},"
+              f"{r.get('block_size')},{r['us_per_call']},"
+              f"{r['grid_steps']},{r.get('intermediate_bytes')},"
+              f"{r.get('payload_bytes_moved')},"
+              f"{r.get('prologue_bytes_moved')}")
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scan_paths.json"
     out.write_text(json.dumps({"meta": META, "rows": rows}, indent=2) + "\n")
     print(f"wrote {out}")

@@ -63,6 +63,14 @@ def main():
           f"{recall_at_k(i_i8, np.asarray(exact_ids), 10):.3f} "
           f"(payload bytes/dim: 1 vs 4)")
 
+    # The routing prologue of the fused paths is itself fused: the coarse
+    # probe streams through the coarse_topk kernel (no [Q, N_clusters]
+    # distance matrix in HBM, bit-exact with the dense probe), and
+    # per-query candidate membership is derived *inside* the scan kernels
+    # from each block's owner (IVFState.block_owner) — per-query routing
+    # traffic is O(nprobe), not O(candidates).  Nothing to configure: every
+    # union path uses it automatically.
+
     # ---- IVFPQ on the fused streaming path (§3.3 deployment) ------------
     # Quantized payload: 1 byte/dim in the pool, searched via the PQ-ADC
     # fused top-k kernel (LUT in VMEM, [Q, K'] writeback — no [C, Q, T]

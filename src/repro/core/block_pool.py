@@ -108,6 +108,7 @@ class IVFState:
     pool_payload: jax.Array  # [P, T_m, D] vectors | [P, T_m, M] u8 codes
     pool_ids: jax.Array  # [P, T_m] i32 global ids, NULL = empty slot
     pool_scales: jax.Array  # [P, T_m] f32 int8 dequant scales ([0,0] unused)
+    block_owner: jax.Array  # [P] i32 owning cluster per block, NULL = free
     next_block: jax.Array  # [P] i32 linked-list next pointer (paper header)
     cluster_head: jax.Array  # [N] i32 first block of each chain
     cluster_tail: jax.Array  # [N] i32 last block of each chain
@@ -136,6 +137,7 @@ def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
         pool_payload=jnp.zeros(cfg.payload_shape(), cfg.payload_dtype()),
         pool_ids=jnp.full((p, cfg.block_size), NULL, jnp.int32),
         pool_scales=jnp.zeros(cfg.scales_shape(), jnp.float32),
+        block_owner=jnp.full((p,), NULL, jnp.int32),
         next_block=jnp.full((p,), NULL, jnp.int32),
         cluster_head=jnp.full((n,), NULL, jnp.int32),
         cluster_tail=jnp.full((n,), NULL, jnp.int32),
@@ -246,6 +248,11 @@ def check_invariants(state: IVFState, cfg: PoolConfig) -> None:
             assert cur not in seen_blocks, f"block {cur} in two chains"
             seen_blocks.add(cur)
             chain.append(cur)
+            # every chained block knows its owner (the in-kernel membership
+            # test of the fused prologue rides on this invariant)
+            assert int(s.block_owner[cur]) == k, (
+                k, cur, int(s.block_owner[cur])
+            )
             cur = int(s.next_block[cur])
             assert len(chain) <= cfg.max_chain, f"cluster {k} chain overflow"
         assert len(chain) == nblk, (k, chain, nblk)
@@ -268,6 +275,11 @@ def check_invariants(state: IVFState, cfg: PoolConfig) -> None:
     # free stack entries are disjoint from live chains
     free = {int(b) for b in s.free_stack[: int(s.free_top)]}
     assert not (free & seen_blocks), "freed block still chained"
+    # unchained blocks (never allocated, or freed) own nothing — a stale
+    # owner would make the in-kernel membership test admit a dead block
+    for b in range(s.block_owner.shape[0]):
+        if b not in seen_blocks:
+            assert int(s.block_owner[b]) == -1, (b, int(s.block_owner[b]))
 
 
 def snapshot_ids(state: IVFState, cfg: PoolConfig) -> dict[int, list[int]]:

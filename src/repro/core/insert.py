@@ -126,6 +126,12 @@ def insert_payload(
         phys, mode="drop"
     )
 
+    # block->owner map, maintained incrementally (the fused search prologue
+    # prefetches it per candidate instead of rebuilding a [P] scatter from
+    # the block table on every dispatch)
+    own_rows = jnp.where(j_valid & (phys != NULL), phys, cfg.n_blocks)
+    block_owner = state.block_owner.at[own_rows].set(owner, mode="drop")
+
     # linked-list scatter (paper header relink, Alg. 2 line 14):
     # predecessor of run element jj>0 is phys of rank j-1 (same cluster by
     # construction of contiguous runs); predecessor of jj==0 is the old tail
@@ -178,6 +184,7 @@ def insert_payload(
         pool_payload=pool_payload,
         pool_ids=pool_ids,
         pool_scales=pool_scales,
+        block_owner=block_owner,
         next_block=next_block,
         cluster_head=cluster_head,
         cluster_tail=cluster_tail,

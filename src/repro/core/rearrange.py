@@ -98,12 +98,20 @@ def rearrange_cluster(
     old_rows = jnp.where(chain_valid, table, cfg.n_blocks)
     pool_ids = pool_ids.at[old_rows].set(NULL, mode="drop")
     next_block = next_block.at[old_rows].set(NULL, mode="drop")
+    # ownership moves with the chain: the fresh run belongs to this cluster,
+    # the recycled blocks belong to nobody (a stale owner would let the
+    # in-kernel membership test admit a freed block)
+    block_owner = state.block_owner.at[rows].set(
+        jnp.where(chain_valid, cluster, NULL), mode="drop"
+    )
+    block_owner = block_owner.at[old_rows].set(NULL, mode="drop")
 
     return dataclasses.replace(
         state,
         pool_payload=pool_payload,
         pool_ids=pool_ids,
         pool_scales=pool_scales,
+        block_owner=block_owner,
         next_block=next_block,
         cluster_head=cluster_head,
         cluster_tail=cluster_tail,

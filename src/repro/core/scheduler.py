@@ -151,16 +151,33 @@ class ServingRuntime:
     def _current_budget(self) -> int:
         """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
 
-        The budget tracks the live chain depth bucketed to a power of two
-        (2x headroom keeps recompiles rare); computing it once at
-        construction silently truncated chains — and dropped candidates —
-        after online inserts grew them past 2x the initial depth.  The value
-        is cached between inserts (callers hold ``_state_lock``).
+        The budget is the live chain depth bucketed to the next power of
+        two with 2x headroom (capped at ``max_chain``) *before* it keys the
+        ``_search_steps``/``_fused_steps`` jit caches, so steady chain
+        growth costs O(log max_chain) recompiles instead of one per
+        increment; computing it once at construction silently truncated
+        chains — and dropped candidates — after online inserts grew them
+        past 2x the initial depth.  The value is cached between inserts
+        (callers hold ``_state_lock``).  Chains never shrink, so when the
+        bucket advances the entries keyed by smaller budgets can never be
+        dispatched again — they are evicted instead of pinning their
+        compiled executables (and output buffers) forever.
         """
         if self._budget is None:
-            self._budget = min(
-                2 * self.index._chain_budget(), self.pool_cfg.max_chain
+            # IVFIndex._chain_budget() happens to return pow2 buckets
+            # already, making the _bucket pass idempotent today — it is
+            # enforced *here* regardless, because the jit-cache keys below
+            # are what actually bound the recompile count; a future budget
+            # heuristic must not silently re-introduce
+            # one-recompile-per-increment growth.
+            budget = min(
+                self._bucket(2 * self.index._chain_budget(), floor=1),
+                self.pool_cfg.max_chain,
             )
+            for cache in (self._search_steps, self._fused_steps):
+                for stale in [b for b in cache if b < budget]:
+                    del cache[stale]
+            self._budget = budget
         return self._budget
 
     def _make_search(self, budget: int):

@@ -24,8 +24,7 @@ kernel (``repro.kernels.ivf_scan``) via ``scan_impl="pallas"``.
 The fused paths dispatch on the payload dtype (``PoolConfig.dtype``):
 float32 and bfloat16 blocks route through ``ivf_block_topk``, int8
 *residual* codes through the integer-MXU ``ivf_block_topk_int8``
-(per-vector scales from ``IVFState.pool_scales``, per-probe query residual
-codes selected via the probe-slot index), PQ codes through
+(per-vector scales from ``IVFState.pool_scales``), PQ codes through
 ``ivf_pq_block_topk``.  The fused kernels identify candidates by *packed
 pool location* (``block*T + offset``, derived in-kernel from the prefetched
 block id at zero HBM cost); the final top-k resolves locations to global
@@ -33,6 +32,17 @@ ids with one ``[Q, k]`` gather.  With ``rerank=True`` the K' survivor rows
 are gathered by location and an exact-fp32 re-rank epilogue
 (``rerank_topk``; jnp fallback for the scan impl) re-sorts them before the
 final top-k — recovering the recall a low-precision first pass gives up.
+
+The *routing prologue* is fused too (§Perf): the coarse probe streams
+through ``coarse_topk`` (per-query top-``nprobe`` accumulator on-chip —
+the ``[Q, N_clusters]`` distance matrix never exists in HBM, bit-exact
+with ``coarse_probe``), the union candidate list is deduped + compacted
+by one sort/cumsum pass over the ``[CB]`` block list (no per-query work,
+no ``[Q, NP, CU]`` match tensor), and per-(query, candidate) membership /
+probe slots are derived *inside* the fused kernels by comparing each
+candidate's prefetched owner (``IVFState.block_owner``, maintained
+incrementally by insert/rearrange) against the VMEM-resident ``[Q, NP]``
+probe list — per-query routing traffic is O(NP), not O(CB).
 """
 
 from __future__ import annotations
@@ -218,11 +228,28 @@ def search_chain_walk(
 
 
 class UnionCandidates(NamedTuple):
-    flat_blocks: jax.Array  # [CB = CU*MC] candidate block ids, NULL-padded
-    member: jax.Array  # [Q, CU] per-(query, union-cluster) membership
-    mc: int  # chain slots gathered per cluster (static)
-    probe_idx: jax.Array  # [Q, NP] probed cluster ids
-    matches: jax.Array  # [Q, NP, CU] probe_idx == union (member's source)
+    flat_blocks: jax.Array  # [CB] deduped live block ids, NULL-padded tail
+    owners: jax.Array  # [CB] owning cluster per candidate (NULL padding)
+    probe_idx: jax.Array  # [Q, NP] probed cluster ids (distinct per row)
+
+
+def _coarse_dispatch(
+    state: IVFState, queries: jax.Array, nprobe: int, scan_impl: str
+):
+    """Coarse probe matching the path's execution style: the Pallas paths
+    stream it through ``coarse_topk`` (no [Q, N] matrix in HBM), the scan
+    fallback through its chunked ``lax.scan`` twin, and the jnp oracle
+    through plain ``coarse_probe`` — all three are bit-exact, ties
+    included, so the choice never changes results."""
+    if scan_impl == "pallas":
+        from repro.kernels.ops import coarse_topk
+
+        return coarse_topk(queries, state.centroids, nprobe=nprobe)
+    if scan_impl == "scan":
+        from repro.kernels.ivf_scan import coarse_topk_scan
+
+        return coarse_topk_scan(queries, state.centroids, nprobe=nprobe)
+    return coarse_probe(state, queries, nprobe)
 
 
 def _union_candidates(
@@ -231,30 +258,41 @@ def _union_candidates(
     queries: jax.Array,
     nprobe: int,
     chain_budget: Optional[int],
+    scan_impl: str = "jnp",
 ) -> UnionCandidates:
-    """Shared prologue of the union paths: probe, dedup across the batch,
-    flatten the block table."""
+    """Fused routing prologue of the union paths: streaming coarse probe,
+    then dedup + compaction of the candidate block list in a single
+    sort/cumsum pass over the [CB] block ids — computed once per dispatch,
+    not per query.  No ``jnp.unique``, no [Q, NP, CU] match tensor, no
+    [Q, CB] membership operand: the per-(query, candidate) routing is
+    derived in-kernel from ``owners`` and ``probe_idx``.
+
+    The compacted list is statically capped at min(CB, P): every live
+    block appears at most once (chains are disjoint), so dead slots (chain
+    padding, cross-query duplicates) cost neither a grid step nor a DMA in
+    the streaming kernels."""
     q = queries.shape[0]
     mc = min(chain_budget or cfg.max_chain, cfg.max_chain)
-    probe_idx, _ = coarse_probe(state, queries, nprobe)  # [Q, NP]
-    union = jnp.unique(
-        probe_idx.reshape(-1), size=q * nprobe, fill_value=NULL
-    )  # [CU] sorted, NULL-padded
-    matches = probe_idx[:, :, None] == union[None, None, :]  # [Q, NP, CU]
-    member = matches.any(axis=1)  # [Q, CU]
-    blocks = state.cluster_blocks[jnp.maximum(union, 0), :mc]  # [CU, MC]
-    blocks = jnp.where((union != NULL)[:, None], blocks, NULL)
-    return UnionCandidates(blocks.reshape(-1), member, mc, probe_idx, matches)
-
-
-def _probe_slot_index(uc: UnionCandidates) -> jax.Array:
-    """[Q, CB] probe-slot index for the PQ fused kernel: the position of each
-    candidate's cluster inside the query's probe list (selects the per-probe
-    residual LUT row), or -1 when the query did not probe that cluster.
-    NULL union padding matches no probe and therefore comes back -1."""
-    slot = jnp.argmax(uc.matches, axis=1).astype(jnp.int32)  # [Q, CU]
-    pslot = jnp.where(uc.member, slot, -1)
-    return jnp.repeat(pslot, uc.mc, axis=1)  # [Q, CB]
+    probe_idx, _ = _coarse_dispatch(state, queries, nprobe, scan_impl)
+    blocks = state.cluster_blocks[:, :mc][probe_idx].reshape(-1)  # [Q*NP*mc]
+    # NULLs sort to the back via a +inf-like key; the first occurrence of
+    # each block id is scattered to its rank among the uniques
+    sentinel = jnp.int32(2**31 - 1)
+    srt = jnp.sort(jnp.where(blocks == NULL, sentinel, blocks))
+    keep = (srt != sentinel) & jnp.concatenate(
+        [jnp.ones((1,), bool), srt[1:] != srt[:-1]]
+    )
+    cap = min(blocks.shape[0], cfg.n_blocks)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    flat = (
+        jnp.full((cap,), NULL, jnp.int32)
+        .at[jnp.where(keep, pos, cap)]
+        .set(jnp.where(keep, srt, NULL), mode="drop")
+    )
+    owners = jnp.where(
+        flat == NULL, NULL, state.block_owner[jnp.maximum(flat, 0)]
+    )
+    return UnionCandidates(flat, owners, probe_idx)
 
 
 def search_union(
@@ -281,9 +319,14 @@ def search_union(
             "rerank is a fused-path epilogue; use union_fused[_scan]"
         )
     q = queries.shape[0]
-    flat_blocks, member, mc, _, _ = _union_candidates(
-        cfg, state, queries, nprobe, chain_budget
+    # compacted prologue: dead (NULL / duplicate) slots are gone, so the
+    # scan below only ever scores live blocks (they used to be scored
+    # against clamped block 0 and masked)
+    uc = _union_candidates(
+        cfg, state, queries, nprobe, chain_budget,
+        "pallas" if scan_impl == "pallas" else "jnp",
     )
+    flat_blocks = uc.flat_blocks
 
     if scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_scan
@@ -296,7 +339,9 @@ def search_union(
     # scores [CB, Q, T] -> mask holes, non-membership, empty slots
     ids = state.pool_ids[jnp.maximum(flat_blocks, 0)]  # [CB, T]
     slot_ok = (flat_blocks != NULL)[:, None] & (ids != NULL)  # [CB, T]
-    member_b = jnp.repeat(member, mc, axis=1)  # [Q, CB]
+    member_b = (
+        uc.probe_idx[:, :, None] == uc.owners[None, None, :]
+    ).any(axis=1)  # [Q, CB] (an XLA compare — fine outside the kernels)
     ok = slot_ok[None, :, :] & member_b[:, :, None]  # [Q, CB, T]
     sq = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), INF)
     flat_scores = sq.reshape(q, -1)
@@ -322,22 +367,6 @@ def default_kprime(k: int) -> int:
     return max(128, -(-k // 128) * 128)
 
 
-def _block_cluster_map(state: IVFState) -> jax.Array:
-    """[P] owning cluster of each live block, by inverting the block table
-    (residual payloads reconstruct as ``centroid[owner] + dequant(code)``)."""
-    p = state.pool_ids.shape[0]
-    n, mc = state.cluster_blocks.shape
-    cb = state.cluster_blocks
-    owners = jnp.broadcast_to(
-        jnp.arange(n, dtype=jnp.int32)[:, None], (n, mc)
-    )
-    return (
-        jnp.zeros((p,), jnp.int32)
-        .at[jnp.where(cb == NULL, p, cb)]
-        .set(owners, mode="drop")
-    )
-
-
 def _rerank_dispatch(queries, rows, scales, loc, scan_impl):
     if scan_impl == "pallas":
         from repro.kernels.ops import rerank_topk
@@ -360,8 +389,10 @@ def _rerank_flat(cfg, state, queries, loc, scan_impl):
     scales = jnp.ones(loc.shape, jnp.float32)
     if cfg.has_scales:
         svs = state.pool_scales.reshape(-1)[safe]
-        cent = state.centroids[_block_cluster_map(state)[safe // t]]
-        rows = cent + rows.astype(jnp.float32) * svs[..., None]
+        # block_owner is maintained incrementally (free blocks own NULL —
+        # clamp for the gather; invalid locations are masked by loc == -1)
+        owner = jnp.maximum(state.block_owner[safe // t], 0)
+        rows = state.centroids[owner] + rows.astype(jnp.float32) * svs[..., None]
     return _rerank_dispatch(queries, rows, scales, loc, scan_impl)
 
 
@@ -374,7 +405,7 @@ def _rerank_pq(cfg, state, pq, queries, loc, scan_impl):
     p, t = state.pool_ids.shape
     safe = jnp.clip(loc, 0)
     codes = state.pool_payload.reshape(p * t, -1)[safe]  # [Q, K', M]
-    cent = state.centroids[_block_cluster_map(state)[safe // t]]
+    cent = state.centroids[jnp.maximum(state.block_owner[safe // t], 0)]
     recon = cent + pqmod.decode(pq, codes)
     ones = jnp.ones(loc.shape, jnp.float32)
     return _rerank_dispatch(queries, recon, ones, loc, scan_impl)
@@ -399,111 +430,95 @@ def search_union_fused(
             "union_fused on a PQ payload needs the trained PQParams "
             "(pass pq=index.pq / via make_search_fn)"
         )
-    uc = _union_candidates(cfg, state, queries, nprobe, chain_budget)
-    flat_blocks = uc.flat_blocks
-    member_b = jnp.repeat(uc.member, uc.mc, axis=1)  # [Q, CB]
-    cand_ok = member_b & (flat_blocks != NULL)[None, :]
-    # Candidate compaction: the union block table is NULL-padded (every
-    # probed cluster is padded to the chain budget, and the union itself is
-    # padded to Q*nprobe slots) and each dead slot would cost a full grid
-    # step / DMA in the streaming kernel.  Each live block appears at most
-    # once (chains are disjoint), so the live count is statically bounded by
-    # the pool size P; CB itself is Q*nprobe*budget with the budget taken at
-    # dispatch time, so the cap follows live chain growth.  Stable-sort dead
-    # slots to the back and truncate.
-    cb = flat_blocks.shape[0]
-    cap = min(cb, state.pool_payload.shape[0])
-    perm = None
-    if cap < cb:
-        perm = jnp.argsort(flat_blocks == NULL, stable=True)[:cap]
-        flat_blocks = flat_blocks[perm]
-        cand_ok = cand_ok[:, perm]
+    # Fused routing prologue: the candidate list arrives deduped +
+    # compacted (cap = min(Q*nprobe*budget, P) — every live block at most
+    # once, dead slots truncated), and the only per-query routing operands
+    # the kernels receive are the [Q, NP] probe list (VMEM-resident) and
+    # the [CB] candidate owners (scalar-prefetched): membership and the
+    # residual probe slot are derived on-chip.  No [Q, CB] cand_ok/pslot,
+    # no [Q, N_clusters] coarse matrix.
+    uc = _union_candidates(
+        cfg, state, queries, nprobe, chain_budget, scan_impl
+    )
+    flat_blocks, owners, probe_idx = uc.flat_blocks, uc.owners, uc.probe_idx
     kp = kprime or default_kprime(k)
     assert kp >= k, (kp, k)
-    if cfg.payload == "pq" or cfg.has_scales:
-        # residual payloads (PQ codes, int8 residual codes): each candidate
-        # block selects the query's per-probe residual data through the
-        # probe-slot index built in the union prologue
-        pslot = _probe_slot_index(uc)  # [Q, CB]
-        if perm is not None:
-            pslot = pslot[:, perm]
-        pslot = jnp.where(cand_ok, pslot, -1)
     if cfg.payload == "pq":
         from repro.core import pq as pqmod
 
         # per-(query, probe) residual ADC tables
         lut = pqmod.probe_residual_luts(
-            pq, state.centroids, queries, uc.probe_idx
+            pq, state.centroids, queries, probe_idx
         )  # [Q, NP, M, KSUB]
         if scan_impl == "pallas":
             from repro.kernels.ops import ivf_pq_block_topk
 
             d, i = ivf_pq_block_topk(
-                lut, state.pool_payload, flat_blocks, state.pool_ids,
-                pslot, kprime=kp,
+                lut, state.pool_payload, flat_blocks, owners,
+                state.pool_ids, probe_idx, kprime=kp,
             )
         elif scan_impl == "scan":
             from repro.kernels.ivf_scan import ivf_pq_block_topk_scan
 
             d, i = ivf_pq_block_topk_scan(
-                lut, state.pool_payload, flat_blocks, state.pool_ids,
-                pslot, kprime=kp,
+                lut, state.pool_payload, flat_blocks, owners,
+                state.pool_ids, probe_idx, kprime=kp,
             )
         else:
             from repro.kernels.ref import ivf_pq_block_topk_ref
 
             d, i = ivf_pq_block_topk_ref(
-                lut, state.pool_payload, flat_blocks, state.pool_ids,
-                pslot, kprime=kp,
+                lut, state.pool_payload, flat_blocks, owners,
+                state.pool_ids, probe_idx, kprime=kp,
             )
     elif cfg.has_scales:
         # int8 residual payload: quantize the per-probe query residuals
         # once, then the integer-MXU variant scores codes against codes
         from repro.kernels.ivf_scan import quantize_queries
 
-        qres = queries[:, None, :] - state.centroids[uc.probe_idx]
+        qres = queries[:, None, :] - state.centroids[probe_idx]
         q_codes, q_meta = quantize_queries(qres)  # [Q, NP, D], [Q, NP, 2]
         if scan_impl == "pallas":
             from repro.kernels.ops import ivf_block_topk_int8
 
             d, i = ivf_block_topk_int8(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, state.pool_ids, pslot, kprime=kp,
+                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
             )
         elif scan_impl == "scan":
             from repro.kernels.ivf_scan import ivf_block_topk_int8_scan
 
             d, i = ivf_block_topk_int8_scan(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, state.pool_ids, pslot, kprime=kp,
+                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
             )
         else:
             from repro.kernels.ref import ivf_block_topk_int8_ref
 
             d, i = ivf_block_topk_int8_ref(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, state.pool_ids, pslot, kprime=kp,
+                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
             )
     elif scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_topk
 
         d, i = ivf_block_topk(
-            queries, state.pool_payload, flat_blocks, state.pool_ids,
-            cand_ok, kprime=kp,
+            queries, state.pool_payload, flat_blocks, owners,
+            state.pool_ids, probe_idx, kprime=kp,
         )
     elif scan_impl == "scan":
         from repro.kernels.ivf_scan import ivf_block_topk_scan
 
         d, i = ivf_block_topk_scan(
-            queries, state.pool_payload, flat_blocks, state.pool_ids,
-            cand_ok, kprime=kp,
+            queries, state.pool_payload, flat_blocks, owners,
+            state.pool_ids, probe_idx, kprime=kp,
         )
     else:
         from repro.kernels.ref import ivf_block_topk_ref
 
         d, i = ivf_block_topk_ref(
-            queries, state.pool_payload, flat_blocks, state.pool_ids,
-            cand_ok, kprime=kp,
+            queries, state.pool_payload, flat_blocks, owners,
+            state.pool_ids, probe_idx, kprime=kp,
         )
     # the fused kernels emit packed pool locations (block*T + offset,
     # derived in-kernel from the prefetched block id at zero HBM cost)

@@ -29,6 +29,14 @@ dequant/distance/sort) that buys the recall back.
 
 Kernels living here:
 
+* ``coarse_topk``      — **streaming coarse probe** (the routing prologue):
+  centroid tiles stream through VMEM while a per-query top-``nprobe``
+  accumulator (same streaming-selection machinery as ``ivf_block_topk``)
+  keeps the running nearest centroids on-chip, so the ``[Q, N_clusters]``
+  coarse distance matrix never exists in HBM — only ``[Q, NP]`` probe
+  ids/distances are written back.  Ties break by centroid id, making the
+  result bit-exact with ``coarse_probe``'s ``top_k`` (which also prefers
+  the lower index on ties).
 * ``ivf_block_scan``   — scores only: emits the full ``[C, Q, T]`` tensor to
   HBM; the caller masks and runs one monolithic ``top_k`` over ``C*T``.
 * ``ivf_block_topk``   — **fused streaming selection**: a per-query running
@@ -46,10 +54,21 @@ Kernels living here:
   pool (IVFPQ, paper §3.3): per grid step one ``[T, M]`` uint8 code block is
   DMA'd and scored by asymmetric distance against VMEM-resident per-(query,
   probe) LUTs, using the one-hot MXU contraction from ``pq_adc.py`` instead
-  of a per-lane byte gather.  Residuals are per-probe, so each query selects
-  its LUT row through a ``[Q, C]`` probe-slot index built in the union
-  prologue (``core/search.py``); slot -1 marks an invalid (non-member /
-  hole) candidate and is fused into the epilogue mask.
+  of a per-lane byte gather.
+
+Candidate routing is **derived on-chip** (this is what keeps the per-query
+HBM routing traffic at O(NP) instead of O(CB)): alongside the candidate
+block ids, the kernels scalar-prefetch each block's **owning cluster**
+(``IVFState.block_owner``, maintained incrementally by insert/rearrange)
+and compare it against the query tile's ``[Q_t, NP]`` probed-cluster list
+resident in VMEM.  A query is a member of the candidate iff its probe list
+contains the owner; for the residual families (int8, PQ) the position of
+the match *is* the probe slot that selects the query's per-probe residual
+codes / ADC LUT — the dense ``[Q, CB]`` ``cand_ok``/``pslot`` operands of
+the older interface no longer exist.  Probe lists hold distinct cluster
+ids (a top-``nprobe`` cannot repeat), so at most one slot matches.  Owner
+-1 (NULL candidate padding, free blocks) matches no probe and is masked in
+the fused epilogue together with empty (-1) id slots.
 """
 
 from __future__ import annotations
@@ -110,7 +129,13 @@ def ivf_block_scan(
 
 
 # ---------------------------------------------------------------------------
-# Fused streaming top-k selection (no [C, Q, T] writeback)
+# Streaming coarse probe (fused routing prologue): the [Q, N_clusters]
+# distance matrix never exists in HBM — centroid tiles stream through VMEM
+# and a per-query top-nprobe accumulator keeps the running nearest
+# centroids on-chip, exactly like ivf_block_topk keeps its top-K'.  Ties
+# break by centroid id (sort num_keys=2), which matches lax.top_k's
+# prefer-the-lower-index contract, so results are bit-exact with
+# coarse_probe.
 # ---------------------------------------------------------------------------
 
 
@@ -118,10 +143,171 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def _coarse_kernel(
+    n: int,  # static: real centroid count (tail of the last tile is padding)
+    q_ref,  # [Q_t, D] f32 queries
+    c_ref,  # [TC, D] f32 current centroid tile
+    out_d_ref,  # [Q_t, NPP] distances asc
+    out_i_ref,  # [Q_t, NPP] i32 centroid ids
+    acc_d_ref,  # VMEM scratch [Q_t, NPP]
+    acc_i_ref,  # VMEM scratch [Q_t, NPP] i32
+):
+    """Grid (qi, ci): score centroid tile ci, merge into the accumulator."""
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_d_ref[:] = jnp.full(acc_d_ref.shape, jnp.inf, jnp.float32)
+        acc_i_ref[:] = jnp.full(acc_i_ref.shape, jnp.int32(2**31 - 1),
+                                jnp.int32)
+
+    q = q_ref[:]  # [Q_t, D]
+    cents = c_ref[:]  # [TC, D]
+    tc = cents.shape[0]
+    # same ||q||^2 + ||c||^2 - 2qc formulation as coarse_probe's l2_sq —
+    # per-element the contraction over D is identical, so distances match
+    # bit for bit
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q_t, 1]
+    cn = jnp.sum(cents * cents, axis=-1)[None, :]  # [1, TC]
+    dots = jax.lax.dot_general(
+        q, cents, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q_t, TC]
+    d = qn + cn - 2.0 * dots
+    gid = ci * tc + jax.lax.broadcasted_iota(jnp.int32, (1, tc), 1)
+    valid = gid < n  # [1, TC] padding centroids past N
+    d = jnp.where(valid, d, jnp.inf)
+    cid = jnp.where(
+        valid, jnp.broadcast_to(gid, d.shape), jnp.int32(2**31 - 1)
+    )
+    # merge via co-sorted concat keyed on (distance, centroid id): the id
+    # tiebreak reproduces top_k's lower-index-wins ordering exactly
+    cat_d = jnp.concatenate([acc_d_ref[:], d], axis=1)
+    cat_i = jnp.concatenate([acc_i_ref[:], cid], axis=1)
+    srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+    npp = acc_d_ref.shape[1]
+    acc_d_ref[:] = srt_d[:, :npp]
+    acc_i_ref[:] = srt_i[:, :npp]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        out_d_ref[:] = acc_d_ref[:]
+        out_i_ref[:] = acc_i_ref[:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nprobe", "q_tile", "c_tile", "interpret")
+)
+def coarse_topk(
+    queries: jax.Array,  # [Q, D] f32
+    centroids: jax.Array,  # [N, D] f32
+    *,
+    nprobe: int,
+    q_tile: int = 128,
+    c_tile: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, NP] i32 ids, [Q, NP] dists asc)
+    """Streaming top-``nprobe`` nearest centroids: one HBM read of each
+    ``[TC, D]`` centroid tile, ``[Q, NP]`` writeback — the ``[Q, N]``
+    coarse matrix never touches HBM.  Bit-exact with ``coarse_probe``
+    (ties included: lower centroid id wins).  Returns ``(ids, dists)`` in
+    ``coarse_probe``'s order."""
+    q, d = queries.shape
+    n, d2 = centroids.shape
+    assert d == d2, (d, d2)
+    assert 0 < nprobe <= n, (nprobe, n)
+    qt = min(q_tile, _round_up(q, 8))
+    qp = _round_up(q, qt)
+    tc = min(c_tile, _round_up(n, 8))
+    npad = _round_up(n, tc)
+    npp = _round_up(nprobe, 128)  # lane-aligned accumulator width
+    queries = jnp.pad(queries, ((0, qp - q), (0, 0)))
+    centroids = jnp.pad(centroids, ((0, npad - n), (0, 0)))
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_coarse_kernel, n),
+        grid=(qp // qt, npad // tc),
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda qi, ci: (qi, 0)),
+            pl.BlockSpec((tc, d), lambda qi, ci: (ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qt, npp), lambda qi, ci: (qi, 0)),
+            pl.BlockSpec((qt, npp), lambda qi, ci: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp, npp), jnp.float32),
+            jax.ShapeDtypeStruct((qp, npp), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qt, npp), jnp.float32),
+            pltpu.VMEM((qt, npp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, centroids)
+    return out_i[:q, :nprobe], out_d[:q, :nprobe]
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "chunk"))
+def coarse_topk_scan(
+    queries: jax.Array,  # [Q, D] f32
+    centroids: jax.Array,  # [N, D] f32
+    *,
+    nprobe: int,
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, NP] i32 ids, [Q, NP] dists asc)
+    """Chunked ``lax.scan`` fallback for the streaming coarse probe: same
+    top-``nprobe`` semantics and bit-exact results, peak intermediate
+    ``[Q, chunk]`` instead of ``[Q, N]``."""
+    q, d = queries.shape
+    n = centroids.shape[0]
+    assert 0 < nprobe <= n, (nprobe, n)
+    npad = _round_up(n, chunk)
+    nch = npad // chunk
+    cents = jnp.pad(centroids, ((0, npad - n), (0, 0))).reshape(
+        nch, chunk, d
+    )
+    gids = jnp.arange(npad, dtype=jnp.int32).reshape(nch, chunk)
+    qn = jnp.sum(queries * queries, axis=-1, keepdims=True)  # [Q, 1]
+
+    def step(carry, xs):
+        acc_d, acc_i = carry
+        ct, gid = xs  # [chunk, D], [chunk]
+        cn = jnp.sum(ct * ct, axis=-1)[None, :]  # [1, chunk]
+        dots = jax.lax.dot_general(
+            queries, ct, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        dd = qn + cn - 2.0 * dots  # [Q, chunk]
+        valid = (gid < n)[None, :]
+        dd = jnp.where(valid, dd, jnp.inf)
+        cid = jnp.where(
+            valid, jnp.broadcast_to(gid[None, :], dd.shape),
+            jnp.int32(2**31 - 1),
+        )
+        cat_d = jnp.concatenate([acc_d, dd], axis=1)
+        cat_i = jnp.concatenate([acc_i, cid], axis=1)
+        srt_d, srt_i = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=2)
+        return (srt_d[:, :nprobe], srt_i[:, :nprobe]), None
+
+    init = (
+        jnp.full((q, nprobe), jnp.inf, jnp.float32),
+        jnp.full((q, nprobe), jnp.int32(2**31 - 1), jnp.int32),
+    )
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (cents, gids))
+    return acc_i, acc_d
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming top-k selection (no [C, Q, T] writeback)
+# ---------------------------------------------------------------------------
+
+
 def _topk_kernel(
     ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    own_ref,  # [C] i32 scalar prefetch (owning cluster, -1 = NULL slot)
     q_ref,  # [Q_t, D]
-    ok_ref,  # [Q_t, 1] i32 candidate validity (membership & non-hole)
+    probe_ref,  # [Q_t, NP] i32 probed cluster ids of the query tile
     pool_ref,  # [T, D] current candidate block
     pid_ref,  # [1, T] i32 vector ids of the block
     out_d_ref,  # [Q_t, K']
@@ -150,9 +336,15 @@ def _topk_kernel(
         preferred_element_type=jnp.float32,
     )  # [Q_t, T] on the MXU
     scores = qn + vn - 2.0 * dots
+    # in-kernel membership: a query owns this candidate iff its VMEM probe
+    # list contains the block's prefetched owner (owner -1 = NULL padding
+    # matches nothing); the [Q, C] cand_ok operand no longer exists
+    member = jnp.any(
+        probe_ref[:] == own_ref[ci], axis=1, keepdims=True
+    )  # [Q_t, 1]
     # fused epilogue: invalid slots (hole block, non-member query, empty
     # NULL-id slot) never leave the kernel
-    ok = (ok_ref[:] != 0) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
     scores = jnp.where(ok, scores, jnp.inf)
     # candidates carry their packed pool location (block*T + offset),
     # derived from the prefetched block id at zero HBM cost — it decodes
@@ -184,16 +376,20 @@ def _topk_kernel(
 def ivf_block_topk(
     queries: jax.Array,  # [Q, D] f32
     pool: jax.Array,  # [P, T, D] f32
-    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via cand_ok)
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
-    cand_ok: jax.Array,  # [Q, C] bool/i32 per-(query, candidate) validity
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     q_tile: int = 128,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Streaming top-``kprime``: one HBM read per candidate block, ``[Q, K']``
-    writeback.  Rows of the output are sorted ascending; the id channel
+    writeback.  Membership is derived on-chip — each candidate's prefetched
+    owner is compared against the VMEM-resident probe list, so the only
+    per-query routing operand is the ``[Q, NP]`` probe list.  Rows of the
+    output are sorted ascending; the id channel
     carries packed pool locations (``block*T + offset``; resolve to global
     ids via ``pool_ids.reshape(-1)[loc]``); masked-out slots carry
     ``inf`` / ``-1``.
@@ -210,21 +406,28 @@ def ivf_block_topk(
     qt = min(q_tile, _round_up(q, 8))
     qp = _round_up(q, qt)
     queries = jnp.pad(queries, ((0, qp - q), (0, 0)))
-    cand_ok = jnp.pad(cand_ok.astype(jnp.int32), ((0, qp - q), (0, 0)))
+    probe_idx = jnp.pad(
+        probe_idx.astype(jnp.int32), ((0, qp - q), (0, 0)),
+        constant_values=-2,  # padding rows match nothing (owners may be -1)
+    )
     safe_ids = jnp.maximum(block_ids, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(qp // qt, c),
         in_specs=[
-            pl.BlockSpec((qt, d), lambda qi, ci, ids: (qi, 0)),
-            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
-            pl.BlockSpec((None, t, d), lambda qi, ci, ids: (ids[ci], 0, 0)),
-            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+            pl.BlockSpec((qt, d), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec(
+                (qt, probe_idx.shape[1]), lambda qi, ci, ids, own: (qi, 0)
+            ),
+            pl.BlockSpec(
+                (None, t, d), lambda qi, ci, ids, own: (ids[ci], 0, 0)
+            ),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((qt, kprime), jnp.float32),
@@ -239,7 +442,8 @@ def ivf_block_topk(
             jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
         ],
         interpret=interpret,
-    )(safe_ids, queries, cand_ok, pool, pool_ids)
+    )(safe_ids, block_owners.astype(jnp.int32), queries, probe_idx,
+      pool, pool_ids)
     return out_d[:q], out_i[:q]
 
 
@@ -248,29 +452,38 @@ def ivf_block_topk_scan(
     queries: jax.Array,  # [Q, D] f32
     pool: jax.Array,  # [P, T, D] f32
     block_ids: jax.Array,  # [C] i32
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
-    cand_ok: jax.Array,  # [Q, C] bool/i32
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     chunk: int = 64,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked ``lax.scan`` fallback for the fused path (CPU / interpret
     mode): same streaming top-``kprime`` semantics, peak intermediate
-    ``[Q, chunk*T]`` instead of ``[C, Q, T]``."""
+    ``[Q, chunk*T]`` instead of ``[C, Q, T]`` — membership is derived per
+    chunk from the candidate owners ([Q, NP, chunk] compare), never as a
+    dense [Q, C] operand."""
     q, d = queries.shape
     p, t, _ = pool.shape
     c = block_ids.shape[0]
     cp = _round_up(c, chunk)
     nch = cp // chunk
     ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
-    ok_p = jnp.pad(cand_ok.astype(bool), ((0, 0), (0, cp - c)))
+    own_p = jnp.pad(
+        block_owners.astype(jnp.int32), (0, cp - c), constant_values=-1
+    )
     safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
-    ok_ch = ok_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+    own_ch = own_p.reshape(nch, chunk)
+    probe = probe_idx.astype(jnp.int32)
     qn = jnp.sum(queries * queries, axis=-1)[:, None, None]  # [Q, 1, 1]
 
     def step(carry, xs):
         acc_d, acc_i = carry
-        sc, ok = xs  # [chunk], [Q, chunk]
+        sc, own = xs  # [chunk], [chunk]
+        ok = jnp.any(
+            probe[:, :, None] == own[None, None, :], axis=1
+        )  # [Q, chunk]
         blocks = pool[sc]  # [chunk, T, D] payload dtype (f32 | bf16)
         vids = pool_ids[sc]  # [chunk, T]
         bf = blocks.astype(jnp.float32)
@@ -293,7 +506,7 @@ def ivf_block_topk_scan(
         jnp.full((q, kprime), jnp.inf, jnp.float32),
         jnp.full((q, kprime), -1, jnp.int32),
     )
-    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ok_ch))
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, own_ch))
     return acc_d, acc_i
 
 
@@ -350,9 +563,10 @@ def _int8_scores(qn_b, vterm_b, coef_b, dotf):
 
 def _topk_int8_kernel(
     ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    own_ref,  # [C] i32 scalar prefetch (owning cluster, -1 = NULL slot)
     qc_ref,  # [Q_t, NP, D] i8 per-probe quantized query residuals
     qmeta_ref,  # [Q_t, NP, 2] f32 (scale, reconstructed norm) per probe
-    pslot_ref,  # [Q_t, 1] i32 probe slot of this candidate (-1 = invalid)
+    probe_ref,  # [Q_t, NP] i32 probed cluster ids of the query tile
     pool_ref,  # [T, D] i8 current candidate code block
     scale_ref,  # [1, T] f32 per-vector dequant scales of the block
     pid_ref,  # [1, T] i32 vector ids of the block
@@ -372,13 +586,15 @@ def _topk_int8_kernel(
 
     qc = qc_ref[:]  # [Q_t, NP, D] i8
     qmeta = qmeta_ref[:]  # [Q_t, NP, 2]
-    pslot = pslot_ref[:]  # [Q_t, 1]
     qt, np_, _ = qc.shape
-    # Residuals are per-probe: select each query's quantized residual for
-    # this candidate's probe slot via a one-hot reduction (exact in int32;
-    # slot -1 selects nothing and is masked below).
-    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (qt, np_), 1)
-    onehot = (pslot == slot_iota).astype(jnp.int32)  # [Q_t, NP]
+    # In-kernel membership + probe-slot derivation: residuals are
+    # per-probe, and the probe slot of this candidate is the position of
+    # its prefetched owner in the query's probe list (distinct ids — at
+    # most one match).  The match one-hot selects the quantized residual
+    # via an exact int32 reduction; no match (owner -1 / non-member) means
+    # the row is masked below.  The [Q, C] pslot operand no longer exists.
+    onehot = (probe_ref[:] == own_ref[ci]).astype(jnp.int32)  # [Q_t, NP]
+    member = jnp.sum(onehot, axis=1, keepdims=True) > 0  # [Q_t, 1]
     qsel = jnp.sum(
         onehot[:, :, None] * qc.astype(jnp.int32), axis=1
     ).astype(jnp.int8)  # [Q_t, D]
@@ -397,7 +613,7 @@ def _topk_int8_kernel(
     vterm = (sv * sv) * cn  # [1, T]
     coef = sq * sv  # [Q_t, T]
     scores = _int8_scores(qn, vterm, coef, dots.astype(jnp.float32))
-    ok = (pslot != -1) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
     scores = jnp.where(ok, scores, jnp.inf)
     t = scores.shape[1]
     loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
@@ -425,9 +641,10 @@ def ivf_block_topk_int8(
     q_meta: jax.Array,  # [Q, NP, 2] f32 (scale, reconstructed norm)
     pool: jax.Array,  # [P, T, D] i8 residual codes
     pool_scales: jax.Array,  # [P, T] f32 per-vector dequant scales
-    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via pslot)
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
-    pslot: jax.Array,  # [Q, C] i32 probe slot per (query, candidate); -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     q_tile: int = 128,
@@ -436,37 +653,42 @@ def ivf_block_topk_int8(
     """Streaming top-``kprime`` over an int8 residual-quantized pool: one
     HBM read of each ``[T, D]`` int8 block + its ``[T]`` scale row, integer
     MXU scoring against the per-probe query residual codes, ``[Q, K']``
-    writeback.  Rows come back sorted ascending by (distance, location);
-    invalid
-    slots carry ``inf`` / id ``-1``."""
+    writeback.  Membership and the probe slot selecting each query's
+    residual codes are derived on-chip from the prefetched block owner and
+    the VMEM probe list.  Rows come back sorted ascending by (distance,
+    location); invalid slots carry ``inf`` / id ``-1``."""
     q, np_, d = q_codes.shape
     p, t, d2 = pool.shape
     assert d == d2, (d, d2)
     assert pool.dtype == jnp.int8, pool.dtype
+    assert probe_idx.shape == (q, np_), (probe_idx.shape, (q, np_))
     c = block_ids.shape[0]
     qt = min(q_tile, _round_up(q, 8))
     qp = _round_up(q, qt)
     q_codes = jnp.pad(q_codes, ((0, qp - q), (0, 0), (0, 0)))
     q_meta = jnp.pad(q_meta, ((0, qp - q), (0, 0), (0, 0)))
-    pslot = jnp.pad(
-        pslot.astype(jnp.int32), ((0, qp - q), (0, 0)), constant_values=-1
+    probe_idx = jnp.pad(
+        probe_idx.astype(jnp.int32), ((0, qp - q), (0, 0)),
+        constant_values=-2,  # padding rows match nothing (owners may be -1)
     )
     safe_ids = jnp.maximum(block_ids, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(qp // qt, c),
         in_specs=[
-            pl.BlockSpec((qt, np_, d), lambda qi, ci, ids: (qi, 0, 0)),
-            pl.BlockSpec((qt, np_, 2), lambda qi, ci, ids: (qi, 0, 0)),
-            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
-            pl.BlockSpec((None, t, d), lambda qi, ci, ids: (ids[ci], 0, 0)),
-            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
-            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+            pl.BlockSpec((qt, np_, d), lambda qi, ci, ids, own: (qi, 0, 0)),
+            pl.BlockSpec((qt, np_, 2), lambda qi, ci, ids, own: (qi, 0, 0)),
+            pl.BlockSpec((qt, np_), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec(
+                (None, t, d), lambda qi, ci, ids, own: (ids[ci], 0, 0)
+            ),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((qt, kprime), jnp.float32),
@@ -481,7 +703,8 @@ def ivf_block_topk_int8(
             jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
         ],
         interpret=interpret,
-    )(safe_ids, q_codes, q_meta, pslot, pool, pool_scales, pool_ids)
+    )(safe_ids, block_owners.astype(jnp.int32), q_codes, q_meta, probe_idx,
+      pool, pool_scales, pool_ids)
     return out_d[:q], out_i[:q]
 
 
@@ -492,30 +715,39 @@ def ivf_block_topk_int8_scan(
     pool: jax.Array,  # [P, T, D] i8
     pool_scales: jax.Array,  # [P, T] f32
     block_ids: jax.Array,  # [C] i32
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
-    pslot: jax.Array,  # [Q, C] i32, -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     chunk: int = 64,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked ``lax.scan`` fallback for the int8 fused path: same streaming
     top-``kprime`` semantics and identical returned ids, peak intermediate
-    ``[Q, chunk*T]`` instead of ``[C, Q, T]``."""
+    ``[Q, chunk*T]`` instead of ``[C, Q, T]`` — the probe slot of each
+    candidate is derived per chunk from its owner, never materialized as a
+    dense [Q, C] operand."""
     q = q_codes.shape[0]
     c = block_ids.shape[0]
     cp = _round_up(c, chunk)
     nch = cp // chunk
     ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
-    ps_p = jnp.pad(
-        pslot.astype(jnp.int32), ((0, 0), (0, cp - c)), constant_values=-1
+    own_p = jnp.pad(
+        block_owners.astype(jnp.int32), (0, cp - c), constant_values=-1
     )
     safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
-    ps_ch = ps_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+    own_ch = own_p.reshape(nch, chunk)
+    probe = probe_idx.astype(jnp.int32)
     qci = q_codes.astype(jnp.int32)
 
     def step(carry, xs):
         acc_d, acc_i = carry
-        sc, ps = xs  # [chunk], [Q, chunk]
+        sc, own = xs  # [chunk], [chunk]
+        match = probe[:, :, None] == own[None, None, :]  # [Q, NP, chunk]
+        ps = jnp.where(
+            match.any(axis=1), jnp.argmax(match, axis=1).astype(jnp.int32),
+            -1,
+        )  # [Q, chunk] probe slot, -1 = non-member / NULL slot
         codes = pool[sc]  # [chunk, T, D] i8
         svs = pool_scales[sc]  # [chunk, T]
         vids = pool_ids[sc]  # [chunk, T]
@@ -549,7 +781,7 @@ def ivf_block_topk_int8_scan(
         jnp.full((q, kprime), jnp.inf, jnp.float32),
         jnp.full((q, kprime), -1, jnp.int32),
     )
-    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ps_ch))
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, own_ch))
     return acc_d, acc_i
 
 
@@ -641,8 +873,9 @@ def rerank_topk(
 
 def _pq_topk_kernel(
     ids_ref,  # [C] i32 scalar prefetch (clamped block ids)
+    own_ref,  # [C] i32 scalar prefetch (owning cluster, -1 = NULL slot)
     lut_ref,  # [Q_t, NP, M, K] per-(query, probe) ADC tables
-    pslot_ref,  # [Q_t, 1] i32 probe slot of this candidate (-1 = invalid)
+    probe_ref,  # [Q_t, NP] i32 probed cluster ids of the query tile
     codes_ref,  # [T, M] uint8 current candidate code block
     pid_ref,  # [1, T] i32 vector ids of the block
     out_d_ref,  # [Q_t, K']
@@ -660,15 +893,16 @@ def _pq_topk_kernel(
         acc_i_ref[:] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
 
     lut = lut_ref[:]  # [Q_t, NP, M, K]
-    pslot = pslot_ref[:]  # [Q_t, 1]
     codes = codes_ref[:].astype(jnp.int32)  # [T, M]
     qt, np_, m, ksub = lut.shape
     t = codes.shape[0]
-    # Residuals are per-probe: select each query's LUT for this candidate's
-    # probe slot via a one-hot contraction (slot -1 matches nothing; the
-    # zeroed LUT row is masked out below anyway).
-    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (qt, np_), 1)
-    sel = (pslot == slot_iota).astype(jnp.float32)  # [Q_t, NP]
+    # In-kernel membership + LUT selection: residuals are per-probe, and
+    # the candidate's LUT row is the probe slot where its prefetched owner
+    # sits in the query's probe list (distinct ids — at most one match; no
+    # match selects a zeroed LUT and is masked below).  The [Q, C] pslot
+    # operand no longer exists.
+    sel = (probe_ref[:] == own_ref[ci]).astype(jnp.float32)  # [Q_t, NP]
+    member = jnp.sum(sel, axis=1, keepdims=True) > 0.0  # [Q_t, 1]
     lut_q = jax.lax.dot_general(
         sel[:, None, :],  # [Q_t, 1, NP]
         lut.reshape(qt, np_, m * ksub),
@@ -688,7 +922,7 @@ def _pq_topk_kernel(
             preferred_element_type=jnp.float32,
         )  # [Q_t, T]
     # fused epilogue: non-member queries, hole blocks, empty NULL-id slots
-    ok = (pslot != -1) & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
     scores = jnp.where(ok, scores, jnp.inf)
     loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
         jnp.int32, (1, t), 1
@@ -713,17 +947,19 @@ def _pq_topk_kernel(
 def ivf_pq_block_topk(
     lut: jax.Array,  # [Q, NP, M, K] f32 per-(query, probe) ADC tables
     pool_codes: jax.Array,  # [P, T, M] uint8 PQ codes
-    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via pslot)
+    block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
-    pslot: jax.Array,  # [Q, C] i32 probe slot per (query, candidate); -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     q_tile: int = 8,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Streaming top-``kprime`` over a PQ-coded pool: one HBM read of each
-    ``[T, M]`` uint8 candidate block, ADC against the VMEM-resident LUT tile,
-    ``[Q, K']`` writeback.  Rows come back sorted ascending by (distance,
+    ``[T, M]`` uint8 candidate block, ADC against the VMEM-resident LUT
+    tile selected on-chip by the candidate's prefetched owner, ``[Q, K']``
+    writeback.  Rows come back sorted ascending by (distance,
     location); invalid slots carry ``inf`` / ``-1``.
 
     The LUT tile is the dominant VMEM resident (``q_tile·nprobe·M·256·4B``,
@@ -731,27 +967,33 @@ def ivf_pq_block_topk(
     q, np_, m, ksub = lut.shape
     p, t, m2 = pool_codes.shape
     assert m == m2, (lut.shape, pool_codes.shape)
+    assert probe_idx.shape == (q, np_), (probe_idx.shape, (q, np_))
     c = block_ids.shape[0]
     qt = min(q_tile, _round_up(q, 8))
     qp = _round_up(q, qt)
     lut = jnp.pad(lut, ((0, qp - q), (0, 0), (0, 0), (0, 0)))
-    pslot = jnp.pad(
-        pslot.astype(jnp.int32), ((0, qp - q), (0, 0)), constant_values=-1
+    probe_idx = jnp.pad(
+        probe_idx.astype(jnp.int32), ((0, qp - q), (0, 0)),
+        constant_values=-2,  # padding rows match nothing (owners may be -1)
     )
     safe_ids = jnp.maximum(block_ids, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(qp // qt, c),
         in_specs=[
-            pl.BlockSpec((qt, np_, m, ksub), lambda qi, ci, ids: (qi, 0, 0, 0)),
-            pl.BlockSpec((qt, 1), lambda qi, ci, ids: (qi, ci)),
-            pl.BlockSpec((None, t, m), lambda qi, ci, ids: (ids[ci], 0, 0)),
-            pl.BlockSpec((1, t), lambda qi, ci, ids: (ids[ci], 0)),
+            pl.BlockSpec(
+                (qt, np_, m, ksub), lambda qi, ci, ids, own: (qi, 0, 0, 0)
+            ),
+            pl.BlockSpec((qt, np_), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec(
+                (None, t, m), lambda qi, ci, ids, own: (ids[ci], 0, 0)
+            ),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
-            pl.BlockSpec((qt, kprime), lambda qi, ci, ids: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
+            pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((qt, kprime), jnp.float32),
@@ -766,7 +1008,8 @@ def ivf_pq_block_topk(
             jax.ShapeDtypeStruct((qp, kprime), jnp.int32),
         ],
         interpret=interpret,
-    )(safe_ids, lut, pslot, pool_codes, pool_ids)
+    )(safe_ids, block_owners.astype(jnp.int32), lut, probe_idx,
+      pool_codes, pool_ids)
     return out_d[:q], out_i[:q]
 
 
@@ -775,30 +1018,38 @@ def ivf_pq_block_topk_scan(
     lut: jax.Array,  # [Q, NP, M, K] f32
     pool_codes: jax.Array,  # [P, T, M] uint8
     block_ids: jax.Array,  # [C] i32
+    block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
-    pslot: jax.Array,  # [Q, C] i32, -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
     chunk: int = 16,
 ) -> tuple[jax.Array, jax.Array]:
     """Chunked ``lax.scan`` fallback for the PQ fused path (CPU / interpret
     mode): same streaming top-``kprime`` semantics, peak intermediate
-    ``[Q, chunk, T, M]`` gathered LUT terms instead of ``[C, Q, T]``."""
+    ``[Q, chunk, T, M]`` gathered LUT terms instead of ``[C, Q, T]`` — the
+    probe slot of each candidate is derived per chunk from its owner."""
     q = lut.shape[0]
     p, t, m = pool_codes.shape
     c = block_ids.shape[0]
     cp = _round_up(c, chunk)
     nch = cp // chunk
     ids_p = jnp.pad(block_ids, (0, cp - c), constant_values=-1)
-    ps_p = jnp.pad(
-        pslot.astype(jnp.int32), ((0, 0), (0, cp - c)), constant_values=-1
+    own_p = jnp.pad(
+        block_owners.astype(jnp.int32), (0, cp - c), constant_values=-1
     )
     safe = jnp.maximum(ids_p, 0).reshape(nch, chunk)
-    ps_ch = ps_p.reshape(q, nch, chunk).transpose(1, 0, 2)  # [nch, Q, chunk]
+    own_ch = own_p.reshape(nch, chunk)
+    probe = probe_idx.astype(jnp.int32)
 
     def step(carry, xs):
         acc_d, acc_i = carry
-        sc, ps = xs  # [chunk], [Q, chunk]
+        sc, own = xs  # [chunk], [chunk]
+        match = probe[:, :, None] == own[None, None, :]  # [Q, NP, chunk]
+        ps = jnp.where(
+            match.any(axis=1), jnp.argmax(match, axis=1).astype(jnp.int32),
+            -1,
+        )  # [Q, chunk] probe slot, -1 = non-member / NULL slot
         codes = pool_codes[sc].astype(jnp.int32)  # [chunk, T, M]
         vids = pool_ids[sc]  # [chunk, T]
         lq = jnp.take_along_axis(
@@ -823,5 +1074,5 @@ def ivf_pq_block_topk_scan(
         jnp.full((q, kprime), jnp.inf, jnp.float32),
         jnp.full((q, kprime), -1, jnp.int32),
     )
-    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, ps_ch))
+    (acc_d, acc_i), _ = jax.lax.scan(step, init, (safe, own_ch))
     return acc_d, acc_i

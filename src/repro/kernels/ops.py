@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.ivf_scan import coarse_topk as _coarse_topk
 from repro.kernels.ivf_scan import ivf_block_scan as _ivf_block_scan
 from repro.kernels.ivf_scan import ivf_block_topk as _ivf_block_topk
 from repro.kernels.ivf_scan import (
@@ -26,29 +27,44 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def coarse_topk(queries, centroids, *, nprobe, q_tile: int = 128,
+                c_tile: int = 128):
+    """Streaming coarse probe: [Q,D] x [N,D] -> ([Q,NP] ids, [Q,NP] dists)
+    without materializing the [Q,N] distance matrix (bit-exact with
+    ``coarse_probe``, ties included)."""
+    return _coarse_topk(
+        queries, centroids, nprobe=nprobe, q_tile=q_tile, c_tile=c_tile,
+        interpret=_interpret(),
+    )
+
+
 def ivf_block_scan(queries, pool, block_ids):
     """[Q,D] x [P,T,D] x [C] -> [C,Q,T] squared-L2 scores."""
     return _ivf_block_scan(queries, pool, block_ids, interpret=_interpret())
 
 
-def ivf_block_topk(queries, pool, block_ids, pool_ids, cand_ok, *, kprime,
-                   q_tile: int = 128):
+def ivf_block_topk(queries, pool, block_ids, block_owners, pool_ids,
+                   probe_idx, *, kprime, q_tile: int = 128):
     """Fused streaming selection: [Q,D] x [P,T,D] x [C] -> ([Q,K'], [Q,K'])
-    (ascending dists, vector ids) without materializing [C,Q,T]."""
+    (ascending dists, vector ids) without materializing [C,Q,T];
+    membership is derived in-kernel from each candidate's owner and the
+    [Q,NP] probe list."""
     return _ivf_block_topk(
-        queries, pool, block_ids, pool_ids, cand_ok,
+        queries, pool, block_ids, block_owners, pool_ids, probe_idx,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 
 
 def ivf_block_topk_int8(q_codes, q_meta, pool, pool_scales, block_ids,
-                        pool_ids, pslot, *, kprime, q_tile: int = 128):
+                        block_owners, pool_ids, probe_idx, *, kprime,
+                        q_tile: int = 128):
     """int8 fused streaming selection: [Q,NP,D] i8 per-probe query residual
     codes contracted against [P,T,D] i8 residual codes on the integer MXU
     -> ([Q,K'], [Q,K']) without materializing [C,Q,T] or dequantizing any
-    block."""
+    block; the probe slot is derived in-kernel from the candidate owner."""
     return _ivf_block_topk_int8(
-        q_codes, q_meta, pool, pool_scales, block_ids, pool_ids, pslot,
+        q_codes, q_meta, pool, pool_scales, block_ids, block_owners,
+        pool_ids, probe_idx,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 
@@ -61,12 +77,13 @@ def rerank_topk(queries, rows, scales, loc, *, q_tile: int = 8):
     )
 
 
-def ivf_pq_block_topk(lut, pool_codes, block_ids, pool_ids, pslot, *,
-                      kprime, q_tile: int = 8):
+def ivf_pq_block_topk(lut, pool_codes, block_ids, block_owners, pool_ids,
+                      probe_idx, *, kprime, q_tile: int = 8):
     """PQ-ADC fused streaming selection: [Q,NP,M,K] LUTs x [P,T,M] u8 codes
-    -> ([Q,K'], [Q,K']) without materializing [C,Q,T]."""
+    -> ([Q,K'], [Q,K']) without materializing [C,Q,T]; the LUT-selecting
+    probe slot is derived in-kernel from the candidate owner."""
     return _ivf_pq_block_topk(
-        lut, pool_codes, block_ids, pool_ids, pslot,
+        lut, pool_codes, block_ids, block_owners, pool_ids, probe_idx,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 

@@ -10,6 +10,39 @@ import jax
 import jax.numpy as jnp
 
 
+def coarse_topk_ref(
+    queries: jax.Array,  # [Q, D] f32
+    centroids: jax.Array,  # [N, D] f32
+    *,
+    nprobe: int,
+) -> tuple[jax.Array, jax.Array]:  # ([Q, NP] i32 ids, [Q, NP] dists asc)
+    """Oracle for the streaming coarse probe: materialize the full [Q, N]
+    distance matrix and ``top_k`` it — literally ``coarse_probe``'s
+    formulation (ties prefer the lower centroid id, which is the
+    contract the streaming kernels' (distance, id) sort reproduces)."""
+    qn = jnp.sum(queries * queries, axis=-1, keepdims=True)
+    cn = jnp.sum(centroids * centroids, axis=-1)
+    d = qn + cn[None, :] - 2.0 * (queries @ centroids.T)
+    neg_d, idx = jax.lax.top_k(-d, nprobe)
+    return idx.astype(jnp.int32), -neg_d
+
+
+def _pslot_from_owners(
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters
+    block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
+) -> jax.Array:  # [Q, C] probe slot of each candidate, -1 = non-member
+    """Reference expansion of the routing the kernels derive on-chip: the
+    probe slot of a candidate is the position of its owner in the query's
+    probe list (distinct ids — at most one match)."""
+    match = (
+        probe_idx.astype(jnp.int32)[:, :, None]
+        == block_owners.astype(jnp.int32)[None, None, :]
+    )  # [Q, NP, C]
+    return jnp.where(
+        match.any(axis=1), jnp.argmax(match, axis=1).astype(jnp.int32), -1
+    )
+
+
 def ivf_block_scan_ref(
     queries: jax.Array,  # [Q, D] f32
     pool: jax.Array,  # [P, T, D] f32 | bf16
@@ -33,20 +66,23 @@ def ivf_block_topk_ref(
     queries: jax.Array,  # [Q, D]
     pool: jax.Array,  # [P, T, D]
     block_ids: jax.Array,  # [C] i32, -1 = hole
+    block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
-    cand_ok: jax.Array,  # [Q, C] per-(query, candidate) validity mask
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Oracle for the fused streaming top-k scan: materialize everything,
-    mask, and sort — the id channel carries packed pool locations
+    derive membership from the candidate owners, mask, and sort — the id
+    channel carries packed pool locations
     (``block*T + offset``); invalid slots come back as (inf, -1)."""
     scores = ivf_block_scan_ref(queries, pool, block_ids)  # [C, Q, T]
     safe = jnp.maximum(block_ids, 0)
     t = pool_ids.shape[1]
     vids = pool_ids[safe]  # [C, T]
     locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
-    ok = cand_ok.astype(bool)[:, :, None] & (vids != -1)[None, :, :]
+    cand_ok = _pslot_from_owners(probe_idx, block_owners) != -1  # [Q, C]
+    ok = cand_ok[:, :, None] & (vids != -1)[None, :, :]
     q = queries.shape[0]
     flat_d = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), jnp.inf)
     flat_d = flat_d.reshape(q, -1)
@@ -67,18 +103,21 @@ def ivf_block_topk_int8_ref(
     pool: jax.Array,  # [P, T, D] i8 residual codes
     pool_scales: jax.Array,  # [P, T] f32 per-vector dequant scales
     block_ids: jax.Array,  # [C] i32, -1 = hole
+    block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
-    pslot: jax.Array,  # [Q, C] i32 probe slot per candidate, -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
-    """Oracle for the int8 fused streaming top-k: materialize every score
+    """Oracle for the int8 fused streaming top-k: derive each candidate's
+    probe slot from its owner, materialize every score
     with the kernel's exact integer-dot formulation, mask, and sort by
     (distance, location) — the location tiebreak keeps quantization-induced
     exact ties deterministic across kernel / scan / oracle."""
     from repro.kernels.ivf_scan import _int8_scores
 
     q = q_codes.shape[0]
+    pslot = _pslot_from_owners(probe_idx, block_owners)  # [Q, C]
     safe = jnp.maximum(block_ids, 0)
     codes = pool[safe].astype(jnp.int32)  # [C, T, D]
     svs = pool_scales[safe]  # [C, T]
@@ -136,16 +175,19 @@ def ivf_pq_block_topk_ref(
     lut: jax.Array,  # [Q, NP, M, K] per-(query, probe) ADC tables
     pool_codes: jax.Array,  # [P, T, M] uint8/int PQ codes
     block_ids: jax.Array,  # [C] i32, -1 = hole
+    block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
-    pslot: jax.Array,  # [Q, C] i32 probe slot per candidate, -1 = invalid
+    probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
-    """Oracle for the PQ fused streaming top-k: materialize the full ADC
+    """Oracle for the PQ fused streaming top-k: derive each candidate's
+    LUT-selecting probe slot from its owner, materialize the full ADC
     score tensor, mask, and sort by (distance, location) — invalid slots
     come back as (inf, -1).  The double sort key makes ties (vectors
     sharing a code) deterministic across kernel / scan / oracle."""
     q = lut.shape[0]
+    pslot = _pslot_from_owners(probe_idx, block_owners)  # [Q, C]
     safe = jnp.maximum(block_ids, 0)
     codes = pool_codes[safe].astype(jnp.int32)  # [C, T, M]
     vids = pool_ids[safe]  # [C, T]

@@ -35,9 +35,11 @@ def test_ivf_block_scan_matches_ref(q, d, p, t, c):
 
 
 def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
-                 member_frac=0.7):
+                 ncl=8, nprobe=6):
     """Union-scan shaped inputs: hole blocks (-1 in the NULL-padded union),
-    empty (-1) id slots, and per-(query, candidate) membership."""
+    empty (-1) id slots, and owner/probe-list routing (membership is
+    derived in-kernel: a query owns a candidate iff its distinct probe
+    list contains the candidate's owner; NULL slots own -1)."""
     rng = np.random.default_rng(seed)
     queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
     pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
@@ -45,8 +47,13 @@ def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ids[rng.random(c) < hole_frac] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
-    cand_ok = (rng.random((q, c)) < member_frac) & (ids != -1)[None, :]
-    return queries, pool, jnp.asarray(ids), jnp.asarray(pool_ids), jnp.asarray(cand_ok)
+    owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
+    owners[ids == -1] = -1  # NULL slots own nothing
+    probe = np.stack(
+        [rng.permutation(ncl)[:nprobe] for _ in range(q)]
+    ).astype(np.int32)
+    return (queries, pool, jnp.asarray(ids), jnp.asarray(owners),
+            jnp.asarray(pool_ids), jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -60,17 +67,20 @@ def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ],
 )
 def test_ivf_block_topk_matches_ref(q, d, p, t, c, kp):
-    queries, pool, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, seed=q + c)
+    queries, pool, ids, owners, pool_ids, probe = _topk_inputs(
+        q, d, p, t, c, seed=q + c
+    )
     want_d, want_i = ref.ivf_block_topk_ref(
-        queries, pool, ids, pool_ids, ok, kprime=kp
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk(
-        queries, pool, ids, pool_ids, ok, kprime=kp, interpret=True
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp,
+        interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_scan(
-        queries, pool, ids, pool_ids, ok, kprime=kp, chunk=4
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp, chunk=4
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(sc_i, want_i)
@@ -83,10 +93,12 @@ def test_ivf_block_topk_all_holes_returns_inf():
     queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
     pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
     ids = jnp.full((c,), -1, jnp.int32)
+    owners = jnp.full((c,), -1, jnp.int32)  # NULL slots own nothing
     pool_ids = jnp.zeros((p, t), jnp.int32)
-    ok = jnp.zeros((q, c), bool)
+    probe = jnp.asarray(rng.integers(0, 4, size=(q, 3)), jnp.int32)
     d_out, i_out = ivf_block_topk(
-        queries, pool, ids, pool_ids, ok, kprime=8, interpret=True
+        queries, pool, ids, owners, pool_ids, probe, kprime=8,
+        interpret=True,
     )
     assert np.isinf(np.asarray(d_out)).all()
     assert (np.asarray(i_out) == -1).all()

@@ -22,19 +22,27 @@ pytestmark = pytest.mark.pq
 KSUB = 256
 
 
-def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3):
+def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
+                    ncl=None):
     """Union-scan shaped PQ inputs: hole blocks (-1 in the NULL-padded
-    union), empty (-1) id slots, and a probe-slot index with non-members."""
+    union), empty (-1) id slots, and owner/probe-list routing (the
+    LUT-selecting probe slot — including the non-member case — is derived
+    from owner membership, exactly as in-kernel)."""
     rng = np.random.default_rng(seed)
+    ncl = ncl or 2 * npb  # ~half the (query, candidate) pairs are members
     lut = jnp.asarray(rng.normal(size=(q, npb, m, KSUB)) ** 2, jnp.float32)
     codes = jnp.asarray(rng.integers(0, KSUB, size=(p, t, m)), jnp.uint8)
     ids = rng.integers(0, p, size=(c,)).astype(np.int32)
     ids[rng.random(c) < hole_frac] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
-    pslot = rng.integers(-1, npb, size=(q, c)).astype(np.int32)
-    pslot[:, ids == -1] = -1  # hole blocks are invalid for every query
-    return lut, codes, jnp.asarray(ids), jnp.asarray(pool_ids), jnp.asarray(pslot)
+    owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
+    owners[ids == -1] = -1  # hole blocks are invalid for every query
+    probe = np.stack(
+        [rng.permutation(ncl)[:npb] for _ in range(q)]
+    ).astype(np.int32)
+    return (lut, codes, jnp.asarray(ids), jnp.asarray(owners),
+            jnp.asarray(pool_ids), jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -47,19 +55,19 @@ def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3):
     ],
 )
 def test_ivf_pq_block_topk_matches_ref(q, npb, m, p, t, c, kp):
-    lut, codes, ids, pool_ids, pslot = _pq_topk_inputs(
+    lut, codes, ids, owners, pool_ids, probe = _pq_topk_inputs(
         q, npb, m, p, t, c, seed=q * 10 + c
     )
     want_d, want_i = ref.ivf_pq_block_topk_ref(
-        lut, codes, ids, pool_ids, pslot, kprime=kp
+        lut, codes, ids, owners, pool_ids, probe, kprime=kp
     )
     got_d, got_i = ivf_pq_block_topk(
-        lut, codes, ids, pool_ids, pslot, kprime=kp, interpret=True
+        lut, codes, ids, owners, pool_ids, probe, kprime=kp, interpret=True
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-3)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_pq_block_topk_scan(
-        lut, codes, ids, pool_ids, pslot, kprime=kp, chunk=4
+        lut, codes, ids, owners, pool_ids, probe, kprime=kp, chunk=4
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-3)
     np.testing.assert_array_equal(sc_i, want_i)
@@ -69,9 +77,12 @@ def test_ivf_pq_block_topk_ref_matches_adc_accumulate():
     """The ref oracle is itself checked against core.pq.adc_accumulate (the
     acceptance oracle): per-candidate LUT rows fed through the jnp ADC."""
     q, npb, m, p, t, c, kp = 6, 4, 8, 5, 8, 6, 8
-    lut, codes, ids, pool_ids, pslot = _pq_topk_inputs(
+    lut, codes, ids, owners, pool_ids, probe = _pq_topk_inputs(
         q, npb, m, p, t, c, seed=77
     )
+    # expand the owner/probe routing to the dense probe-slot index the
+    # kernels derive on-chip
+    pslot = ref._pslot_from_owners(probe, owners)  # [Q, C]
     lq = jnp.take_along_axis(lut, jnp.clip(pslot, 0)[:, :, None, None], axis=1)
     cb = jnp.broadcast_to(
         codes[jnp.maximum(ids, 0)][None], (q, c, t, m)
@@ -82,7 +93,7 @@ def test_ivf_pq_block_topk_ref_matches_adc_accumulate():
     flat = np.where(np.asarray(ok), np.asarray(d_acc), np.inf).reshape(q, -1)
     want = np.sort(flat, axis=1)[:, :kp]
     got_d, _ = ref.ivf_pq_block_topk_ref(
-        lut, codes, ids, pool_ids, pslot, kprime=kp
+        lut, codes, ids, owners, pool_ids, probe, kprime=kp
     )
     np.testing.assert_allclose(got_d, want, rtol=1e-5, atol=1e-3)
 
@@ -93,10 +104,11 @@ def test_ivf_pq_block_topk_all_invalid_returns_inf():
     lut = jnp.asarray(rng.normal(size=(q, npb, m, KSUB)) ** 2, jnp.float32)
     codes = jnp.asarray(rng.integers(0, KSUB, size=(p, t, m)), jnp.uint8)
     ids = jnp.full((c,), -1, jnp.int32)
+    owners = jnp.full((c,), -1, jnp.int32)
     pool_ids = jnp.zeros((p, t), jnp.int32)
-    pslot = jnp.full((q, c), -1, jnp.int32)
+    probe = jnp.asarray(rng.integers(0, 4, size=(q, npb)), jnp.int32)
     d, i = ivf_pq_block_topk(
-        lut, codes, ids, pool_ids, pslot, kprime=8, interpret=True
+        lut, codes, ids, owners, pool_ids, probe, kprime=8, interpret=True
     )
     assert np.isinf(np.asarray(d)).all()
     assert (np.asarray(i) == -1).all()

@@ -47,8 +47,9 @@ def _reconstruct(state):
 pytestmark = pytest.mark.quant
 
 
-def _topk_inputs(q, d, p, t, c, seed, dtype=np.float32):
-    """Union-scan shaped inputs: hole blocks, empty id slots, membership."""
+def _topk_inputs(q, d, p, t, c, seed, dtype=np.float32, ncl=8, nprobe=6):
+    """Union-scan shaped inputs: hole blocks, empty id slots, and the
+    owner/probe-list routing the kernels derive membership from."""
     rng = np.random.default_rng(seed)
     queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
     pool_f = rng.normal(size=(p, t, d)).astype(np.float32)
@@ -56,15 +57,22 @@ def _topk_inputs(q, d, p, t, c, seed, dtype=np.float32):
     ids[rng.random(c) < 0.25] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
-    cand_ok = (rng.random((q, c)) < 0.7) & (ids != -1)[None, :]
-    return (queries, pool_f, jnp.asarray(ids), jnp.asarray(pool_ids),
-            jnp.asarray(cand_ok))
+    owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
+    owners[ids == -1] = -1  # NULL slots own nothing
+    probe = np.stack(
+        [rng.permutation(ncl)[:nprobe] for _ in range(q)]
+    ).astype(np.int32)
+    return (queries, pool_f, jnp.asarray(ids), jnp.asarray(owners),
+            jnp.asarray(pool_ids), jnp.asarray(probe))
 
 
-def _int8_topk_inputs(q, npb, d, p, t, c, seed):
-    """Residual-int8 kernel inputs: per-probe quantized query residuals and
-    a probe-slot index with non-members, over union-shaped candidates."""
+def _int8_topk_inputs(q, npb, d, p, t, c, seed, ncl=None):
+    """Residual-int8 kernel inputs: per-probe quantized query residuals,
+    candidate owners, and distinct per-query probe lists (the probe slot —
+    including the non-member case — is derived from owner membership,
+    exactly as in-kernel)."""
     rng = np.random.default_rng(seed)
+    ncl = ncl or 2 * npb  # ~half the (query, candidate) pairs are members
     qres = jnp.asarray(rng.normal(size=(q, npb, d)), jnp.float32)
     q_codes, q_meta = quantize_queries(qres)
     codes, scales = quantize_int8(
@@ -74,10 +82,13 @@ def _int8_topk_inputs(q, npb, d, p, t, c, seed):
     ids[rng.random(c) < 0.25] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
-    pslot = rng.integers(-1, npb, size=(q, c)).astype(np.int32)
-    pslot[:, ids == -1] = -1  # hole blocks are invalid for every query
+    owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
+    owners[ids == -1] = -1  # hole blocks are invalid for every query
+    probe = np.stack(
+        [rng.permutation(ncl)[:npb] for _ in range(q)]
+    ).astype(np.int32)
     return (q_codes, q_meta, codes, scales, jnp.asarray(ids),
-            jnp.asarray(pool_ids), jnp.asarray(pslot))
+            jnp.asarray(owners), jnp.asarray(pool_ids), jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -93,20 +104,21 @@ def test_ivf_block_topk_int8_matches_ref(q, npb, d, p, t, c, kp):
     """Kernel / lax.scan fallback / oracle agree: identical ids (the
     (distance, id) sort makes quantization ties deterministic), distances
     to float ulps."""
-    qc, qm, codes, scales, ids, pool_ids, pslot = _int8_topk_inputs(
+    qc, qm, codes, scales, ids, owners, pool_ids, probe = _int8_topk_inputs(
         q, npb, d, p, t, c, q + c
     )
     want_d, want_i = ref.ivf_block_topk_int8_ref(
-        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp
+        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk_int8(
-        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp,
+        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp,
         interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_int8_scan(
-        qc, qm, codes, scales, ids, pool_ids, pslot, kprime=kp, chunk=4
+        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp,
+        chunk=4,
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(sc_i, want_i)
@@ -117,16 +129,23 @@ def test_ivf_block_topk_int8_approximates_fp32():
     the exact distances between the reconstructions, so they track the fp32
     scores to quantization error."""
     q, d, p, t, c, kp = 8, 64, 10, 16, 9, 16
-    queries, pool_f, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, 5)
+    # every query probes cluster 0; candidates owned by 0 or by nobody,
+    # so both payload families see the identical membership pattern
+    queries, pool_f, ids, _, pool_ids, _ = _topk_inputs(q, d, p, t, c, 5)
+    rng = np.random.default_rng(5)
+    owners = np.where(rng.random(c) < 0.7, 0, -1).astype(np.int32)
+    owners[np.asarray(ids) == -1] = -1
+    owners = jnp.asarray(owners)
+    probe = jnp.zeros((q, 1), jnp.int32)
     codes, scales = quantize_int8(jnp.asarray(pool_f))
     q_codes, q_meta = quantize_queries(queries[:, None, :])  # NP=1
-    pslot = jnp.where(ok, 0, -1).astype(jnp.int32)
     qd, _ = ivf_block_topk_int8(
-        q_codes, q_meta, codes, scales, ids, pool_ids, pslot, kprime=kp,
-        interpret=True,
+        q_codes, q_meta, codes, scales, ids, owners, pool_ids, probe,
+        kprime=kp, interpret=True,
     )
     fd, _ = ref.ivf_block_topk_ref(
-        queries, jnp.asarray(pool_f), ids, pool_ids, ok, kprime=kp
+        queries, jnp.asarray(pool_f), ids, owners, pool_ids, probe,
+        kprime=kp,
     )
     qd, fd = np.asarray(qd), np.asarray(fd)
     live = np.isfinite(fd) & np.isfinite(qd)
@@ -144,11 +163,12 @@ def test_ivf_block_topk_int8_all_invalid_returns_inf():
         jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
     )
     ids = jnp.full((c,), -1, jnp.int32)
+    owners = jnp.full((c,), -1, jnp.int32)
     pool_ids = jnp.zeros((p, t), jnp.int32)
-    pslot = jnp.full((q, c), -1, jnp.int32)
+    probe = jnp.asarray(rng.integers(0, 4, size=(q, npb)), jnp.int32)
     d_out, i_out = ivf_block_topk_int8(
-        q_codes, q_meta, codes, scales, ids, pool_ids, pslot, kprime=8,
-        interpret=True,
+        q_codes, q_meta, codes, scales, ids, owners, pool_ids, probe,
+        kprime=8, interpret=True,
     )
     assert np.isinf(np.asarray(d_out)).all()
     assert (np.asarray(i_out) == -1).all()
@@ -159,18 +179,21 @@ def test_ivf_block_topk_int8_all_invalid_returns_inf():
 def test_ivf_block_topk_bf16_matches_ref(q, d, p, t, c, kp):
     """bf16 payloads flow through the same fused kernel (bf16 operands,
     f32 accumulation on the MXU)."""
-    queries, pool_f, ids, pool_ids, ok = _topk_inputs(q, d, p, t, c, q * c)
+    queries, pool_f, ids, owners, pool_ids, probe = _topk_inputs(
+        q, d, p, t, c, q * c
+    )
     pool = jnp.asarray(pool_f, jnp.bfloat16)
     want_d, want_i = ref.ivf_block_topk_ref(
-        queries, pool, ids, pool_ids, ok, kprime=kp
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk(
-        queries, pool, ids, pool_ids, ok, kprime=kp, interpret=True
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp,
+        interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_scan(
-        queries, pool, ids, pool_ids, ok, kprime=kp, chunk=4
+        queries, pool, ids, owners, pool_ids, probe, kprime=kp, chunk=4
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(sc_i, want_i)

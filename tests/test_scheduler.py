@@ -205,6 +205,44 @@ def test_chain_budget_recomputed_after_growth():
     assert (i_rt == i_f).all()
 
 
+def test_budget_buckets_pow2_and_evicts_stale_steps():
+    """Dispatch-time chain budgets are power-of-two buckets (O(log
+    max_chain) recompiles under steady growth, never one per increment)
+    and advancing the bucket evicts the jit-cache entries keyed by the
+    superseded smaller budgets (chains never shrink, so those executables
+    can never be dispatched again)."""
+    d = 16
+    x0 = _data(60, d, seed=41)
+    cfg = IVFIndexConfig(
+        n_clusters=4, dim=d, block_size=8, max_chain=128, nprobe=4, k=5,
+        capacity_vectors=8000,
+    )
+    idx = IVFIndex(cfg)
+    idx.train(x0)
+    idx.add(x0)
+    rt = ServingRuntime(
+        idx, RuntimeConfig(mode="parallel", nprobe=4, k=5)
+    )
+    try:
+        rt.stop()  # drive budgets/caches directly, no worker races
+        seen = set()
+        for n in (200, 400, 800, 1600, 3200):
+            idx.add(_data(n, d, seed=n))
+            rt._budget = None  # what _apply_insert does after an insert
+            b = rt._current_budget()
+            assert b & (b - 1) == 0 or b == cfg.max_chain, b
+            seen.add(b)
+            rt._search_step_for(b)
+            rt._fused_step_for(b)
+            # only the current bucket's entries survive growth
+            assert set(rt._search_steps) == {b}
+            assert set(rt._fused_steps) == {b}
+        assert len(seen) > 2, "test must cross several buckets"
+        assert len(seen) < 8, "pow2 bucketing keeps the bucket count small"
+    finally:
+        rt.stop()
+
+
 def test_search_failure_resolves_futures_and_releases_slots(base_index):
     """Regression (slot/future leak): an exception mid-dispatch used to
     leave every batched future unresolved and the semaphore slots acquired
