@@ -73,10 +73,25 @@ def main():
         )
         try:
             rejected = drive(rt, corpus)
+            # the mutation stream rides the same lane: deletes tombstone
+            # through the device id map, updates replace in place under
+            # the same id (one fused dispatch each); auto_compact reclaims
+            # the dead space once a cluster crosses the trigger
+            rng = np.random.default_rng(7)
+            victims = rng.choice(5000, 400, replace=False).astype(np.int32)
+            rt.submit_delete(victims).result(timeout=30)
+            keep = np.asarray([6000, 6001, 6002], np.int32)
+            rt.submit_update(corpus[keep] * 0.5, keep).result(timeout=30)
+            time.sleep(0.2)
             s = rt.stats()
             print(f"mode={mode:<9} search {s['search'].row()}")
             print(f"{'':15}insert {s['insert'].row()}  rejected={rejected}")
-            print(f"{'':15}corpus now {rt.index.ntotal} vectors")
+            print(f"{'':15}mutation {s['mutation'].row()}")
+            print(f"{'':15}deletes={s['deletes']} updates={s['updates']} "
+                  f"live={s['live_vectors']} "
+                  f"dead_frac={s['dead_fraction']:.3f} "
+                  f"util={s['utilisation']:.3f}")
+            print(f"{'':15}corpus now {rt.index.ntotal} live vectors")
         finally:
             rt.stop()
 

@@ -45,6 +45,31 @@ def main():
     passes = index.maybe_rearrange()
     print(f"rearrangement passes run: {passes}")
 
+    # ---- online mutations: delete + in-place update ---------------------
+    # Deletes tombstone rows (one jitted dispatch through the device id
+    # map — nothing moves); updates tombstone + re-insert under the same
+    # id in one dispatch.  Dead space is reclaimed by the next compaction
+    # pass once a cluster's dead fraction crosses the trigger.
+    victims = new_ids[:350]  # most of the far cluster: crosses the
+    # dead-fraction trigger so the compaction below actually reclaims
+    n = index.delete(victims)
+    d, i = index.search(new_vectors[:5], k=1)
+    print(f"deleted {n} ids; deleted ids surface in results: "
+          f"{bool(np.isin(i, victims).any())}")
+    refreshed = new_vectors[350:353] * 0.5  # same ids, new vectors
+    index.update(refreshed, new_ids[350:353])
+    d, i = index.search(refreshed, k=1)
+    print(f"updated rows retrievable under their old ids: "
+          f"{(i[:, 0] == new_ids[350:353]).all()}")
+    s = index.stats()
+    print(f"live utilisation {s['utilisation']:.3f}, "
+          f"dead fraction {s['dead_fraction']:.3f} "
+          f"(blocks in use: {s['blocks_in_use']})")
+    passes = index.maybe_rearrange(max_passes=16)  # reclaim the dead space
+    s = index.stats()
+    print(f"after {passes} compaction passes: dead fraction "
+          f"{s['dead_fraction']:.3f}, blocks in use {s['blocks_in_use']}")
+
     # ---- int8 payload + exact re-rank (the dtype axis) ------------------
     # Quantized flat payload: rows are stored as int8 *residual* codes
     # (vs their coarse centroid) + one f32 scale per vector

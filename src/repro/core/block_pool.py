@@ -58,8 +58,16 @@ class PoolConfig:
     payload: str = "flat"  # "flat" (raw vectors) | "pq" (codes)
     pq_m: int = 0  # number of PQ subquantizers (payload == "pq")
     dtype: Any = jnp.float32  # flat payload dtype: float32 | bfloat16 | int8
+    # capacity of the device-resident id -> pool-location map (delete/update
+    # targets must have id < max_ids; 0 = auto-size to 2x the pool's slot
+    # capacity, enough for one full generation of churn between id reuse)
+    max_ids: int = 0
 
     def __post_init__(self):
+        if self.max_ids <= 0:
+            object.__setattr__(
+                self, "max_ids", 2 * self.n_blocks * self.block_size
+            )
         if self.payload not in ("flat", "pq"):
             raise ValueError(f"unknown payload {self.payload!r}")
         if self.payload == "pq" and self.pq_m <= 0:
@@ -108,19 +116,26 @@ class IVFState:
     pool_payload: jax.Array  # [P, T_m, D] vectors | [P, T_m, M] u8 codes
     pool_ids: jax.Array  # [P, T_m] i32 global ids, NULL = empty slot
     pool_scales: jax.Array  # [P, T_m] f32 int8 dequant scales ([0,0] unused)
+    pool_live: jax.Array  # [P, T_m] u8 live mask: 1 = occupied & not deleted
+    id_map: jax.Array  # [max_ids] i32 id -> packed location, NULL = absent
     block_owner: jax.Array  # [P] i32 owning cluster per block, NULL = free
     next_block: jax.Array  # [P] i32 linked-list next pointer (paper header)
     cluster_head: jax.Array  # [N] i32 first block of each chain
     cluster_tail: jax.Array  # [N] i32 last block of each chain
     cluster_blocks: jax.Array  # [N, max_chain] i32 block table (TPU path)
     cluster_nblocks: jax.Array  # [N] i32 chain length |m'_k|
-    cluster_len: jax.Array  # [N] i32 vectors per cluster (nl_k)
+    cluster_len: jax.Array  # [N] i32 slots used per cluster (incl. tombstones)
+    dead_count: jax.Array  # [N] i32 tombstoned slots awaiting compaction
     new_since_rearrange: jax.Array  # [N] i32 Exceed() statistic (Eq. 3)
     cur_p: jax.Array  # []  i32 bump pointer cur_P
     free_stack: jax.Array  # [P] i32 recycled block ids (top at free_top-1)
     free_top: jax.Array  # []  i32
-    num_vectors: jax.Array  # []  i32 total vectors resident
+    num_vectors: jax.Array  # []  i32 *live* vectors resident (deletes decrement)
     num_dropped: jax.Array  # []  i32 inserts rejected at capacity (alert stat)
+    num_deleted: jax.Array  # []  i32 cumulative successful deletes/tombstones
+    num_missed: jax.Array  # []  i32 delete/update targets not found (alert)
+    num_unmapped: jax.Array  # [] i32 rows inserted with id >= max_ids: they
+    # serve fine but can never be deleted/updated (alert — size max_ids up)
 
 
 def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
@@ -137,6 +152,8 @@ def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
         pool_payload=jnp.zeros(cfg.payload_shape(), cfg.payload_dtype()),
         pool_ids=jnp.full((p, cfg.block_size), NULL, jnp.int32),
         pool_scales=jnp.zeros(cfg.scales_shape(), jnp.float32),
+        pool_live=jnp.zeros((p, cfg.block_size), jnp.uint8),
+        id_map=jnp.full((cfg.max_ids,), NULL, jnp.int32),
         block_owner=jnp.full((p,), NULL, jnp.int32),
         next_block=jnp.full((p,), NULL, jnp.int32),
         cluster_head=jnp.full((n,), NULL, jnp.int32),
@@ -144,12 +161,16 @@ def init_state(cfg: PoolConfig, centroids: jax.Array) -> IVFState:
         cluster_blocks=jnp.full((n, mc), NULL, jnp.int32),
         cluster_nblocks=jnp.zeros((n,), jnp.int32),
         cluster_len=jnp.zeros((n,), jnp.int32),
+        dead_count=jnp.zeros((n,), jnp.int32),
         new_since_rearrange=jnp.zeros((n,), jnp.int32),
         cur_p=jnp.zeros((), jnp.int32),
         free_stack=jnp.full((p,), NULL, jnp.int32),
         free_top=jnp.zeros((), jnp.int32),
         num_vectors=jnp.zeros((), jnp.int32),
         num_dropped=jnp.zeros((), jnp.int32),
+        num_deleted=jnp.zeros((), jnp.int32),
+        num_missed=jnp.zeros((), jnp.int32),
+        num_unmapped=jnp.zeros((), jnp.int32),
     )
 
 
@@ -220,9 +241,57 @@ def capacity_ok(state: IVFState, cfg: PoolConfig) -> jax.Array:
 
 
 def utilisation(state: IVFState, cfg: PoolConfig) -> jax.Array:
-    """Fraction of pool blocks currently owned by chains."""
-    in_use = state.cur_p - state.free_top
-    return in_use.astype(jnp.float32) / float(cfg.n_blocks)
+    """Fraction of pool *slot capacity* holding live vectors.
+
+    Before tombstones existed this counted allocated blocks, which silently
+    overstates occupancy the moment anything is deleted: a tombstoned slot
+    still sits in its chain but holds nothing retrievable.  ``num_vectors``
+    tracks exactly the live population (inserts increment, deletes
+    decrement, compaction is neutral), so this gauge stays truthful under
+    churn.  Allocator *pressure* (can a block still be handed out) is what
+    ``capacity_ok`` answers; ``pool_stats`` reports both."""
+    cap = float(cfg.n_blocks * cfg.block_size)
+    return state.num_vectors.astype(jnp.float32) / cap
+
+
+def dead_fraction(state: IVFState) -> jax.Array:
+    """Tombstoned fraction of all chain-resident slots (the reclamation
+    pressure gauge: compaction drives it back to zero)."""
+    used = jnp.maximum(state.cluster_len.sum(), 1)
+    return state.dead_count.sum().astype(jnp.float32) / used.astype(
+        jnp.float32
+    )
+
+
+def pool_stats(state: IVFState, cfg: PoolConfig) -> dict:
+    """Host-side gauge snapshot (one device sync for a handful of scalars)."""
+    s = jax.device_get(
+        (
+            state.cur_p,
+            state.free_top,
+            state.num_vectors,
+            state.num_dropped,
+            state.num_deleted,
+            state.num_missed,
+            state.num_unmapped,
+            state.dead_count.sum(),
+            state.cluster_len.sum(),
+        )
+    )
+    (cur_p, free_top, live, dropped, deleted, missed, unmapped, dead,
+     used) = (int(v) for v in s)
+    return {
+        "blocks_in_use": cur_p - free_top,
+        "blocks_free": free_top + max(cfg.n_blocks - cur_p, 0),
+        "utilisation": live / float(cfg.n_blocks * cfg.block_size),
+        "dead_fraction": dead / max(used, 1),
+        "live_vectors": live,
+        "dead_slots": dead,
+        "num_dropped": dropped,
+        "num_deleted": deleted,
+        "num_missed": missed,
+        "num_unmapped": unmapped,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -264,34 +333,75 @@ def check_invariants(state: IVFState, cfg: PoolConfig) -> None:
         table = [int(b) for b in s.cluster_blocks[k][:nblk]]
         assert table == chain, (k, table, chain)
         assert all(int(b) == -1 for b in s.cluster_blocks[k][nblk:])
-        # slot occupancy: block j holds dids [j*T, min(len, (j+1)*T))
+        # slot occupancy: block j holds dids [j*T, min(len, (j+1)*T)).
+        # Tombstoned slots keep their (stale) id but are dead in the live
+        # mask; slots past the filled run are empty AND dead.
+        dead_k = 0
         for j, b in enumerate(chain):
             filled = min(length - j * cfg.block_size, cfg.block_size)
             ids = s.pool_ids[b]
+            live = s.pool_live[b]
             assert (ids[:filled] >= 0).all(), (k, j, b, ids)
             assert (ids[filled:] == -1).all(), (k, j, b, ids)
+            assert (live[filled:] == 0).all(), (k, j, b, live)
+            for t in range(filled):
+                vid = int(ids[t])
+                loc = b * cfg.block_size + t
+                if live[t]:
+                    # live slot <-> id map points exactly here (ids past
+                    # max_ids are legal but unmappable, hence immutable)
+                    if vid < cfg.max_ids:
+                        assert int(s.id_map[vid]) == loc, (
+                            k, b, t, vid, int(s.id_map[vid]), loc
+                        )
+                else:
+                    dead_k += 1
+                    # a tombstone's stale id must never map back to it
+                    # (update re-points the id at its fresh copy; delete
+                    # clears the entry)
+                    if vid < cfg.max_ids:
+                        assert int(s.id_map[vid]) != loc, (k, b, t, vid)
+        assert dead_k == int(s.dead_count[k]), (k, dead_k, int(s.dead_count[k]))
+    # num_vectors counts the *live* population only
     total = int(s.num_vectors)
-    assert total == int(s.cluster_len.sum())
+    assert total == int(s.cluster_len.sum()) - int(s.dead_count.sum())
+    # id map reverse direction: every mapped id resolves to a live slot of
+    # a chained block holding exactly that id
+    mapped = np.flatnonzero(np.asarray(s.id_map) != -1)
+    for vid in mapped:
+        loc = int(s.id_map[vid])
+        b, t = loc // cfg.block_size, loc % cfg.block_size
+        assert b in seen_blocks, (int(vid), loc)
+        assert int(s.pool_ids[b, t]) == int(vid), (int(vid), loc)
+        assert int(s.pool_live[b, t]) == 1, (int(vid), loc)
     # free stack entries are disjoint from live chains
     free = {int(b) for b in s.free_stack[: int(s.free_top)]}
     assert not (free & seen_blocks), "freed block still chained"
-    # unchained blocks (never allocated, or freed) own nothing — a stale
-    # owner would make the in-kernel membership test admit a dead block
+    # unchained blocks (never allocated, or freed) own nothing and hold no
+    # live rows — a stale owner would make the in-kernel membership test
+    # admit a dead block
     for b in range(s.block_owner.shape[0]):
         if b not in seen_blocks:
             assert int(s.block_owner[b]) == -1, (b, int(s.block_owner[b]))
+            assert (s.pool_live[b] == 0).all(), b
 
 
 def snapshot_ids(state: IVFState, cfg: PoolConfig) -> dict[int, list[int]]:
-    """cluster -> ordered list of vector ids (host-side oracle for tests)."""
+    """cluster -> ordered list of *live* vector ids (host-side test oracle).
+
+    Tombstoned slots keep a stale id in ``pool_ids`` until compaction, so
+    the live mask — not id validity — is what decides residency."""
     s = jax.device_get(state)
     out: dict[int, list[int]] = {}
     for k in range(cfg.n_clusters):
         ids: list[int] = []
         cur = int(s.cluster_head[k])
         while cur != -1:
-            blk = [int(i) for i in s.pool_ids[cur] if int(i) != -1]
-            ids.extend(blk)
+            ids.extend(
+                int(i)
+                for i, lv in zip(s.pool_ids[cur], s.pool_live[cur])
+                if int(i) != -1 and lv
+            )
             cur = int(s.next_block[cur])
         out[k] = ids
     return out

@@ -177,6 +177,22 @@ def insert_payload(
     pool_ids = state.pool_ids.at[rows, moff].set(
         jnp.where(valid, new_ids, NULL), mode="drop"
     )
+    # every accepted row is born live, and its id maps to its packed pool
+    # location so delete/update can find it without a host round trip
+    # (ids >= max_ids stay resident but unmappable — mutations miss them)
+    pool_live = state.pool_live.at[rows, moff].set(
+        jnp.uint8(1), mode="drop"
+    )
+    loc = rows * tm + moff
+    max_ids = state.id_map.shape[0]
+    map_ok = valid & (new_ids >= 0) & (new_ids < max_ids)
+    id_map = state.id_map.at[jnp.where(map_ok, new_ids, max_ids)].set(
+        loc.astype(jnp.int32), mode="drop"
+    )
+    # monotonically-assigned ids WILL outgrow the direct-address map under
+    # sustained churn; the gauge makes that loud before deletes start
+    # silently missing
+    n_unmapped = (valid & ~map_ok).sum().astype(jnp.int32)
 
     n_inserted = valid.sum().astype(jnp.int32)
     return dataclasses.replace(
@@ -184,6 +200,8 @@ def insert_payload(
         pool_payload=pool_payload,
         pool_ids=pool_ids,
         pool_scales=pool_scales,
+        pool_live=pool_live,
+        id_map=id_map,
         block_owner=block_owner,
         next_block=next_block,
         cluster_head=cluster_head,
@@ -194,6 +212,7 @@ def insert_payload(
         new_since_rearrange=state.new_since_rearrange + counts,
         num_vectors=state.num_vectors + n_inserted,
         num_dropped=state.num_dropped + n_rejected,
+        num_unmapped=state.num_unmapped + n_unmapped,
         **commit_alloc(state, succ_total),
     )
 

@@ -17,9 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pq as pqmod
-from repro.core.block_pool import IVFState, PoolConfig, init_state
+from repro.core.block_pool import IVFState, PoolConfig, init_state, pool_stats
 from repro.core.insert import make_insert_fn
 from repro.core.kmeans import kmeans
+from repro.core.mutate import make_delete_fn, make_update_fn
 from repro.core.rearrange import make_rearrange_fn
 from repro.core.search import make_search_fn
 
@@ -39,6 +40,11 @@ class IVFIndexConfig:
     nprobe: int = 16
     k: int = 10
     rearrange_threshold: int = 10_000  # T'_m (paper Table 1 sweeps this)
+    # mutation subsystem: compaction triggers when a cluster's tombstoned
+    # fraction reaches this (see core.rearrange); id_capacity sizes the
+    # device id -> location map (None = 2x pool slot capacity)
+    dead_frac_threshold: float = 0.3
+    id_capacity: Optional[int] = None
     # "block_table" | "chain_walk" | "union" | "union_pallas" |
     # "union_fused" | "union_fused_scan" (see core.search / docs/search_paths.md)
     search_path: str = "block_table"
@@ -62,6 +68,7 @@ class IVFIndexConfig:
             payload=self.payload,
             pq_m=self.pq_m,
             dtype=self.dtype,
+            max_ids=self.id_capacity or 0,
         )
 
 
@@ -95,8 +102,11 @@ class IVFIndex:
             self.pq = pqmod.train_pq(res, self.cfg.pq_m, seed=self.cfg.seed)
         encode = pqmod.make_pq_encode_fn(self.pq) if self.pq else None
         self._insert_fn = make_insert_fn(self.pool_cfg, encode=encode)
+        self._delete_fn = make_delete_fn(self.pool_cfg)
+        self._update_fn = make_update_fn(self.pool_cfg, encode=encode)
         self._rearrange_fn = make_rearrange_fn(
-            self.pool_cfg, self.cfg.rearrange_threshold
+            self.pool_cfg, self.cfg.rearrange_threshold,
+            dead_frac=self.cfg.dead_frac_threshold,
         )
 
     def add(self, x: np.ndarray | jax.Array, ids=None) -> np.ndarray:
@@ -109,6 +119,35 @@ class IVFIndex:
             self._next_id += b
         self.state = self._insert_fn(self.state, x, jnp.asarray(ids, jnp.int32))
         return np.asarray(ids)
+
+    # ------------------------------------------------------- mutations ----
+    def delete(self, ids) -> int:
+        """Tombstone a batch of ids; returns how many were actually found
+        (misses — unknown / already-deleted / unmappable ids — accrue in
+        ``state.num_missed``).  Dead space is reclaimed by the next
+        compaction pass (``maybe_rearrange``)."""
+        assert self.state is not None, "train() first"
+        before = int(self.state.num_deleted)
+        self.state = self._delete_fn(
+            self.state, jnp.asarray(ids, jnp.int32)
+        )
+        return int(self.state.num_deleted) - before
+
+    def update(self, x: np.ndarray | jax.Array, ids) -> np.ndarray:
+        """Replace the vectors behind ``ids`` in one dispatch (tombstone +
+        re-insert under the same id — no host round trip, no copy of any
+        resident row).  Ids not currently resident degrade to plain inserts
+        (upsert) and count toward ``num_missed``."""
+        assert self.state is not None, "train() first"
+        x = jnp.asarray(x, jnp.float32)
+        ids = np.asarray(ids, np.int32)
+        assert len(ids) == x.shape[0], (len(ids), x.shape)
+        self.state = self._update_fn(self.state, x, jnp.asarray(ids))
+        return ids
+
+    def stats(self) -> dict:
+        """Live-occupancy / reclamation gauges (see block_pool.pool_stats)."""
+        return pool_stats(self.state, self.pool_cfg)
 
     # --------------------------------------------------------- search ----
     def _chain_budget(self) -> int:

@@ -1,0 +1,150 @@
+"""Online mutations over the block pool: tombstone deletes and in-place
+updates (beyond-paper subsystem; the paper's §3 index is insert-only).
+
+The pool discipline stays exactly the paper's: no reallocation, no copies
+of resident data, fixed shapes under ``jit``.  A delete therefore cannot
+splice a row out of its chain — slot positions encode the did arithmetic
+every insert relies on.  Instead:
+
+* ``delete`` flips the slot's bit in ``IVFState.pool_live`` (the ``[P, T]``
+  tombstone mask every scan streams alongside the payload) and clears the
+  id's entry in the device-resident ``id_map`` — two scatters, O(batch)
+  work, nothing else moves.  The slot is reclaimed later by compaction
+  (``core.rearrange``), which drops dead rows and returns surplus blocks to
+  the free stack.
+* ``update`` = tombstone the old slot + insert the fresh row *under the
+  same id* in one dispatch: the id map re-points at the new location, the
+  stale copy dies, and no intermediate state where both (or neither) copy
+  is visible can ever be observed — the whole step is one jitted program
+  over donated state.  An update whose id is not resident degrades to a
+  plain insert (upsert); the miss is counted in ``num_missed``.  If the
+  re-insert is rejected at capacity (full chain / exhausted pool) the
+  tombstone stands and the rejection surfaces in ``num_dropped`` — the
+  same alert stat every insert rejection feeds.
+
+Both steps take a fixed-size id batch with a validity mask (the serving
+runtime pads to power-of-two buckets, same as insert), so online churn
+costs O(log batch) recompiles total.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_pool import NULL, IVFState, PoolConfig
+from repro.core.insert import assign_clusters, insert_payload
+
+
+def last_occurrence_mask(ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """[B] bool mask keeping only the *last* valid occurrence of each id.
+
+    An update batch may name the same id twice (two refreshes of one row
+    racing into the same flush).  The tombstone pass is idempotent, but the
+    re-insert is not: without dedup both rows would come back live under
+    one id, the id map would keep an arbitrary winner, and the loser would
+    be unreachable by any future mutation.  Last-write-wins matches the
+    serialisation a caller would get submitting the updates one batch
+    apart."""
+    b = ids.shape[0]
+    sid = jnp.where(valid, ids.astype(jnp.int32), NULL)
+    order = jnp.argsort(sid, stable=True)
+    srt = sid[order]
+    is_last = jnp.concatenate(
+        [srt[:-1] != srt[1:], jnp.ones((1,), bool)]
+    )
+    return valid & jnp.zeros((b,), bool).at[order].set(is_last)
+
+
+def apply_delete(
+    cfg: PoolConfig,
+    state: IVFState,
+    del_ids: jax.Array,  # [B] i32 ids to tombstone (NULL / negative = pad)
+    valid: jax.Array | None = None,  # [B] bool — ragged batches (padding)
+) -> IVFState:
+    """Tombstone a batch of ids.  Pure function of (state, batch).
+
+    Misses — ids never inserted, already deleted, out of ``max_ids`` map
+    range, or repeated within the batch (first occurrence wins) — are
+    counted in ``num_missed`` and change nothing else; a mutation stream
+    that mostly misses is an upstream bug worth alerting on."""
+    b = del_ids.shape[0]
+    tm = cfg.block_size
+    del_ids = del_ids.astype(jnp.int32)
+    if valid is None:
+        valid = jnp.ones((b,), bool)
+    valid = valid & (del_ids >= 0)
+
+    # first-occurrence-in-batch dedup: duplicates would double-flip nothing
+    # (the scatter is idempotent) but would double-count dead_count.
+    # Invalid rows are keyed to -1 first so a masked-out row can never
+    # claim the first occurrence of a real id.
+    sid = jnp.where(valid, del_ids, NULL)
+    order = jnp.argsort(sid, stable=True)
+    srt = sid[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), srt[1:] != srt[:-1]])
+    uniq = jnp.zeros((b,), bool).at[order].set(first)
+
+    max_ids = state.id_map.shape[0]
+    in_map = valid & uniq & (del_ids < max_ids)
+    loc = jnp.where(
+        in_map, state.id_map[jnp.clip(del_ids, 0, max_ids - 1)], NULL
+    )
+    hit = in_map & (loc != NULL)
+    sloc = jnp.where(hit, loc, 0)
+    blk, off = sloc // tm, sloc % tm
+
+    pool_live = state.pool_live.at[
+        jnp.where(hit, blk, cfg.n_blocks), off
+    ].set(jnp.uint8(0), mode="drop")
+    id_map = state.id_map.at[jnp.where(hit, del_ids, max_ids)].set(
+        NULL, mode="drop"
+    )
+    # the tombstoned slot's cluster accrues reclamation pressure (the
+    # dead-fraction trigger in core.rearrange reads this)
+    owner = state.block_owner[jnp.clip(blk, 0, cfg.n_blocks - 1)]
+    dead_inc = jax.ops.segment_sum(
+        hit.astype(jnp.int32),
+        jnp.where(hit, owner, 0),
+        num_segments=cfg.n_clusters,
+    )
+    n_hit = hit.sum().astype(jnp.int32)
+    n_miss = (valid & ~hit).sum().astype(jnp.int32)
+    return dataclasses.replace(
+        state,
+        pool_live=pool_live,
+        id_map=id_map,
+        dead_count=state.dead_count + dead_inc,
+        num_vectors=state.num_vectors - n_hit,
+        num_deleted=state.num_deleted + n_hit,
+        num_missed=state.num_missed + n_miss,
+    )
+
+
+def make_delete_fn(cfg: PoolConfig):
+    """Jitted delete step: (state, ids[, valid]) -> state, state donated."""
+
+    def step(state: IVFState, del_ids, valid=None):
+        return apply_delete(cfg, state, del_ids, valid)
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_update_fn(cfg: PoolConfig, encode=None):
+    """Jitted update step: tombstone + re-insert under the same id, one
+    dispatch.  ``encode`` matches ``make_insert_fn``'s hook (PQ / residual
+    encoding of the raw rows)."""
+
+    def step(state: IVFState, vectors, ids, valid=None):
+        if valid is None:
+            valid = jnp.ones((ids.shape[0],), bool)
+        state = apply_delete(cfg, state, ids, valid)
+        # duplicate targets within the batch: only the last write re-inserts
+        keep = last_occurrence_mask(ids, valid)
+        assign = assign_clusters(state.centroids, vectors)
+        payload = vectors if encode is None else encode(state, assign, vectors)
+        return insert_payload(cfg, state, assign, payload, ids, keep)
+
+    return jax.jit(step, donate_argnums=(0,))

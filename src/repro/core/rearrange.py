@@ -1,4 +1,5 @@
-"""In-place rearrangement of fragmented block chains (paper Alg. 3, Fig. 1c).
+"""In-place rearrangement of fragmented block chains (paper Alg. 3, Fig. 1c)
+— now also the *reclamation path* of the mutation subsystem.
 
 The paper merges split memory blocks through a temporary segment so a chain's
 vectors become contiguous, eliminating header jumps.  Our functional
@@ -9,12 +10,19 @@ goal — after rearrangement a scan reads sequential memory instead of chasing
 scattered blocks — and the cost/benefit is measured in
 ``benchmarks/table1_rearrangement.py`` (paper Table 1).
 
+With tombstone deletes (``core.mutate``) compaction does double duty: the
+temp-segment gather *drops dead rows*, so the fresh run holds only the live
+population — ``cluster_len`` shrinks back to the live count, the cluster's
+``dead_count`` resets, surplus (including fully-dead) blocks go to the free
+stack, and the ``id_map`` is re-pointed at every row's new location.  Two
+triggers feed the maintenance loop: the paper's Exceed() insert statistic
+(Eq. 3) and a per-cluster dead-fraction threshold (reclamation pressure).
+
 Notes vs the paper:
 * Our insertion keeps every mid-chain block full (the per-cluster counter is
-  global), so the "merge two half-filled blocks" case of Alg. 3 cannot arise;
-  what remains — and what we compact — is physical scatter of the chain.
-  The recursive lazy-merge branch (Alg. 3 lines 3-6, 13-15) therefore
-  degenerates and is handled by the same dense rewrite.
+  global), so the "merge two half-filled blocks" case of Alg. 3 cannot arise
+  from inserts; deletions re-introduce exactly that fragmentation as
+  tombstoned slots, and the same dense rewrite handles both.
 * The temp segment is real: the gather materialises the chain before any
   write, so a preempted step never observes a half-moved chain (the donated
   state is replaced atomically at step boundaries).
@@ -38,7 +46,8 @@ def exceed(state: IVFState, threshold: int) -> jax.Array:
 def rearrange_cluster(
     cfg: PoolConfig, state: IVFState, cluster: jax.Array
 ) -> IVFState:
-    """Compact one cluster's chain into contiguous fresh blocks.
+    """Compact one cluster's chain into contiguous fresh blocks, dropping
+    tombstoned rows.
 
     ``cluster`` is a traced scalar; the op is a no-op (identity scatters) for
     empty chains, so callers may pass any cluster id unconditionally.
@@ -52,57 +61,119 @@ def rearrange_cluster(
     safe = jnp.where(chain_valid, table, 0)
     tmp_payload = state.pool_payload[safe]  # [mc, T, ...]
     tmp_ids = state.pool_ids[safe]  # [mc, T]
+    tmp_live = jnp.where(
+        chain_valid[:, None], state.pool_live[safe] != 0, False
+    )  # [mc, T] bool
     if cfg.has_scales:  # int8 dequant scales travel with their rows
         tmp_scales = state.pool_scales[safe]  # [mc, T]
 
-    # ---- allocate a contiguous run of nblk fresh blocks ------------------
-    # Bump-only (NOT via the free stack): the whole point of rearrangement
-    # is physical contiguity, so the run must be sequential block ids.
-    # The old blocks are recycled onto the free stack for future *inserts*,
-    # which don't care about contiguity.
-    j = jnp.arange(mc, dtype=jnp.int32)
-    new_blocks = jnp.where(chain_valid, state.cur_p + j, NULL)  # [mc]
-    rows = jnp.where(chain_valid, new_blocks, cfg.n_blocks)
+    # ---- drop dead rows: stable partition, live rows first in chain order
+    # (dids stay dense, so the slot arithmetic of future inserts holds)
+    flat_live = tmp_live.reshape(-1)  # [mc*T]
+    ordr = jnp.argsort(~flat_live, stable=True)
+    n_live = flat_live.sum().astype(jnp.int32)
+    comp_ids = tmp_ids.reshape(-1)[ordr]
+    comp_payload = tmp_payload.reshape(mc * tm, -1)[ordr]
+    if cfg.has_scales:
+        comp_scales = tmp_scales.reshape(-1)[ordr]
+    new_nblk = (n_live + tm - 1) // tm
 
-    # dense rewrite (the "merge" of Alg. 3 lines 9-11)
-    pool_payload = state.pool_payload.at[rows].set(tmp_payload, mode="drop")
-    pool_ids = state.pool_ids.at[rows].set(tmp_ids, mode="drop")
+    # ---- allocate a run of new_nblk fresh blocks ------------------------
+    # Bump-allocated (contiguous — the whole point of rearrangement) while
+    # the bump region fits the run; once ``cur_p`` approaches the pool end
+    # the run comes off the free stack instead.  The bump pointer is
+    # monotone, so without the fallback reclamation would shut off
+    # permanently after a bounded number of lifetime compactions — dead
+    # space matters more than contiguity at that point, and a free-stack
+    # run is just the ordinary scattered-chain state every scan already
+    # handles.  Precondition (enforced by make_rearrange_fn's fits mask):
+    # bump fits nblk, or free_top >= nblk.  Old blocks are recycled onto
+    # the free stack either way; dropping tombstones means the fresh run
+    # can be shorter than the old chain — a fully-dead chain allocates
+    # nothing and every old block is reclaimed.
+    j = jnp.arange(mc, dtype=jnp.int32)
+    blk_valid = j < new_nblk
+    bump_ok = state.cur_p + nblk <= cfg.n_blocks
+    free_idx = jnp.clip(state.free_top - 1 - j, 0, cfg.n_blocks - 1)
+    alloc = jnp.where(
+        bump_ok, state.cur_p + j, state.free_stack[free_idx]
+    )  # [mc] block id of run slot j (garbage past new_nblk, masked below)
+    new_blocks = jnp.where(blk_valid, alloc, NULL)  # [mc]
+    rows = jnp.where(blk_valid, new_blocks, cfg.n_blocks)
+
+    # dense rewrite (the "merge" of Alg. 3 lines 9-11): row r of the
+    # compacted run lands in fresh block r // T at offset r % T; the tail
+    # of the last block (r in [n_live, new_nblk*T)) is stamped empty
+    r = jnp.arange(mc * tm, dtype=jnp.int32)
+    in_run = r < n_live
+    tgt_ok = r < new_nblk * tm
+    row_r = jnp.where(tgt_ok, alloc[r // tm], cfg.n_blocks)
+    off_r = r % tm
+    pool_payload = state.pool_payload
+    flat_shape = (mc * tm,) + state.pool_payload.shape[2:]
+    pool_payload = pool_payload.at[row_r, off_r].set(
+        comp_payload.reshape(flat_shape), mode="drop"
+    )
+    pool_ids = state.pool_ids.at[row_r, off_r].set(
+        jnp.where(in_run, comp_ids, NULL), mode="drop"
+    )
+    pool_live = state.pool_live.at[row_r, off_r].set(
+        jnp.where(in_run, 1, 0).astype(jnp.uint8), mode="drop"
+    )
     pool_scales = state.pool_scales
     if cfg.has_scales:
-        pool_scales = pool_scales.at[rows].set(tmp_scales, mode="drop")
+        pool_scales = pool_scales.at[row_r, off_r].set(
+            comp_scales, mode="drop"
+        )
+    # moved rows re-point their id-map entries at the fresh location
+    # (tombstones were already unmapped at delete time, and the stable
+    # partition keeps only live rows inside [0, n_live))
+    max_ids = state.id_map.shape[0]
+    new_loc = row_r * tm + off_r
+    map_ok = in_run & (comp_ids >= 0) & (comp_ids < max_ids)
+    id_map = state.id_map.at[jnp.where(map_ok, comp_ids, max_ids)].set(
+        new_loc.astype(jnp.int32), mode="drop"
+    )
 
     # ---- header/table updates (paper line 11) ----------------------------
     nxt = jnp.where(
-        jnp.arange(mc) + 1 < nblk,
+        jnp.arange(mc) + 1 < new_nblk,
         jnp.roll(new_blocks, -1),
         NULL,
     )
     next_block = state.next_block.at[rows].set(nxt, mode="drop")
     cluster_blocks = state.cluster_blocks.at[cluster].set(
-        jnp.where(chain_valid, new_blocks, NULL)
+        jnp.where(blk_valid, new_blocks, NULL)
     )
-    head = jnp.where(nblk > 0, new_blocks[0], NULL)
-    last = jnp.where(nblk > 0, new_blocks[jnp.maximum(nblk - 1, 0)], NULL)
+    head = jnp.where(new_nblk > 0, new_blocks[0], NULL)
+    last = jnp.where(
+        new_nblk > 0, new_blocks[jnp.maximum(new_nblk - 1, 0)], NULL
+    )
     cluster_head = state.cluster_head.at[cluster].set(head)
     cluster_tail = state.cluster_tail.at[cluster].set(last)
 
     # ---- free the old blocks (wait-for-spare analogue, line 12) ---------
-    # Old chain blocks go to the free stack; their headers are cleared.
-    n_alloc = nblk
-    free_top = state.free_top
+    # Every old chain block goes to the free stack (the fresh run replaced
+    # them all); their headers, owners, ids, and live bits are cleared so
+    # stale state never leaks into future scans.  A free-stack-allocated
+    # run first pops its new_nblk blocks off the top; the nblk pushes
+    # (nblk >= new_nblk) overwrite every popped position, so no stale
+    # entry survives inside the new [0, free_top) window.
+    n_from_free = jnp.where(bump_ok, 0, new_nblk)
+    free_top = state.free_top - n_from_free
     free_pos = jnp.where(chain_valid, free_top + j, cfg.n_blocks)
     free_stack = state.free_stack.at[free_pos].set(
         jnp.where(chain_valid, table, NULL), mode="drop"
     )
-    # clear freed block slots so stale ids never leak into future scans
     old_rows = jnp.where(chain_valid, table, cfg.n_blocks)
     pool_ids = pool_ids.at[old_rows].set(NULL, mode="drop")
+    pool_live = pool_live.at[old_rows].set(jnp.uint8(0), mode="drop")
     next_block = next_block.at[old_rows].set(NULL, mode="drop")
     # ownership moves with the chain: the fresh run belongs to this cluster,
     # the recycled blocks belong to nobody (a stale owner would let the
     # in-kernel membership test admit a freed block)
     block_owner = state.block_owner.at[rows].set(
-        jnp.where(chain_valid, cluster, NULL), mode="drop"
+        jnp.where(blk_valid, cluster, NULL), mode="drop"
     )
     block_owner = block_owner.at[old_rows].set(NULL, mode="drop")
 
@@ -111,40 +182,68 @@ def rearrange_cluster(
         pool_payload=pool_payload,
         pool_ids=pool_ids,
         pool_scales=pool_scales,
+        pool_live=pool_live,
+        id_map=id_map,
         block_owner=block_owner,
         next_block=next_block,
         cluster_head=cluster_head,
         cluster_tail=cluster_tail,
         cluster_blocks=cluster_blocks,
+        cluster_nblocks=state.cluster_nblocks.at[cluster].set(new_nblk),
+        cluster_len=state.cluster_len.at[cluster].set(n_live),
+        dead_count=state.dead_count.at[cluster].set(0),
         new_since_rearrange=state.new_since_rearrange.at[cluster].set(0),
         free_stack=free_stack,
-        free_top=free_top + n_alloc,
-        cur_p=state.cur_p + n_alloc,
+        free_top=free_top + nblk,
+        cur_p=state.cur_p + jnp.where(bump_ok, new_nblk, 0),
     )
 
 
-def make_rearrange_fn(cfg: PoolConfig, threshold: int):
+def make_rearrange_fn(
+    cfg: PoolConfig, threshold: int, dead_frac: float = 0.3
+):
     """Jitted maintenance step: compact the single worst offender (if any).
 
     The paper runs rearrangement as a single-thread GPU pass over chains
     (Alg. 2 lines 23-28); we compact the cluster with the largest
     ``new_since_rearrange`` exceeding the threshold — callers loop while
     ``triggered`` (mirrors the one-block-at-a-time deployment note in §3.3).
+
+    A second trigger serves the mutation subsystem: any cluster whose
+    tombstoned fraction reaches ``dead_frac`` (and has at least one dead
+    slot) is compacted to reclaim the dead space, worst absolute
+    ``dead_count`` first — it takes priority over the insert statistic
+    because dead slots cost scan work *and* capacity until reclaimed.
     """
 
     @jax.jit
     def step(state: IVFState):
-        # compaction bump-allocates a contiguous run (it cannot use the free
-        # stack); clusters whose run no longer fits the bump region are
-        # masked out of the offender argmax — running off the pool would
-        # record out-of-range block ids (the silent-recall failure mode of
-        # an unchecked alloc_blocks), while gating the whole step on the
-        # single worst offender would stall maintenance for every smaller
-        # cluster that still fits
-        fits = state.cur_p + state.cluster_nblocks <= cfg.n_blocks
+        # A cluster is compactable when the fresh run fits the bump region
+        # (contiguous, preferred) OR the free stack holds enough recycled
+        # blocks (the reclamation fallback once the monotone bump pointer
+        # nears the pool end).  Unfit clusters are masked out of the
+        # offender argmax — running off the pool would record out-of-range
+        # block ids (the silent-recall failure mode of an unchecked
+        # alloc_blocks), while gating the whole step on the single worst
+        # offender would stall maintenance for every smaller cluster that
+        # still fits.  cluster_nblocks is an upper bound on the fresh run
+        # (tombstone-dropping can only shrink it).
+        fits = (
+            state.cur_p + state.cluster_nblocks <= cfg.n_blocks
+        ) | (state.free_top >= state.cluster_nblocks)
+        frac = state.dead_count.astype(jnp.float32) / jnp.maximum(
+            state.cluster_len, 1
+        ).astype(jnp.float32)
+        dstat = jnp.where(
+            fits & (frac >= dead_frac), state.dead_count, -1
+        )
+        worst_dead = jnp.argmax(dstat).astype(jnp.int32)
+        dead_trig = dstat[worst_dead] > 0
         stat = jnp.where(fits, state.new_since_rearrange, -1)
-        worst = jnp.argmax(stat).astype(jnp.int32)
-        triggered = stat[worst] > threshold
+        worst_stat = jnp.argmax(stat).astype(jnp.int32)
+        stat_trig = stat[worst_stat] > threshold
+        worst = jnp.where(dead_trig, worst_dead, worst_stat)
+        triggered = dead_trig | stat_trig
         new_state = rearrange_cluster(cfg, state, worst)
         out = jax.tree.map(
             lambda a, b: jnp.where(triggered, a, b), new_state, state

@@ -8,8 +8,13 @@ mechanisms (DESIGN.md §2, §5):
   rejection).  Slot scratch memory is implicit in JAX (each jitted search
   owns preallocated output buffers), the central-pool overflow grant is
   modelled by the shared device arena.
-* **Dedicated insert lane** — one thread owns the index state and applies
-  donated insert steps; the paper's single data stream.
+* **Dedicated mutation lane** — one thread owns the index state and applies
+  donated insert/delete/update steps; the paper's single data stream, grown
+  into a full mutation stream.  Deletes tombstone rows through the device
+  id map, updates tombstone + re-insert under the same id in one dispatch
+  (core.mutate), and arrival order is preserved: the lane batches
+  *consecutive runs of the same kind*, so delete-then-insert of an id can
+  never be reordered into insert-then-delete.
 * **Dynamic batcher** — inserts aggregate until ``flush_min`` (128) pending
   or ``flush_interval`` (1 s) elapsed, capped at ``flush_max`` (1024);
   search batches are capped at ``max_search_batch`` (10).  All paper §3.3
@@ -40,9 +45,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.block_pool import pool_stats
 from repro.core.insert import assign_clusters, insert_payload
 from repro.core.ivf import IVFIndex
 from repro.core.metrics import LatencyStats
+from repro.core.mutate import apply_delete, last_occurrence_mask
 from repro.core import pq as pqmod
 from repro.core.search import resolve_search_impl
 
@@ -56,6 +63,7 @@ class _Timed:
     future: Future
     t_arrival: float
     payload: object
+    kind: str = "insert"  # insert | delete | update (mutation lane kinds)
     t_done: float = 0.0
 
 
@@ -79,6 +87,12 @@ class RuntimeConfig:
     # latency samples kept for stats(); unbounded lists grow forever under
     # sustained traffic
     latency_window: int = 10_000
+    # run dead-space-reclaiming compaction passes on the mutation lane after
+    # a delete/update batch whenever a cluster crosses the dead-fraction
+    # trigger (see core.rearrange); off by default — maintenance cadence is
+    # a deployment decision
+    auto_compact: bool = False
+    compact_passes: int = 4
 
 
 class ServingRuntime:
@@ -104,7 +118,15 @@ class ServingRuntime:
         self._insert_lat: collections.deque = collections.deque(
             maxlen=cfg.latency_window
         )
+        self._mutation_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
         self._rejects = 0
+        # mutation-stream counters (rows applied, not batches)
+        self._n_inserts = 0
+        self._n_deletes = 0
+        self._n_updates = 0
+        self._n_compactions = 0
         self._fused_pending = queue.Queue()
         self._build_steps()
         self._threads = [
@@ -145,8 +167,26 @@ class ServingRuntime:
                 payload = pqmod.encode(pq, vectors - state.centroids[assign])
             return insert_payload(pc, state, assign, payload, ids, valid)
 
+        def _delete(state, ids, valid):
+            return apply_delete(pc, state, ids, valid)
+
+        def _update(state, vectors, ids, valid):
+            # tombstone + re-insert under the same id, one dispatch: no
+            # state where both (or neither) copy is visible can be observed;
+            # duplicate targets merged into one run re-insert last-write-wins
+            state = apply_delete(pc, state, ids, valid)
+            return _insert(state, vectors, ids,
+                           last_occurrence_mask(ids, valid))
+
+        # raw fns feed the fused (search+mutation) programs; jitted steps
+        # serve the standalone mutation lane
+        self._mutation_fns = {
+            "insert": _insert, "delete": _delete, "update": _update,
+        }
         self._insert_fn = _insert
         self._insert_step = jax.jit(_insert, donate_argnums=(0,))
+        self._delete_step = jax.jit(_delete, donate_argnums=(0,))
+        self._update_step = jax.jit(_update, donate_argnums=(0,))
 
     def _current_budget(self) -> int:
         """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
@@ -174,8 +214,13 @@ class ServingRuntime:
                 self._bucket(2 * self.index._chain_budget(), floor=1),
                 self.pool_cfg.max_chain,
             )
+            # _search_steps is keyed by budget, _fused_steps by
+            # (budget, mutation kind)
             for cache in (self._search_steps, self._fused_steps):
-                for stale in [b for b in cache if b < budget]:
+                for stale in [
+                    k for k in cache
+                    if (k[0] if isinstance(k, tuple) else k) < budget
+                ]:
                     del cache[stale]
             self._budget = budget
         return self._budget
@@ -198,19 +243,20 @@ class ServingRuntime:
             self._search_steps[budget] = jax.jit(self._make_search(budget))
         return self._search_steps[budget]
 
-    def _fused_step_for(self, budget: int):
-        if budget not in self._fused_steps:
+    def _fused_step_for(self, budget: int, kind: str = "insert"):
+        key = (budget, kind)
+        if key not in self._fused_steps:
             _search = self._make_search(budget)
-            _insert = self._insert_fn
+            _mutate = self._mutation_fns[kind]
 
-            def _fused(state, queries, qvalid, vectors, ids, ivalid):
+            def _fused(state, queries, qvalid, *m_args):
                 # two independent subgraphs; XLA overlaps them (multi-stream)
                 d, i = _search(state, queries, qvalid)
-                new_state = _insert(state, vectors, ids, ivalid)
+                new_state = _mutate(state, *m_args)
                 return new_state, d, i
 
-            self._fused_steps[budget] = jax.jit(_fused, donate_argnums=(0,))
-        return self._fused_steps[budget]
+            self._fused_steps[key] = jax.jit(_fused, donate_argnums=(0,))
+        return self._fused_steps[key]
 
     # ------------------------------------------------------------ API ----
     def submit_search(self, queries: np.ndarray) -> Future:
@@ -226,6 +272,31 @@ class ServingRuntime:
         self._insert_q.put(_Timed(fut, time.perf_counter(), vectors))
         return fut
 
+    def submit_delete(self, ids: np.ndarray) -> Future:
+        """Tombstone ids through the mutation lane.  Resolves with the ids
+        once the delete step has been applied (misses — unknown or already
+        deleted ids — are counted in the index state, not surfaced per
+        request: the batch is one fused dispatch)."""
+        fut = Future()
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        self._insert_q.put(
+            _Timed(fut, time.perf_counter(), ids, kind="delete")
+        )
+        return fut
+
+    def submit_update(self, vectors: np.ndarray, ids: np.ndarray) -> Future:
+        """Replace the vectors behind ``ids`` (tombstone + re-insert under
+        the same id, one dispatch).  Resolves with the ids once applied."""
+        vectors = np.atleast_2d(vectors)
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if len(ids) != len(vectors):
+            raise ValueError(f"{len(ids)} ids for {len(vectors)} vectors")
+        fut = Future()
+        self._insert_q.put(
+            _Timed(fut, time.perf_counter(), (vectors, ids), kind="update")
+        )
+        return fut
+
     def stop(self):
         self._stop.set()
         for t in self._threads:
@@ -235,15 +306,35 @@ class ServingRuntime:
         with self._lat_lock:
             search = tuple(self._search_lat)
             insert = tuple(self._insert_lat)
-        return {
+            mutation = tuple(self._mutation_lat)
+        out = {
             "search": LatencyStats.from_samples(search, timeout_ms),
             "insert": LatencyStats.from_samples(insert, timeout_ms),
+            "mutation": LatencyStats.from_samples(mutation, timeout_ms),
             "rejected": self._rejects,
+            "inserts": self._n_inserts,
+            "deletes": self._n_deletes,
+            "updates": self._n_updates,
+            "compactions": self._n_compactions,
         }
+        # live-occupancy gauges: allocated != occupied once tombstones exist
+        with self._state_lock:
+            out.update(pool_stats(self.index.state, self.pool_cfg))
+        return out
 
     # --------------------------------------------------------- workers ---
+    @staticmethod
+    def _n_rows(it: _Timed) -> int:
+        """Row count of a mutation item (vectors for insert, ids for
+        delete, paired (vectors, ids) for update)."""
+        if it.kind == "delete":
+            return len(np.atleast_1d(it.payload))
+        if it.kind == "update":
+            return len(np.atleast_2d(it.payload[0]))
+        return len(np.atleast_2d(it.payload))
+
     def _drain_inserts(self) -> list[_Timed]:
-        """Dynamic batching policy from §3.3.
+        """Dynamic batching policy from §3.3 over the mutation lane.
 
         A running row count is kept instead of re-concatenating every pending
         payload per queue pop (that was quadratic in batch size)."""
@@ -259,22 +350,28 @@ class ServingRuntime:
             except queue.Empty:
                 continue
             items.append(item)
-            pending_rows += len(np.atleast_2d(item.payload))
+            pending_rows += self._n_rows(item)
             if pending_rows >= self.cfg.flush_min:
                 break
         return items
 
     def _split_flush(self, items: list[_Timed]):
-        """Longest whole-item prefix within ``flush_max`` rows + overflow.
+        """Longest whole-item same-kind prefix within ``flush_max`` rows +
+        the remainder.
 
         Items are never split mid-payload (each future must resolve with its
         exact ids), so a single oversized item is dispatched alone and may
-        exceed the cap; overflow items are requeued, never dropped."""
+        exceed the cap.  A kind switch also ends the batch: runs of the same
+        kind dispatch as one fused step, and arrival order across kinds is
+        preserved (delete-then-insert of an id must never reorder).  The
+        remainder is applied next, never dropped."""
         take: list[_Timed] = []
         rows = 0
         for pos, it in enumerate(items):
-            n = len(np.atleast_2d(it.payload))
-            if take and rows + n > self.cfg.flush_max:
+            n = self._n_rows(it)
+            if take and (
+                rows + n > self.cfg.flush_max or it.kind != take[0].kind
+            ):
                 return take, items[pos:]
             take.append(it)
             rows += n
@@ -310,49 +407,112 @@ class ServingRuntime:
             if not it.future.done():
                 it.future.set_exception(exc)
 
-    def _apply_insert(self, items: list[_Timed]):
-        items, overflow = self._split_flush(items)
-        for it in overflow:  # beyond flush_max: requeue, never drop
-            self._insert_q.put(it)
-        try:
+    def _mutation_args(self, kind: str, items: list[_Timed]):
+        """Pack one same-kind run into the padded, fixed-shape device args
+        of its jitted step.  Returns (step_args, ids) — ids are the
+        per-row ids each future's slice resolves with (freshly assigned for
+        inserts, caller-provided for delete/update)."""
+        if kind == "insert":
             vecs = self._pending_vectors(items)
             b = len(vecs)
             ids = np.arange(
                 self.index._next_id, self.index._next_id + b, dtype=np.int32
             )
             self.index._next_id += b
-            bucket = self._bucket(b)
-            pv, valid = self._padded(vecs, bucket)
-            pids = np.full((bucket,), -1, np.int32)
-            pids[:b] = ids
+            pv, valid = self._padded(vecs, self._bucket(b))
+        elif kind == "delete":
+            ids = np.concatenate(
+                [np.atleast_1d(i.payload) for i in items]
+            ).astype(np.int32)
+            b = len(ids)
+            valid = np.zeros((self._bucket(b),), bool)
+            valid[:b] = True
+        else:  # update
+            vecs = np.concatenate(
+                [np.atleast_2d(i.payload[0]) for i in items], 0
+            )
+            ids = np.concatenate(
+                [np.atleast_1d(i.payload[1]) for i in items]
+            ).astype(np.int32)
+            b = len(ids)
+            pv, valid = self._padded(vecs, self._bucket(b))
+        pids = np.full((len(valid),), -1, np.int32)
+        pids[:b] = ids
+        if kind == "delete":
+            args = (jnp.asarray(pids), jnp.asarray(valid))
+        else:
+            args = (jnp.asarray(pv), jnp.asarray(pids), jnp.asarray(valid))
+        return args, ids
+
+    def _maybe_compact(self):
+        """Opportunistic dead-space reclamation on the mutation lane (the
+        caller holds no lock; passes run under it).  Uses the index's
+        rearrange step, whose trigger covers both the paper's insert
+        statistic and the mutation subsystem's dead-fraction threshold."""
+        fn = self.index._rearrange_fn
+        if fn is None:
+            return
+        for _ in range(max(self.cfg.compact_passes, 0)):
             with self._state_lock:
-                self.index.state = self._insert_step(
-                    self.index.state,
-                    jnp.asarray(pv),
-                    jnp.asarray(pids),
-                    jnp.asarray(valid),
-                )
+                self.index.state, triggered = fn(self.index.state)
+                self._budget = None  # compaction may shrink chains
+            if not bool(triggered):
+                break
+            self._n_compactions += 1
+
+    def _apply_run(self, items: list[_Timed]):
+        """Dispatch one same-kind run as one jitted step; same failure
+        discipline as the search path (no future may hang)."""
+        kind = items[0].kind
+        step = {
+            "insert": self._insert_step,
+            "delete": self._delete_step,
+            "update": self._update_step,
+        }[kind]
+        try:
+            args, ids = self._mutation_args(kind, items)
+            with self._state_lock:
+                self.index.state = step(self.index.state, *args)
                 st = self.index.state
                 self._budget = None  # chains may have grown
             jax.block_until_ready(st.cluster_len)
-            self._resolve_inserts(items, ids)
+            if kind == "insert":
+                self._n_inserts += len(ids)
+            elif kind == "delete":
+                self._n_deletes += len(ids)
+            else:
+                self._n_updates += len(ids)
+            self._resolve_mutations(items, ids)
+            # after the futures resolve: a compaction failure must not fail
+            # a mutation that already applied
+            if kind != "insert" and self.cfg.auto_compact:
+                self._maybe_compact()
         except Exception as e:
             self._fail_futures(items, e)
 
-    def _resolve_inserts(self, items: list[_Timed], ids: np.ndarray):
-        """Each future gets exactly the ids of its own vectors."""
+    def _apply_mutations(self, items: list[_Timed]):
+        """Apply a drained (possibly mixed-kind) item list run by run, in
+        arrival order."""
+        while items:
+            take, items = self._split_flush(items)
+            self._apply_run(take)
+
+    def _resolve_mutations(self, items: list[_Timed], ids: np.ndarray):
+        """Each future gets exactly the ids of its own rows."""
         t = time.perf_counter()
         off = 0
         for it in items:
-            n = len(np.atleast_2d(it.payload))
+            n = self._n_rows(it)
+            lat = self._insert_lat if it.kind == "insert" else \
+                self._mutation_lat
             with self._lat_lock:
-                self._insert_lat.append(t - it.t_arrival)
+                lat.append(t - it.t_arrival)
             it.future.set_result(ids[off : off + n])
             off += n
 
     def _insert_loop(self):
         if self.cfg.mode == "serial":
-            return  # serial mode: the search loop owns inserts too
+            return  # serial mode: the search loop owns mutations too
         while not self._stop.is_set():
             items = self._drain_inserts()
             if not items:
@@ -361,7 +521,7 @@ class ServingRuntime:
                 # hand the batch to the search loop for fused dispatch
                 self._fused_pending.put(items)
             else:
-                self._apply_insert(items)
+                self._apply_mutations(items)
 
     def _collect_search_batch(self) -> list[_Timed]:
         items: list[_Timed] = []
@@ -416,14 +576,12 @@ class ServingRuntime:
                     serial_insert_items.append(it)
                 except queue.Empty:
                     pass
-                n_pend = sum(
-                    len(np.atleast_2d(x.payload)) for x in serial_insert_items
-                )
+                n_pend = sum(self._n_rows(x) for x in serial_insert_items)
                 if serial_insert_items and (
                     n_pend >= self.cfg.flush_min
                     or time.perf_counter() - last_flush > self.cfg.flush_interval
                 ):
-                    self._apply_insert(serial_insert_items)
+                    self._apply_mutations(serial_insert_items)
                     serial_insert_items = []
                     last_flush = time.perf_counter()
             items = self._collect_search_batch()
@@ -435,47 +593,47 @@ class ServingRuntime:
                 if ins_items and items:
                     self._run_fused(items, ins_items)
                     continue
-                if ins_items:  # no search to pair with: standalone insert
-                    self._apply_insert(ins_items)
+                if ins_items:  # no search to pair with: standalone mutation
+                    self._apply_mutations(ins_items)
             if items:
                 self._run_search(items)
 
     def _run_fused(self, s_items: list[_Timed], i_items: list[_Timed]):
-        """One fused search+insert dispatch.  Same leak discipline as
-        ``_run_search``: a mid-step exception resolves every search *and*
-        insert future, and the search slots are released in the ``finally``
-        (requeued overflow items are excluded — they will be re-dispatched)."""
-        i_items, overflow = self._split_flush(i_items)
-        for it in overflow:  # beyond flush_max: requeue, never drop
-            self._insert_q.put(it)
+        """One fused search+mutation dispatch (the paper's multi-stream
+        mode, now covering insert *and* delete/update batches).  The first
+        same-kind run pairs with the search batch as ONE jitted program;
+        any remaining runs of the drained batch are applied right after, in
+        arrival order.  Same leak discipline as ``_run_search``: a mid-step
+        exception resolves every search *and* mutation future, and the
+        search slots are released in the ``finally``."""
+        i_items, rest = self._split_flush(i_items)
+        kind = i_items[0].kind
         try:
             qs = [np.atleast_2d(x.payload) for x in s_items]
             counts = [len(q) for q in qs]
             qbatch = np.concatenate(qs, 0)
-            vecs = self._pending_vectors(i_items)
-            b = len(vecs)
-            ids = np.arange(
-                self.index._next_id, self.index._next_id + b, dtype=np.int32
-            )
-            self.index._next_id += b
+            m_args, ids = self._mutation_args(kind, i_items)
             pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
-            pv, ivalid = self._padded(vecs, self._bucket(b))
-            pids = np.full((len(ivalid),), -1, np.int32)
-            pids[:b] = ids
             with self._state_lock:
-                fused_step = self._fused_step_for(self._current_budget())
+                fused_step = self._fused_step_for(
+                    self._current_budget(), kind
+                )
                 self.index.state, d, i = fused_step(
                     self.index.state,
                     jnp.asarray(pq_),
                     jnp.asarray(qvalid),
-                    jnp.asarray(pv),
-                    jnp.asarray(pids),
-                    jnp.asarray(ivalid),
+                    *m_args,
                 )
                 st = self.index.state
-                self._budget = None  # chains may have grown
+                self._budget = None  # chains may have grown or shrunk
             d, i = np.asarray(d), np.asarray(i)
             jax.block_until_ready(st.cluster_len)
+            if kind == "insert":
+                self._n_inserts += len(ids)
+            elif kind == "delete":
+                self._n_deletes += len(ids)
+            else:
+                self._n_updates += len(ids)
             t = time.perf_counter()
             off = 0
             for it, c in zip(s_items, counts):
@@ -483,10 +641,14 @@ class ServingRuntime:
                     self._search_lat.append(t - it.t_arrival)
                 it.future.set_result((d[off : off + c], i[off : off + c]))
                 off += c
-            self._resolve_inserts(i_items, ids)
+            self._resolve_mutations(i_items, ids)
+            if kind != "insert" and self.cfg.auto_compact:
+                self._maybe_compact()
         except Exception as e:
             self._fail_futures(s_items, e)
             self._fail_futures(i_items, e)
         finally:
             for _ in s_items:
                 self._slots.release()
+        if rest:  # later runs / overflow of the drained batch, in order
+            self._apply_mutations(rest)

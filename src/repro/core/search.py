@@ -43,6 +43,13 @@ probe slots are derived *inside* the fused kernels by comparing each
 candidate's prefetched owner (``IVFState.block_owner``, maintained
 incrementally by insert/rearrange) against the VMEM-resident ``[Q, NP]``
 probe list — per-query routing traffic is O(NP), not O(CB).
+
+Every path accounts for tombstones (``core.mutate``): the fused kernels
+stream ``IVFState.pool_live`` alongside the payload and force dead rows to
+``inf`` before the top-K' accumulator; the gather paths fold the live mask
+into their validity masks; the re-rank epilogue re-checks survivor
+locations against the mask (defense in depth).  A deleted id can therefore
+never surface from any impl, and k > live returns the usual (inf, -1) tail.
 """
 
 from __future__ import annotations
@@ -110,7 +117,10 @@ def gather_candidate_blocks(
     safe = jnp.where(flat == NULL, 0, flat)
     payload = state.pool_payload[safe]
     ids = state.pool_ids[safe]
-    valid = (flat != NULL)[..., None] & (ids != NULL)
+    # tombstoned rows keep a stale id until compaction — the live mask, not
+    # id validity, decides whether a slot may score
+    live = state.pool_live[safe] != 0
+    valid = (flat != NULL)[..., None] & (ids != NULL) & live
     return payload, ids, valid
 
 
@@ -201,7 +211,8 @@ def search_chain_walk(
             ).reshape(ids.shape)
         else:
             scores = score_fn(state, queries, payload, probe_idx)
-        alive = (cur != NULL)[..., None] & (ids != NULL)
+        live = state.pool_live[safe] != 0
+        alive = (cur != NULL)[..., None] & (ids != NULL) & live
         scores = jnp.where(alive, scores, INF)
         cat_d = jnp.concatenate([best_d, scores.reshape(q, -1)], axis=1)
         cat_i = jnp.concatenate([best_i, ids.reshape(q, -1)], axis=1)
@@ -336,9 +347,11 @@ def search_union(
         from repro.kernels.ref import ivf_block_scan_ref
 
         scores = ivf_block_scan_ref(queries, state.pool_payload, flat_blocks)
-    # scores [CB, Q, T] -> mask holes, non-membership, empty slots
+    # scores [CB, Q, T] -> mask holes, non-membership, empty slots, and
+    # tombstones (dead rows keep a stale id until compaction)
     ids = state.pool_ids[jnp.maximum(flat_blocks, 0)]  # [CB, T]
-    slot_ok = (flat_blocks != NULL)[:, None] & (ids != NULL)  # [CB, T]
+    live = state.pool_live[jnp.maximum(flat_blocks, 0)] != 0  # [CB, T]
+    slot_ok = (flat_blocks != NULL)[:, None] & (ids != NULL) & live
     member_b = (
         uc.probe_idx[:, :, None] == uc.owners[None, None, :]
     ).any(axis=1)  # [Q, CB] (an XLA compare — fine outside the kernels)
@@ -377,6 +390,15 @@ def _rerank_dispatch(queries, rows, scales, loc, scan_impl):
     return rerank_topk_ref(queries, rows, scales, loc)
 
 
+def _live_locs(state, loc):
+    """Invalidate survivor locations whose slot is no longer live.  The
+    first pass already masks tombstones in-kernel, so this is pure defense
+    in depth — it makes 'a deleted id can never leave the epilogue' a local
+    property of the re-rank instead of a cross-kernel invariant."""
+    live = state.pool_live.reshape(-1)[jnp.clip(loc, 0)] != 0
+    return jnp.where((loc != NULL) & live, loc, NULL)
+
+
 def _rerank_flat(cfg, state, queries, loc, scan_impl):
     """Exact-fp32 re-rank of flat-payload survivors: gather the K' rows by
     packed location (one XLA gather), then fused dequant + distance +
@@ -384,6 +406,7 @@ def _rerank_flat(cfg, state, queries, loc, scan_impl):
     cluster's centroid is added back before scoring.  Returns
     ([Q, K'] dists asc, [Q, K'] locs)."""
     p, t = state.pool_ids.shape
+    loc = _live_locs(state, loc)
     safe = jnp.clip(loc, 0)
     rows = state.pool_payload.reshape(p * t, -1)[safe]  # [Q, K', D]
     scales = jnp.ones(loc.shape, jnp.float32)
@@ -403,6 +426,7 @@ def _rerank_pq(cfg, state, pq, queries, loc, scan_impl):
     from repro.core import pq as pqmod
 
     p, t = state.pool_ids.shape
+    loc = _live_locs(state, loc)
     safe = jnp.clip(loc, 0)
     codes = state.pool_payload.reshape(p * t, -1)[safe]  # [Q, K', M]
     cent = state.centroids[jnp.maximum(state.block_owner[safe // t], 0)]
@@ -455,21 +479,21 @@ def search_union_fused(
 
             d, i = ivf_pq_block_topk(
                 lut, state.pool_payload, flat_blocks, owners,
-                state.pool_ids, probe_idx, kprime=kp,
+                state.pool_ids, state.pool_live, probe_idx, kprime=kp,
             )
         elif scan_impl == "scan":
             from repro.kernels.ivf_scan import ivf_pq_block_topk_scan
 
             d, i = ivf_pq_block_topk_scan(
                 lut, state.pool_payload, flat_blocks, owners,
-                state.pool_ids, probe_idx, kprime=kp,
+                state.pool_ids, state.pool_live, probe_idx, kprime=kp,
             )
         else:
             from repro.kernels.ref import ivf_pq_block_topk_ref
 
             d, i = ivf_pq_block_topk_ref(
                 lut, state.pool_payload, flat_blocks, owners,
-                state.pool_ids, probe_idx, kprime=kp,
+                state.pool_ids, state.pool_live, probe_idx, kprime=kp,
             )
     elif cfg.has_scales:
         # int8 residual payload: quantize the per-probe query residuals
@@ -483,42 +507,45 @@ def search_union_fused(
 
             d, i = ivf_block_topk_int8(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
+                flat_blocks, owners, state.pool_ids, state.pool_live,
+                probe_idx, kprime=kp,
             )
         elif scan_impl == "scan":
             from repro.kernels.ivf_scan import ivf_block_topk_int8_scan
 
             d, i = ivf_block_topk_int8_scan(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
+                flat_blocks, owners, state.pool_ids, state.pool_live,
+                probe_idx, kprime=kp,
             )
         else:
             from repro.kernels.ref import ivf_block_topk_int8_ref
 
             d, i = ivf_block_topk_int8_ref(
                 q_codes, q_meta, state.pool_payload, state.pool_scales,
-                flat_blocks, owners, state.pool_ids, probe_idx, kprime=kp,
+                flat_blocks, owners, state.pool_ids, state.pool_live,
+                probe_idx, kprime=kp,
             )
     elif scan_impl == "pallas":
         from repro.kernels.ops import ivf_block_topk
 
         d, i = ivf_block_topk(
             queries, state.pool_payload, flat_blocks, owners,
-            state.pool_ids, probe_idx, kprime=kp,
+            state.pool_ids, state.pool_live, probe_idx, kprime=kp,
         )
     elif scan_impl == "scan":
         from repro.kernels.ivf_scan import ivf_block_topk_scan
 
         d, i = ivf_block_topk_scan(
             queries, state.pool_payload, flat_blocks, owners,
-            state.pool_ids, probe_idx, kprime=kp,
+            state.pool_ids, state.pool_live, probe_idx, kprime=kp,
         )
     else:
         from repro.kernels.ref import ivf_block_topk_ref
 
         d, i = ivf_block_topk_ref(
             queries, state.pool_payload, flat_blocks, owners,
-            state.pool_ids, probe_idx, kprime=kp,
+            state.pool_ids, state.pool_live, probe_idx, kprime=kp,
         )
     # the fused kernels emit packed pool locations (block*T + offset,
     # derived in-kernel from the prefetched block id at zero HBM cost)

@@ -69,6 +69,13 @@ the older interface no longer exist.  Probe lists hold distinct cluster
 ids (a top-``nprobe`` cannot repeat), so at most one slot matches.  Owner
 -1 (NULL candidate padding, free blocks) matches no probe and is masked in
 the fused epilogue together with empty (-1) id slots.
+
+Tombstones (the online-mutation subsystem): every fused kernel streams the
+block's ``[1, T]`` u8 **live-mask** tile alongside the payload
+(``IVFState.pool_live``; a deleted row keeps its slot — and its stale id —
+until compaction, so the id channel alone cannot distinguish dead from
+live) and forces dead rows to ``inf`` before the top-K' merge.  O(T) extra
+bytes per block, negligible next to the ``[T, D]`` payload.
 """
 
 from __future__ import annotations
@@ -310,6 +317,7 @@ def _topk_kernel(
     probe_ref,  # [Q_t, NP] i32 probed cluster ids of the query tile
     pool_ref,  # [T, D] current candidate block
     pid_ref,  # [1, T] i32 vector ids of the block
+    live_ref,  # [1, T] u8 live mask of the block (0 = empty or tombstoned)
     out_d_ref,  # [Q_t, K']
     out_i_ref,  # [Q_t, K'] i32
     acc_d_ref,  # VMEM scratch [Q_t, K'] running best distances
@@ -343,8 +351,9 @@ def _topk_kernel(
         probe_ref[:] == own_ref[ci], axis=1, keepdims=True
     )  # [Q_t, 1]
     # fused epilogue: invalid slots (hole block, non-member query, empty
-    # NULL-id slot) never leave the kernel
-    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    # NULL-id slot, tombstoned row) never leave the kernel — the streamed
+    # [1, T] live tile costs O(T) bytes next to the [T, D] payload
+    ok = member & (pid_ref[:] != -1) & (live_ref[:] != 0)
     scores = jnp.where(ok, scores, jnp.inf)
     # candidates carry their packed pool location (block*T + offset),
     # derived from the prefetched block id at zero HBM cost — it decodes
@@ -379,6 +388,7 @@ def ivf_block_topk(
     block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -424,6 +434,7 @@ def ivf_block_topk(
                 (None, t, d), lambda qi, ci, ids, own: (ids[ci], 0, 0)
             ),
             pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
             pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
@@ -443,7 +454,7 @@ def ivf_block_topk(
         ],
         interpret=interpret,
     )(safe_ids, block_owners.astype(jnp.int32), queries, probe_idx,
-      pool, pool_ids)
+      pool, pool_ids, pool_live.astype(jnp.uint8))
     return out_d[:q], out_i[:q]
 
 
@@ -454,6 +465,7 @@ def ivf_block_topk_scan(
     block_ids: jax.Array,  # [C] i32
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -486,6 +498,7 @@ def ivf_block_topk_scan(
         )  # [Q, chunk]
         blocks = pool[sc]  # [chunk, T, D] payload dtype (f32 | bf16)
         vids = pool_ids[sc]  # [chunk, T]
+        lives = pool_live[sc] != 0  # [chunk, T]
         bf = blocks.astype(jnp.float32)
         vn = jnp.sum(bf * bf, axis=-1)  # [chunk, T]
         dots = jnp.einsum(
@@ -494,7 +507,7 @@ def ivf_block_topk_scan(
         )
         scores = qn + vn[None, :, :] - 2.0 * dots  # [Q, chunk, T]
         locs = sc[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
-        okf = ok[:, :, None] & (vids != -1)[None, :, :]
+        okf = ok[:, :, None] & ((vids != -1) & lives)[None, :, :]
         scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
         cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
         cat_d = jnp.concatenate([acc_d, scores], axis=1)
@@ -570,6 +583,7 @@ def _topk_int8_kernel(
     pool_ref,  # [T, D] i8 current candidate code block
     scale_ref,  # [1, T] f32 per-vector dequant scales of the block
     pid_ref,  # [1, T] i32 vector ids of the block
+    live_ref,  # [1, T] u8 live mask of the block (0 = empty or tombstoned)
     out_d_ref,  # [Q_t, K']
     out_i_ref,  # [Q_t, K'] i32
     acc_d_ref,  # VMEM scratch [Q_t, K']
@@ -613,7 +627,7 @@ def _topk_int8_kernel(
     vterm = (sv * sv) * cn  # [1, T]
     coef = sq * sv  # [Q_t, T]
     scores = _int8_scores(qn, vterm, coef, dots.astype(jnp.float32))
-    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    ok = member & (pid_ref[:] != -1) & (live_ref[:] != 0)
     scores = jnp.where(ok, scores, jnp.inf)
     t = scores.shape[1]
     loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
@@ -644,6 +658,7 @@ def ivf_block_topk_int8(
     block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -685,6 +700,7 @@ def ivf_block_topk_int8(
             ),
             pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
             pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
             pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
@@ -704,7 +720,7 @@ def ivf_block_topk_int8(
         ],
         interpret=interpret,
     )(safe_ids, block_owners.astype(jnp.int32), q_codes, q_meta, probe_idx,
-      pool, pool_scales, pool_ids)
+      pool, pool_scales, pool_ids, pool_live.astype(jnp.uint8))
     return out_d[:q], out_i[:q]
 
 
@@ -717,6 +733,7 @@ def ivf_block_topk_int8_scan(
     block_ids: jax.Array,  # [C] i32
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -751,6 +768,7 @@ def ivf_block_topk_int8_scan(
         codes = pool[sc]  # [chunk, T, D] i8
         svs = pool_scales[sc]  # [chunk, T]
         vids = pool_ids[sc]  # [chunk, T]
+        lives = pool_live[sc] != 0  # [chunk, T]
         sel = jnp.clip(ps, 0)  # [Q, chunk]
         qsel = jnp.take_along_axis(
             qci, sel[:, :, None], axis=1
@@ -769,7 +787,7 @@ def ivf_block_topk_int8_scan(
         )
         t_ = vids.shape[1]
         locs = sc[:, None] * t_ + jnp.arange(t_, dtype=jnp.int32)[None, :]
-        okf = (ps != -1)[:, :, None] & (vids != -1)[None, :, :]
+        okf = (ps != -1)[:, :, None] & ((vids != -1) & lives)[None, :, :]
         scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
         cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
         cat_d = jnp.concatenate([acc_d, scores], axis=1)
@@ -878,6 +896,7 @@ def _pq_topk_kernel(
     probe_ref,  # [Q_t, NP] i32 probed cluster ids of the query tile
     codes_ref,  # [T, M] uint8 current candidate code block
     pid_ref,  # [1, T] i32 vector ids of the block
+    live_ref,  # [1, T] u8 live mask of the block (0 = empty or tombstoned)
     out_d_ref,  # [Q_t, K']
     out_i_ref,  # [Q_t, K'] i32
     acc_d_ref,  # VMEM scratch [Q_t, K'] running best distances
@@ -921,8 +940,9 @@ def _pq_topk_kernel(
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )  # [Q_t, T]
-    # fused epilogue: non-member queries, hole blocks, empty NULL-id slots
-    ok = member & (pid_ref[:] != -1)  # [Q_t,1] & [1,T] -> [Q_t,T]
+    # fused epilogue: non-member queries, hole blocks, empty NULL-id slots,
+    # tombstoned rows
+    ok = member & (pid_ref[:] != -1) & (live_ref[:] != 0)
     scores = jnp.where(ok, scores, jnp.inf)
     loc_row = ids_ref[ci] * t + jax.lax.broadcasted_iota(
         jnp.int32, (1, t), 1
@@ -950,6 +970,7 @@ def ivf_pq_block_topk(
     block_ids: jax.Array,  # [C] i32 (-1 holes; masked via block_owners)
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32 vector ids (-1 = empty slot)
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -990,6 +1011,7 @@ def ivf_pq_block_topk(
                 (None, t, m), lambda qi, ci, ids, own: (ids[ci], 0, 0)
             ),
             pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
+            pl.BlockSpec((1, t), lambda qi, ci, ids, own: (ids[ci], 0)),
         ],
         out_specs=[
             pl.BlockSpec((qt, kprime), lambda qi, ci, ids, own: (qi, 0)),
@@ -1009,7 +1031,7 @@ def ivf_pq_block_topk(
         ],
         interpret=interpret,
     )(safe_ids, block_owners.astype(jnp.int32), lut, probe_idx,
-      pool_codes, pool_ids)
+      pool_codes, pool_ids, pool_live.astype(jnp.uint8))
     return out_d[:q], out_i[:q]
 
 
@@ -1020,6 +1042,7 @@ def ivf_pq_block_topk_scan(
     block_ids: jax.Array,  # [C] i32
     block_owners: jax.Array,  # [C] i32 owning cluster (-1 = NULL slot)
     pool_ids: jax.Array,  # [P, T] i32
+    pool_live: jax.Array,  # [P, T] u8 live mask (0 = empty/tombstoned)
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -1052,6 +1075,7 @@ def ivf_pq_block_topk_scan(
         )  # [Q, chunk] probe slot, -1 = non-member / NULL slot
         codes = pool_codes[sc].astype(jnp.int32)  # [chunk, T, M]
         vids = pool_ids[sc]  # [chunk, T]
+        lives = pool_live[sc] != 0  # [chunk, T]
         lq = jnp.take_along_axis(
             lut, jnp.clip(ps, 0)[:, :, None, None], axis=1
         )  # [Q, chunk, M, K]
@@ -1062,7 +1086,7 @@ def ivf_pq_block_topk_scan(
         )[..., 0]  # [Q, chunk, T, M]
         scores = jnp.sum(gathered, axis=-1)  # [Q, chunk, T]
         locs = sc[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
-        okf = (ps != -1)[:, :, None] & (vids != -1)[None, :, :]
+        okf = (ps != -1)[:, :, None] & ((vids != -1) & lives)[None, :, :]
         scores = jnp.where(okf, scores, jnp.inf).reshape(q, -1)
         cids = jnp.where(okf, jnp.broadcast_to(locs, okf.shape), -1)
         cat_d = jnp.concatenate([acc_d, scores], axis=1)

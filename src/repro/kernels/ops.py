@@ -44,27 +44,29 @@ def ivf_block_scan(queries, pool, block_ids):
 
 
 def ivf_block_topk(queries, pool, block_ids, block_owners, pool_ids,
-                   probe_idx, *, kprime, q_tile: int = 128):
+                   pool_live, probe_idx, *, kprime, q_tile: int = 128):
     """Fused streaming selection: [Q,D] x [P,T,D] x [C] -> ([Q,K'], [Q,K'])
     (ascending dists, vector ids) without materializing [C,Q,T];
     membership is derived in-kernel from each candidate's owner and the
-    [Q,NP] probe list."""
+    [Q,NP] probe list, and tombstoned rows are masked via the streamed
+    [P,T] live mask."""
     return _ivf_block_topk(
-        queries, pool, block_ids, block_owners, pool_ids, probe_idx,
-        kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+        queries, pool, block_ids, block_owners, pool_ids, pool_live,
+        probe_idx, kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 
 
 def ivf_block_topk_int8(q_codes, q_meta, pool, pool_scales, block_ids,
-                        block_owners, pool_ids, probe_idx, *, kprime,
-                        q_tile: int = 128):
+                        block_owners, pool_ids, pool_live, probe_idx, *,
+                        kprime, q_tile: int = 128):
     """int8 fused streaming selection: [Q,NP,D] i8 per-probe query residual
     codes contracted against [P,T,D] i8 residual codes on the integer MXU
     -> ([Q,K'], [Q,K']) without materializing [C,Q,T] or dequantizing any
-    block; the probe slot is derived in-kernel from the candidate owner."""
+    block; the probe slot is derived in-kernel from the candidate owner and
+    tombstones are masked via the streamed live mask."""
     return _ivf_block_topk_int8(
         q_codes, q_meta, pool, pool_scales, block_ids, block_owners,
-        pool_ids, probe_idx,
+        pool_ids, pool_live, probe_idx,
         kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 
@@ -78,13 +80,14 @@ def rerank_topk(queries, rows, scales, loc, *, q_tile: int = 8):
 
 
 def ivf_pq_block_topk(lut, pool_codes, block_ids, block_owners, pool_ids,
-                      probe_idx, *, kprime, q_tile: int = 8):
+                      pool_live, probe_idx, *, kprime, q_tile: int = 8):
     """PQ-ADC fused streaming selection: [Q,NP,M,K] LUTs x [P,T,M] u8 codes
     -> ([Q,K'], [Q,K']) without materializing [C,Q,T]; the LUT-selecting
-    probe slot is derived in-kernel from the candidate owner."""
+    probe slot is derived in-kernel from the candidate owner and tombstones
+    are masked via the streamed live mask."""
     return _ivf_pq_block_topk(
-        lut, pool_codes, block_ids, block_owners, pool_ids, probe_idx,
-        kprime=kprime, q_tile=q_tile, interpret=_interpret(),
+        lut, pool_codes, block_ids, block_owners, pool_ids, pool_live,
+        probe_idx, kprime=kprime, q_tile=q_tile, interpret=_interpret(),
     )
 
 

@@ -68,21 +68,23 @@ def ivf_block_topk_ref(
     block_ids: jax.Array,  # [C] i32, -1 = hole
     block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    pool_live: jax.Array,  # [P, T] u8 live mask, 0 = empty/tombstoned
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
 ) -> tuple[jax.Array, jax.Array]:  # ([Q, K'] dist asc, [Q, K'] locations)
     """Oracle for the fused streaming top-k scan: materialize everything,
-    derive membership from the candidate owners, mask, and sort — the id
-    channel carries packed pool locations
+    derive membership from the candidate owners, mask (holes, empty slots,
+    tombstones), and sort — the id channel carries packed pool locations
     (``block*T + offset``); invalid slots come back as (inf, -1)."""
     scores = ivf_block_scan_ref(queries, pool, block_ids)  # [C, Q, T]
     safe = jnp.maximum(block_ids, 0)
     t = pool_ids.shape[1]
     vids = pool_ids[safe]  # [C, T]
+    lives = pool_live[safe] != 0  # [C, T]
     locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
     cand_ok = _pslot_from_owners(probe_idx, block_owners) != -1  # [Q, C]
-    ok = cand_ok[:, :, None] & (vids != -1)[None, :, :]
+    ok = cand_ok[:, :, None] & ((vids != -1) & lives)[None, :, :]
     q = queries.shape[0]
     flat_d = jnp.where(ok, jnp.transpose(scores, (1, 0, 2)), jnp.inf)
     flat_d = flat_d.reshape(q, -1)
@@ -105,6 +107,7 @@ def ivf_block_topk_int8_ref(
     block_ids: jax.Array,  # [C] i32, -1 = hole
     block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    pool_live: jax.Array,  # [P, T] u8 live mask, 0 = empty/tombstoned
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -122,6 +125,7 @@ def ivf_block_topk_int8_ref(
     codes = pool[safe].astype(jnp.int32)  # [C, T, D]
     svs = pool_scales[safe]  # [C, T]
     vids = pool_ids[safe]  # [C, T]
+    lives = pool_live[safe] != 0  # [C, T]
     t = pool_ids.shape[1]
     locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
     sel = jnp.clip(pslot, 0)  # [Q, C]
@@ -137,7 +141,7 @@ def ivf_block_topk_int8_ref(
     scores = _int8_scores(
         qn[:, :, None], vterm[None], coef, dots.astype(jnp.float32)
     )
-    ok = (pslot != -1)[:, :, None] & (vids != -1)[None, :, :]
+    ok = (pslot != -1)[:, :, None] & ((vids != -1) & lives)[None, :, :]
     flat_d = jnp.where(ok, scores, jnp.inf).reshape(q, -1)
     flat_i = jnp.where(ok, jnp.broadcast_to(locs[None], ok.shape), -1)
     flat_i = flat_i.reshape(q, -1)
@@ -177,6 +181,7 @@ def ivf_pq_block_topk_ref(
     block_ids: jax.Array,  # [C] i32, -1 = hole
     block_owners: jax.Array,  # [C] i32 owning cluster, -1 = NULL slot
     pool_ids: jax.Array,  # [P, T] i32 vector ids, -1 = empty slot
+    pool_live: jax.Array,  # [P, T] u8 live mask, 0 = empty/tombstoned
     probe_idx: jax.Array,  # [Q, NP] i32 distinct probed clusters per query
     *,
     kprime: int,
@@ -191,6 +196,7 @@ def ivf_pq_block_topk_ref(
     safe = jnp.maximum(block_ids, 0)
     codes = pool_codes[safe].astype(jnp.int32)  # [C, T, M]
     vids = pool_ids[safe]  # [C, T]
+    lives = pool_live[safe] != 0  # [C, T]
     t = pool_ids.shape[1]
     locs = safe[:, None] * t + jnp.arange(t, dtype=jnp.int32)[None, :]
     lq = jnp.take_along_axis(
@@ -202,7 +208,7 @@ def ivf_pq_block_topk_ref(
         axis=-1,
     )[..., 0]  # [Q, C, T, M]
     scores = jnp.sum(gathered, axis=-1)  # [Q, C, T]
-    ok = (pslot != -1)[:, :, None] & (vids != -1)[None, :, :]
+    ok = (pslot != -1)[:, :, None] & ((vids != -1) & lives)[None, :, :]
     flat_d = jnp.where(ok, scores, jnp.inf).reshape(q, -1)
     flat_i = jnp.where(ok, jnp.broadcast_to(locs[None], ok.shape), -1)
     flat_i = flat_i.reshape(q, -1)

@@ -35,11 +35,12 @@ def test_ivf_block_scan_matches_ref(q, d, p, t, c):
 
 
 def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
-                 ncl=8, nprobe=6):
+                 ncl=8, nprobe=6, dead_frac=0.2):
     """Union-scan shaped inputs: hole blocks (-1 in the NULL-padded union),
-    empty (-1) id slots, and owner/probe-list routing (membership is
-    derived in-kernel: a query owns a candidate iff its distinct probe
-    list contains the candidate's owner; NULL slots own -1)."""
+    empty (-1) id slots, tombstoned (live == 0) rows, and owner/probe-list
+    routing (membership is derived in-kernel: a query owns a candidate iff
+    its distinct probe list contains the candidate's owner; NULL slots own
+    -1)."""
     rng = np.random.default_rng(seed)
     queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
     pool = jnp.asarray(rng.normal(size=(p, t, d)), jnp.float32)
@@ -47,13 +48,16 @@ def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ids[rng.random(c) < hole_frac] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
+    # occupied rows are live unless tombstoned (deleted rows keep their id)
+    live = (pool_ids != -1) & (rng.random((p, t)) >= dead_frac)
     owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
     owners[ids == -1] = -1  # NULL slots own nothing
     probe = np.stack(
         [rng.permutation(ncl)[:nprobe] for _ in range(q)]
     ).astype(np.int32)
     return (queries, pool, jnp.asarray(ids), jnp.asarray(owners),
-            jnp.asarray(pool_ids), jnp.asarray(probe))
+            jnp.asarray(pool_ids), jnp.asarray(live.astype(np.uint8)),
+            jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -67,23 +71,31 @@ def _topk_inputs(q, d, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ],
 )
 def test_ivf_block_topk_matches_ref(q, d, p, t, c, kp):
-    queries, pool, ids, owners, pool_ids, probe = _topk_inputs(
+    queries, pool, ids, owners, pool_ids, live, probe = _topk_inputs(
         q, d, p, t, c, seed=q + c
     )
     want_d, want_i = ref.ivf_block_topk_ref(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp,
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp,
         interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_scan(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp, chunk=4
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp,
+        chunk=4,
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(sc_i, want_i)
+    # tombstoned locations never appear in any impl's survivor set
+    dead_locs = np.flatnonzero(
+        (np.asarray(pool_ids).ravel() != -1)
+        & (np.asarray(live).ravel() == 0)
+    )
+    for out in (want_i, got_i, sc_i):
+        assert not np.isin(np.asarray(out), dead_locs).any()
 
 
 def test_ivf_block_topk_all_holes_returns_inf():
@@ -95,9 +107,10 @@ def test_ivf_block_topk_all_holes_returns_inf():
     ids = jnp.full((c,), -1, jnp.int32)
     owners = jnp.full((c,), -1, jnp.int32)  # NULL slots own nothing
     pool_ids = jnp.zeros((p, t), jnp.int32)
+    live = jnp.ones((p, t), jnp.uint8)
     probe = jnp.asarray(rng.integers(0, 4, size=(q, 3)), jnp.int32)
     d_out, i_out = ivf_block_topk(
-        queries, pool, ids, owners, pool_ids, probe, kprime=8,
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=8,
         interpret=True,
     )
     assert np.isinf(np.asarray(d_out)).all()

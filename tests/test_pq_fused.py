@@ -36,13 +36,14 @@ def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ids[rng.random(c) < hole_frac] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < empty_frac] = -1  # empty slots
+    live = (pool_ids != -1).astype(np.uint8)
     owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
     owners[ids == -1] = -1  # hole blocks are invalid for every query
     probe = np.stack(
         [rng.permutation(ncl)[:npb] for _ in range(q)]
     ).astype(np.int32)
     return (lut, codes, jnp.asarray(ids), jnp.asarray(owners),
-            jnp.asarray(pool_ids), jnp.asarray(probe))
+            jnp.asarray(pool_ids), jnp.asarray(live), jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -55,19 +56,20 @@ def _pq_topk_inputs(q, npb, m, p, t, c, seed, hole_frac=0.25, empty_frac=0.3,
     ],
 )
 def test_ivf_pq_block_topk_matches_ref(q, npb, m, p, t, c, kp):
-    lut, codes, ids, owners, pool_ids, probe = _pq_topk_inputs(
+    lut, codes, ids, owners, pool_ids, live, probe = _pq_topk_inputs(
         q, npb, m, p, t, c, seed=q * 10 + c
     )
     want_d, want_i = ref.ivf_pq_block_topk_ref(
-        lut, codes, ids, owners, pool_ids, probe, kprime=kp
+        lut, codes, ids, owners, pool_ids, live, probe, kprime=kp
     )
     got_d, got_i = ivf_pq_block_topk(
-        lut, codes, ids, owners, pool_ids, probe, kprime=kp, interpret=True
+        lut, codes, ids, owners, pool_ids, live, probe, kprime=kp,
+        interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-3)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_pq_block_topk_scan(
-        lut, codes, ids, owners, pool_ids, probe, kprime=kp, chunk=4
+        lut, codes, ids, owners, pool_ids, live, probe, kprime=kp, chunk=4
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-3)
     np.testing.assert_array_equal(sc_i, want_i)
@@ -77,7 +79,7 @@ def test_ivf_pq_block_topk_ref_matches_adc_accumulate():
     """The ref oracle is itself checked against core.pq.adc_accumulate (the
     acceptance oracle): per-candidate LUT rows fed through the jnp ADC."""
     q, npb, m, p, t, c, kp = 6, 4, 8, 5, 8, 6, 8
-    lut, codes, ids, owners, pool_ids, probe = _pq_topk_inputs(
+    lut, codes, ids, owners, pool_ids, live, probe = _pq_topk_inputs(
         q, npb, m, p, t, c, seed=77
     )
     # expand the owner/probe routing to the dense probe-slot index the
@@ -93,7 +95,7 @@ def test_ivf_pq_block_topk_ref_matches_adc_accumulate():
     flat = np.where(np.asarray(ok), np.asarray(d_acc), np.inf).reshape(q, -1)
     want = np.sort(flat, axis=1)[:, :kp]
     got_d, _ = ref.ivf_pq_block_topk_ref(
-        lut, codes, ids, owners, pool_ids, probe, kprime=kp
+        lut, codes, ids, owners, pool_ids, live, probe, kprime=kp
     )
     np.testing.assert_allclose(got_d, want, rtol=1e-5, atol=1e-3)
 
@@ -106,9 +108,11 @@ def test_ivf_pq_block_topk_all_invalid_returns_inf():
     ids = jnp.full((c,), -1, jnp.int32)
     owners = jnp.full((c,), -1, jnp.int32)
     pool_ids = jnp.zeros((p, t), jnp.int32)
+    live = jnp.ones((p, t), jnp.uint8)
     probe = jnp.asarray(rng.integers(0, 4, size=(q, npb)), jnp.int32)
     d, i = ivf_pq_block_topk(
-        lut, codes, ids, owners, pool_ids, probe, kprime=8, interpret=True
+        lut, codes, ids, owners, pool_ids, live, probe, kprime=8,
+        interpret=True,
     )
     assert np.isinf(np.asarray(d)).all()
     assert (np.asarray(i) == -1).all()

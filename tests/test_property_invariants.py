@@ -6,6 +6,11 @@ Properties of the paper's Alg. 2/3 that must hold for ANY insert sequence:
 * search-over-insert consistency — full-probe search always finds a just-
   inserted vector as its own nearest neighbour;
 * rearrangement is a no-op on results.
+
+Plus the mutation subsystem's property (marked ``mutation``, own CI slice):
+random insert/delete/update/rearrange/search interleavings vs a host-side
+dict oracle — surviving ids match exactly, deleted ids never surface,
+across the fused dtypes x rerank.
 """
 
 import numpy as np
@@ -18,6 +23,7 @@ from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E
 
 from repro.core.block_pool import PoolConfig, check_invariants, init_state, snapshot_ids
 from repro.core.insert import assign_clusters, make_insert_fn
+from repro.core.mutate import make_delete_fn, make_update_fn
 from repro.core.rearrange import make_rearrange_fn
 from repro.core.search import make_search_fn
 
@@ -107,3 +113,109 @@ def test_rearrange_never_changes_results(seed):
     d1, i1 = search(state, q)
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5, atol=1e-5)
     assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Mutation subsystem property: random interleavings vs a dict oracle
+# (own CI slice — fused scans over every op interleaving are not tier-1
+# cheap).
+# ---------------------------------------------------------------------------
+
+# op stream: each entry is (kind, size); parameters are derived from the
+# per-example rng so hypothesis shrinks over structure, not raw data
+ops = st.lists(
+    st.tuples(
+        st.sampled_from(["insert", "delete", "update", "rearrange", "search"]),
+        st.integers(min_value=1, max_value=12),
+    ),
+    min_size=3,
+    max_size=10,
+)
+
+
+@pytest.mark.mutation
+@pytest.mark.parametrize(
+    "dtype,rerank",
+    [("float32", False), ("bfloat16", False), ("int8", False),
+     ("int8", True)],
+)
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(script=ops, seed=st.integers(0, 2**16))
+def test_mutation_interleavings_match_dict_oracle(dtype, rerank, script,
+                                                  seed):
+    """Any interleaving of insert/delete/update/rearrange/search leaves the
+    pool holding exactly the oracle's id -> vector dict: invariants hold
+    after every op, surviving ids match exactly, and a full-probe fused
+    search never returns a deleted id."""
+    cfg = PoolConfig(
+        n_clusters=N_CLUSTERS, dim=DIM, block_size=4, n_blocks=256,
+        max_chain=32, dtype=dtype,
+    )
+    rng = np.random.default_rng(seed)
+    ins = make_insert_fn(cfg)
+    dele = make_delete_fn(cfg)
+    upd = make_update_fn(cfg)
+    rearr = make_rearrange_fn(cfg, threshold=10**9, dead_frac=0.25)
+    search = make_search_fn(
+        cfg, nprobe=N_CLUSTERS, k=8, path="union_fused_scan", rerank=rerank,
+    )
+    state = init_state(cfg, jnp.asarray(CENTS))
+    oracle: dict[int, np.ndarray] = {}
+    ever_deleted: set[int] = set()
+    nid = 0
+    for kind, size in script:
+        if kind == "insert":
+            x = rng.normal(size=(size, DIM)).astype(np.float32)
+            ids = np.arange(nid, nid + size, dtype=np.int32)
+            nid += size
+            state = ins(state, jnp.asarray(x), jnp.asarray(ids))
+            oracle.update({int(i): v for i, v in zip(ids, x)})
+        elif kind == "delete":
+            # mix of live ids and guaranteed misses
+            pool = sorted(oracle) + [nid + 10_000 + j for j in range(2)]
+            take = rng.choice(len(pool), min(size, len(pool)),
+                              replace=False)
+            ids = np.asarray([pool[j] for j in take], np.int32)
+            state = dele(state, jnp.asarray(ids))
+            for i in ids:
+                if int(i) in oracle:
+                    del oracle[int(i)]
+                    ever_deleted.add(int(i))
+        elif kind == "update":
+            if not oracle:
+                continue
+            live = sorted(oracle)
+            take = rng.choice(len(live), min(size, len(live)),
+                              replace=False)
+            ids = np.asarray([live[j] for j in take], np.int32)
+            x = rng.normal(size=(len(ids), DIM)).astype(np.float32) * 2.0
+            state = upd(state, jnp.asarray(x), jnp.asarray(ids))
+            oracle.update({int(i): v for i, v in zip(ids, x)})
+        elif kind == "rearrange":
+            for _ in range(size):
+                state, triggered = rearr(state)
+                if not bool(triggered):
+                    break
+        else:  # search
+            q = rng.normal(size=(2, DIM)).astype(np.float32)
+            _, got = search(state, jnp.asarray(q))
+            got = np.asarray(got)
+            found = set(int(i) for i in got.ravel() if i >= 0)
+            assert found <= set(oracle), found - set(oracle)
+        check_invariants(state, cfg)
+    # conservation: the pool holds exactly the oracle's ids
+    live_ids = sorted(
+        i for ids_ in snapshot_ids(state, cfg).values() for i in ids_
+    )
+    assert live_ids == sorted(oracle)
+    # deleted ids never surface from a final full-probe search, and every
+    # surviving id is retrievable as its own nearest neighbour
+    if oracle:
+        keys = sorted(oracle)
+        qs = np.stack([oracle[i] for i in keys]).astype(np.float32)
+        d, got = search(state, jnp.asarray(qs))
+        got = np.asarray(got)
+        if ever_deleted:
+            assert not np.isin(got, np.asarray(sorted(ever_deleted))).any()
+        assert (got[:, 0] == np.asarray(keys)).all()

@@ -57,13 +57,14 @@ def _topk_inputs(q, d, p, t, c, seed, dtype=np.float32, ncl=8, nprobe=6):
     ids[rng.random(c) < 0.25] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
+    live = (pool_ids != -1).astype(np.uint8)
     owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
     owners[ids == -1] = -1  # NULL slots own nothing
     probe = np.stack(
         [rng.permutation(ncl)[:nprobe] for _ in range(q)]
     ).astype(np.int32)
     return (queries, pool_f, jnp.asarray(ids), jnp.asarray(owners),
-            jnp.asarray(pool_ids), jnp.asarray(probe))
+            jnp.asarray(pool_ids), jnp.asarray(live), jnp.asarray(probe))
 
 
 def _int8_topk_inputs(q, npb, d, p, t, c, seed, ncl=None):
@@ -82,13 +83,15 @@ def _int8_topk_inputs(q, npb, d, p, t, c, seed, ncl=None):
     ids[rng.random(c) < 0.25] = -1  # hole blocks
     pool_ids = rng.permutation(p * t).astype(np.int32).reshape(p, t)
     pool_ids[rng.random((p, t)) < 0.3] = -1  # empty slots
+    live = (pool_ids != -1).astype(np.uint8)
     owners = rng.integers(0, ncl, size=(c,)).astype(np.int32)
     owners[ids == -1] = -1  # hole blocks are invalid for every query
     probe = np.stack(
         [rng.permutation(ncl)[:npb] for _ in range(q)]
     ).astype(np.int32)
     return (q_codes, q_meta, codes, scales, jnp.asarray(ids),
-            jnp.asarray(owners), jnp.asarray(pool_ids), jnp.asarray(probe))
+            jnp.asarray(owners), jnp.asarray(pool_ids), jnp.asarray(live),
+            jnp.asarray(probe))
 
 
 @pytest.mark.parametrize(
@@ -104,21 +107,20 @@ def test_ivf_block_topk_int8_matches_ref(q, npb, d, p, t, c, kp):
     """Kernel / lax.scan fallback / oracle agree: identical ids (the
     (distance, id) sort makes quantization ties deterministic), distances
     to float ulps."""
-    qc, qm, codes, scales, ids, owners, pool_ids, probe = _int8_topk_inputs(
-        q, npb, d, p, t, c, q + c
-    )
+    (qc, qm, codes, scales, ids, owners, pool_ids, live,
+     probe) = _int8_topk_inputs(q, npb, d, p, t, c, q + c)
     want_d, want_i = ref.ivf_block_topk_int8_ref(
-        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp
+        qc, qm, codes, scales, ids, owners, pool_ids, live, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk_int8(
-        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp,
-        interpret=True,
+        qc, qm, codes, scales, ids, owners, pool_ids, live, probe,
+        kprime=kp, interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_int8_scan(
-        qc, qm, codes, scales, ids, owners, pool_ids, probe, kprime=kp,
-        chunk=4,
+        qc, qm, codes, scales, ids, owners, pool_ids, live, probe,
+        kprime=kp, chunk=4,
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(sc_i, want_i)
@@ -131,7 +133,9 @@ def test_ivf_block_topk_int8_approximates_fp32():
     q, d, p, t, c, kp = 8, 64, 10, 16, 9, 16
     # every query probes cluster 0; candidates owned by 0 or by nobody,
     # so both payload families see the identical membership pattern
-    queries, pool_f, ids, _, pool_ids, _ = _topk_inputs(q, d, p, t, c, 5)
+    queries, pool_f, ids, _, pool_ids, live, _ = _topk_inputs(
+        q, d, p, t, c, 5
+    )
     rng = np.random.default_rng(5)
     owners = np.where(rng.random(c) < 0.7, 0, -1).astype(np.int32)
     owners[np.asarray(ids) == -1] = -1
@@ -140,11 +144,11 @@ def test_ivf_block_topk_int8_approximates_fp32():
     codes, scales = quantize_int8(jnp.asarray(pool_f))
     q_codes, q_meta = quantize_queries(queries[:, None, :])  # NP=1
     qd, _ = ivf_block_topk_int8(
-        q_codes, q_meta, codes, scales, ids, owners, pool_ids, probe,
+        q_codes, q_meta, codes, scales, ids, owners, pool_ids, live, probe,
         kprime=kp, interpret=True,
     )
     fd, _ = ref.ivf_block_topk_ref(
-        queries, jnp.asarray(pool_f), ids, owners, pool_ids, probe,
+        queries, jnp.asarray(pool_f), ids, owners, pool_ids, live, probe,
         kprime=kp,
     )
     qd, fd = np.asarray(qd), np.asarray(fd)
@@ -165,9 +169,10 @@ def test_ivf_block_topk_int8_all_invalid_returns_inf():
     ids = jnp.full((c,), -1, jnp.int32)
     owners = jnp.full((c,), -1, jnp.int32)
     pool_ids = jnp.zeros((p, t), jnp.int32)
+    live = jnp.ones((p, t), jnp.uint8)
     probe = jnp.asarray(rng.integers(0, 4, size=(q, npb)), jnp.int32)
     d_out, i_out = ivf_block_topk_int8(
-        q_codes, q_meta, codes, scales, ids, owners, pool_ids, probe,
+        q_codes, q_meta, codes, scales, ids, owners, pool_ids, live, probe,
         kprime=8, interpret=True,
     )
     assert np.isinf(np.asarray(d_out)).all()
@@ -179,21 +184,22 @@ def test_ivf_block_topk_int8_all_invalid_returns_inf():
 def test_ivf_block_topk_bf16_matches_ref(q, d, p, t, c, kp):
     """bf16 payloads flow through the same fused kernel (bf16 operands,
     f32 accumulation on the MXU)."""
-    queries, pool_f, ids, owners, pool_ids, probe = _topk_inputs(
+    queries, pool_f, ids, owners, pool_ids, live, probe = _topk_inputs(
         q, d, p, t, c, q * c
     )
     pool = jnp.asarray(pool_f, jnp.bfloat16)
     want_d, want_i = ref.ivf_block_topk_ref(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp
     )
     got_d, got_i = ivf_block_topk(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp,
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp,
         interpret=True,
     )
     np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(got_i, want_i)
     sc_d, sc_i = ivf_block_topk_scan(
-        queries, pool, ids, owners, pool_ids, probe, kprime=kp, chunk=4
+        queries, pool, ids, owners, pool_ids, live, probe, kprime=kp,
+        chunk=4,
     )
     np.testing.assert_allclose(sc_d, want_d, rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(sc_i, want_i)

@@ -233,10 +233,10 @@ def test_budget_buckets_pow2_and_evicts_stale_steps():
             assert b & (b - 1) == 0 or b == cfg.max_chain, b
             seen.add(b)
             rt._search_step_for(b)
-            rt._fused_step_for(b)
+            rt._fused_step_for(b)  # fused cache keys are (budget, kind)
             # only the current bucket's entries survive growth
             assert set(rt._search_steps) == {b}
-            assert set(rt._fused_steps) == {b}
+            assert set(rt._fused_steps) == {(b, "insert")}
         assert len(seen) > 2, "test must cross several buckets"
         assert len(seen) < 8, "pow2 bucketing keeps the bucket count small"
     finally:
