@@ -1,0 +1,251 @@
+"""Overload protection artifact: admission control + degradation ladder.
+
+Drives the serving runtime at **2x its sustainable mutation throughput**
+(service rate pinned deterministically with a ``FaultPlan`` delay on the
+mutation lane — no host-speed tuning) and contrasts:
+
+* **unprotected** (the seed behaviour, ``max_pending_mutations=None``) —
+  the pending-row backlog grows without bound for as long as the overload
+  lasts (the classic queue death spiral: every request is eventually
+  served, arbitrarily late);
+* **protected** (bounded admission, ``reject`` policy) — backlog stays
+  under the configured cap at all times and the excess is rejected in the
+  caller's thread, so accepted requests keep bounded latency.
+
+A third section overloads the *search* lane (slots pinned busy by a
+``search_step`` delay) and shows the degradation ladder stepping down
+under the queue-age watermark and back up when pressure clears.
+
+The ISSUE's acceptance bar is asserted in-script:
+
+* unprotected backlog grows monotonically across sample windows and ends
+  above a floor proportional to the injected excess;
+* protected backlog never exceeds the cap, with a nonzero reject count;
+* every accepted future resolves (no hangs under overload);
+* the ladder reports at least one downward transition under pressure.
+
+Writes ``BENCH_overload.json`` at the repo root when run as a script.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import build_ivf
+from repro.core.admission import RequestRejected
+from repro.core.faults import FaultPlan
+from repro.core.runtime import RuntimeConfig, ServingRuntime
+
+DIM = 32
+N0 = 2000
+N_CLUSTERS = 8
+SERVICE_DELAY = 0.05  # injected per-iteration stall on the mutation lane
+BATCH_ROWS = 32  # rows per submitted insert == flush_min (one batch/cycle)
+DRIVE_S = 2.0  # overload duration
+SAMPLE_DT = 0.1
+CAP = 128  # protected run: max pending rows (4 batches)
+
+
+def _make_index(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(N0, DIM)).astype(np.float32)
+    return x, build_ivf(
+        x, n_clusters=N_CLUSTERS, block_size=32, max_chain=64,
+        nprobe=4, k=10, capacity_vectors=12 * N0, add_batch=512,
+    )
+
+
+def _drive_mutations(rt: ServingRuntime, rate_hz: float, seconds: float):
+    """Submit BATCH_ROWS-row inserts at ``rate_hz``, absolute-scheduled
+    (a slow submit never silently lowers the offered load).  Samples the
+    pending-row gauge every SAMPLE_DT.  Returns (samples, futures,
+    rejects, offered)."""
+    rng = np.random.default_rng(1)
+    samples, futures, rejects, offered = [], [], 0, 0
+    dt = 1.0 / rate_hz
+    t0 = time.perf_counter()
+    next_submit, next_sample = t0, t0
+    while True:
+        now = time.perf_counter()
+        if now - t0 >= seconds:
+            break
+        if now >= next_sample:
+            samples.append(rt.stats()["pending_mutations"])
+            next_sample += SAMPLE_DT
+        if now >= next_submit:
+            offered += 1
+            try:
+                futures.append(rt.submit_insert(
+                    rng.normal(size=(BATCH_ROWS, DIM)).astype(np.float32)
+                ))
+            except RequestRejected:
+                rejects += 1
+            next_submit += dt
+        time.sleep(0.002)
+    return samples, futures, rejects, offered
+
+
+def _window_means(samples, n=4):
+    w = max(1, len(samples) // n)
+    return [float(np.mean(samples[i * w : (i + 1) * w])) for i in range(n)]
+
+
+def mutation_overload(bounded: bool):
+    """One overload run; service rate is BATCH_ROWS rows per SERVICE_DELAY
+    cycle, offered load is 2x that."""
+    x, idx = _make_index()
+    plan = FaultPlan().delay("insert_loop", SERVICE_DELAY, nth=None)
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(
+            mode="parallel", nprobe=4, k=10,
+            flush_min=BATCH_ROWS, flush_max=BATCH_ROWS,
+            flush_interval=SERVICE_DELAY,
+            max_pending_mutations=CAP if bounded else None,
+            admission="reject",
+        ),
+        faults=plan,
+    )
+    try:
+        # warmup outside the measurement: pays the insert-step compile
+        rt.submit_insert(x[:BATCH_ROWS]).result(timeout=120)
+        sustainable_hz = 1.0 / SERVICE_DELAY  # one batch per delayed cycle
+        samples, futures, rejects, offered = _drive_mutations(
+            rt, rate_hz=2.0 * sustainable_hz, seconds=DRIVE_S
+        )
+        peak = max(samples)
+        # no accepted future may hang under overload
+        unresolved = 0
+        for f in futures:
+            try:
+                f.result(timeout=120)
+            except Exception:
+                unresolved += 1  # typed failure still counts as resolved
+        return {
+            "bounded": bounded,
+            "cap_rows": CAP if bounded else None,
+            "offered_batches": offered,
+            "accepted_batches": len(futures),
+            "rejected_batches": rejects,
+            "pending_rows_samples": samples,
+            "pending_rows_window_means": _window_means(samples),
+            "pending_rows_peak": peak,
+            "pending_rows_final": samples[-1],
+            "failed_futures": unresolved,
+            "stats": {
+                k: rt.stats()[k]
+                for k in ("rejected_mutation", "inserts", "poisoned")
+            },
+        }
+    finally:
+        rt.stop()
+
+
+def search_overload():
+    """Pin search dispatch slow; the ladder must step down under the
+    queue-age watermark and back up when pressure clears."""
+    x, idx = _make_index(seed=5)
+    plan = FaultPlan().delay("search_step", 0.08, nth=range(12))
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(
+            mode="parallel", nprobe=4, k=10, n_slots=64, max_search_batch=1,
+            degradation_ladder=("no_rerank", "half_nprobe"),
+            overload_high=0.05, overload_low=0.01, overload_patience=2,
+        ),
+        faults=plan,
+    )
+    try:
+        rt.submit_search(x[:1]).result(timeout=120)  # compile warmup
+        futures = [rt.submit_search(x[i : i + 1]) for i in range(14)]
+        for f in futures:
+            f.result(timeout=120)
+        s_peak = rt.stats()
+        # pressure cleared: trickle until full service returns
+        t_end = time.perf_counter() + 60
+        while rt.stats()["degradation_level"] > 0:
+            assert time.perf_counter() < t_end, "ladder never recovered"
+            rt.submit_search(x[:1]).result(timeout=120)
+        return {
+            "rung_at_peak": s_peak["degradation_rung"],
+            "level_at_peak": s_peak["degradation_level"],
+            "transitions": rt.stats()["degradation_transitions"],
+            "recovered_rung": rt.stats()["degradation_rung"],
+            "search_steps_compiled": len(rt._search_steps),
+        }
+    finally:
+        rt.stop()
+
+
+META = {
+    "schema": {
+        "pending_rows_samples": "admission-gate pending-row gauge, "
+                                f"sampled every {SAMPLE_DT}s during the "
+                                "overload drive",
+        "pending_rows_window_means": "samples split into 4 windows; the "
+                                     "unprotected run must be strictly "
+                                     "increasing across them (asserted)",
+        "rejected_batches": "QueueFull raised in the caller's thread "
+                            "(protected run only)",
+        "rung_at_peak": "degradation ladder rung active while the search "
+                        "lane was pinned slow",
+    },
+    "workload": {
+        "service": f"one {BATCH_ROWS}-row batch per {SERVICE_DELAY}s "
+                   "cycle (FaultPlan delay on the mutation lane)",
+        "offered": "2x the sustainable batch rate for "
+                   f"{DRIVE_S}s; excess ~{int(DRIVE_S / SERVICE_DELAY)}"
+                   " batches",
+        "cap_rows": CAP,
+    },
+}
+
+
+def main():
+    unprot = mutation_overload(bounded=False)
+    prot = mutation_overload(bounded=True)
+    ladder = search_overload()
+
+    # ---- the ISSUE's acceptance bar, asserted in-script ------------------
+    wm = unprot["pending_rows_window_means"]
+    assert all(b > a for a, b in zip(wm, wm[1:])), (
+        f"unprotected backlog not monotone across windows: {wm}"
+    )
+    excess_rows = DRIVE_S / SERVICE_DELAY * BATCH_ROWS  # offered - served
+    assert unprot["pending_rows_final"] >= 0.25 * excess_rows, unprot
+    assert unprot["rejected_batches"] == 0
+
+    assert prot["pending_rows_peak"] <= CAP, prot["pending_rows_peak"]
+    assert prot["rejected_batches"] > 0
+    assert prot["failed_futures"] == 0 and unprot["failed_futures"] == 0
+
+    assert ladder["level_at_peak"] >= 1, ladder
+    assert ladder["transitions"] >= 2  # down under load, up after
+    assert ladder["recovered_rung"] == "full"
+
+    print("run,offered,accepted,rejected,peak_pending,final_pending")
+    for r in (unprot, prot):
+        tag = "protected" if r["bounded"] else "unprotected"
+        print(f"{tag},{r['offered_batches']},{r['accepted_batches']},"
+              f"{r['rejected_batches']},{r['pending_rows_peak']},"
+              f"{r['pending_rows_final']}")
+    print(f"ladder: peak={ladder['rung_at_peak']} "
+          f"transitions={ladder['transitions']} "
+          f"recovered={ladder['recovered_rung']}")
+    out = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_overload.json"
+    out.write_text(json.dumps(
+        {"meta": META,
+         "rows": [unprot, prot],
+         "ladder": ladder},
+        indent=1,
+    ))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

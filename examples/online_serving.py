@@ -22,9 +22,7 @@ def drive(runtime: ServingRuntime, corpus, *, qps_search=3, qps_insert=20,
         runtime.submit_search(corpus[:1]).result(timeout=60)
         runtime.submit_insert(corpus[:4] + 0.01).result(timeout=60)
         time.sleep(0.3)
-        runtime._search_lat.clear()
-        runtime._insert_lat.clear()
-        runtime._rejects = 0
+        runtime.reset_stats()
     return _drive(runtime, corpus, qps_search=qps_search,
                   qps_insert=qps_insert, duration=duration, seed=seed)
 
@@ -68,8 +66,14 @@ def main():
         )
         rt = ServingRuntime(
             index,
+            # fault-tolerant serving posture (docs/serving_ops.md): bound
+            # the mutation backlog, expire requests instead of serving
+            # them arbitrarily late, and degrade before falling over
             RuntimeConfig(mode=mode, nprobe=8, k=10, flush_min=16,
-                          flush_interval=0.1),
+                          flush_interval=0.1,
+                          max_pending_mutations=4096,
+                          default_deadline=5.0,
+                          degradation_ladder=("no_rerank", "half_nprobe")),
         )
         try:
             rejected = drive(rt, corpus)
@@ -91,6 +95,10 @@ def main():
                   f"live={s['live_vectors']} "
                   f"dead_frac={s['dead_fraction']:.3f} "
                   f"util={s['utilisation']:.3f}")
+            print(f"{'':15}shed={s['shed_search']}/{s['shed_mutation']} "
+                  f"rejected={s['rejected_search']}/"
+                  f"{s['rejected_mutation']} "
+                  f"rung={s['degradation_rung']}")
             print(f"{'':15}corpus now {rt.index.ntotal} live vectors")
         finally:
             rt.stop()

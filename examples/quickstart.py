@@ -110,6 +110,15 @@ def main():
     print(f"ivfpq (union_fused) recall@10 vs brute force: "
           f"{recall_at_k(i_pq, np.asarray(exact_ids), 10):.3f}")
 
+    # ---- serving --------------------------------------------------------
+    # To serve an index under live traffic, wrap it in
+    # repro.core.runtime.ServingRuntime (examples/online_serving.py):
+    # request batching, serial/parallel/fused execution modes, and a
+    # fault-tolerance layer — bounded mutation admission, per-request
+    # deadlines with load shedding, a degradation ladder under overload,
+    # crash-safe workers, drain-on-shutdown.  Operational contract and
+    # the fault-injection API: docs/serving_ops.md.
+
 
 if __name__ == "__main__":
     main()

@@ -10,11 +10,20 @@ from repro.core.block_pool import (  # noqa: F401
     snapshot_ids,
     utilisation,
 )
+from repro.core.admission import (  # noqa: F401
+    DeadlineExceeded,
+    DegradationLadder,
+    QueueFull,
+    RequestRejected,
+    RuntimeShutdown,
+)
+from repro.core.faults import FaultPlan  # noqa: F401
 from repro.core.insert import assign_clusters, insert_payload, make_insert_fn  # noqa: F401
 from repro.core.ivf import IVFIndex, IVFIndexConfig, build_ivf  # noqa: F401
 from repro.core.kmeans import kmeans  # noqa: F401
 from repro.core.mutate import apply_delete, make_delete_fn, make_update_fn  # noqa: F401
 from repro.core.rearrange import make_rearrange_fn, rearrange_cluster  # noqa: F401
+from repro.core.runtime import RuntimeConfig, ServingRuntime  # noqa: F401
 from repro.core.search import (  # noqa: F401
     exact_search,
     make_search_fn,

@@ -2,11 +2,45 @@
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from typing import Iterable
 
 import numpy as np
+
+
+class CounterSet:
+    """Named monotonic counters shared across threads.
+
+    The serving runtime's workers, submit paths, and the supervisor all
+    bump counters concurrently; bare ``+=`` on instance ints loses
+    increments under the GIL's byte-code interleaving (load/add/store is
+    three ops).  Every mutation happens under one lock and ``snapshot()``
+    returns a consistent point-in-time copy for ``stats()``.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts: collections.defaultdict = collections.defaultdict(int)
+
+    def inc(self, name: str, n: int = 1) -> int:
+        with self._lock:
+            self._counts[name] += n
+            return self._counts[name]
+
+    def __getitem__(self, name: str) -> int:
+        with self._lock:
+            return self._counts[name]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._counts)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts.clear()
 
 
 def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray, k: int) -> float:

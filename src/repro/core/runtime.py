@@ -1,0 +1,1089 @@
+"""Multi-stream serving runtime (paper Alg. 4 + deployment §3.3).
+
+Reproduces the paper's execution architecture with TPU-appropriate
+mechanisms (DESIGN.md §2, §5):
+
+* **Resource pool** — 32 slots, each a permit to dispatch a search; when all
+  slots are busy the request is *rejected* (the paper's lock-free queue with
+  rejection).  Slot scratch memory is implicit in JAX (each jitted search
+  owns preallocated output buffers), the central-pool overflow grant is
+  modelled by the shared device arena.
+* **Dedicated mutation lane** — one thread owns the index state and applies
+  donated insert/delete/update steps; the paper's single data stream, grown
+  into a full mutation stream.  Deletes tombstone rows through the device
+  id map, updates tombstone + re-insert under the same id in one dispatch
+  (core.mutate), and arrival order is preserved: the lane batches
+  *consecutive runs of the same kind*, so delete-then-insert of an id can
+  never be reordered into insert-then-delete.
+* **Dynamic batcher** — inserts aggregate until ``flush_min`` (128) pending
+  or ``flush_interval`` (1 s) elapsed, capped at ``flush_max`` (1024);
+  search batches are capped at ``max_search_batch`` (10).  All paper §3.3
+  values are the defaults.
+* **Execution modes** (benchmarked in Fig. 3 reproduction):
+    - ``serial``   — Fig. 2a: one lane; an insert in flight blocks searches.
+    - ``parallel`` — Fig. 2b: search slots dispatch concurrently with the
+      insert lane.  Correctness under buffer donation: dispatch happens
+      under the state lock (cheap — dispatch is async), execution overlaps.
+    - ``fused``    — TPU-native multi-stream: a pending insert batch and a
+      pending search batch are submitted as ONE jitted program whose two
+      subgraphs share no data edge, so the XLA scheduler overlaps them
+      (search reads the pre-insert state — the legal concurrent
+      serialisation, same as the paper's streams).
+
+Fault-tolerance layer (docs/serving_ops.md):
+
+* **Admission control** — the mutation lane is bounded by
+  ``max_pending_mutations`` rows (reject or block-with-deadline on
+  overflow, symmetrical with the search lane's slot rejection).
+* **Deadlines & shedding** — requests may carry a deadline; expired
+  requests are shed from the queue with ``DeadlineExceeded`` instead of
+  dispatched late.
+* **Degradation ladder** — under a sustained queue-age watermark the
+  runtime steps down ``degradation_ladder`` (skip rerank → halve nprobe →
+  halve the chain budget) and back up when pressure clears; rungs key the
+  same pow2-bucketed jit caches, so degrading never recompiles per request.
+* **Crash-safe workers** — loop bodies run under a supervisor that logs,
+  counts, restarts (bounded, with backoff); a lane that exhausts its
+  restart budget fails its queue loudly and stops admission.
+* **Graceful shutdown** — ``stop()`` drains: queued mutation batches are
+  flushed (or failed with ``RuntimeShutdown`` when ``drain=False``),
+  undispatchable search futures are failed, and ``submit_*`` afterwards
+  raises instead of enqueueing into a dead runtime.
+* **Poison isolation** — a failed batch retries once per item, so one bad
+  payload fails only its own future (``poisoned`` counter).
+* **Deterministic fault injection** — every path above is exercised through
+  ``repro.core.faults.FaultPlan`` hooks (no-op by default).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import logging
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admission import (
+    AdmissionGate,
+    DeadlineExceeded,
+    DegradationLadder,
+    QueueFull,
+    RequestRejected,
+    RuntimeShutdown,
+    validate_ids,
+    validate_vectors,
+)
+from repro.core.block_pool import pool_stats
+from repro.core.faults import NO_FAULTS, FaultPlan
+from repro.core.insert import assign_clusters, insert_payload
+from repro.core.ivf import IVFIndex
+from repro.core.metrics import CounterSet, LatencyStats
+from repro.core.mutate import apply_delete, last_occurrence_mask
+from repro.core import pq as pqmod
+from repro.core.search import resolve_search_impl
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class _Timed:
+    future: Future
+    t_arrival: float
+    payload: object
+    kind: str = "insert"  # search | insert | delete | update
+    deadline: Optional[float] = None  # absolute perf_counter time, or None
+    rows: int = 0  # admission-gate rows held (mutation kinds only)
+    released: bool = False  # gate budget already returned
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    n_slots: int = 32  # paper: 32 independent resources
+    max_search_batch: int = 10  # paper: max search batch 10
+    flush_min: int = 128  # paper: dispatch at 128 pending inserts
+    flush_max: int = 1024  # paper: cap 1024
+    flush_interval: float = 1.0  # paper: flush every second
+    nprobe: int = 16
+    k: int = 10
+    mode: str = "parallel"  # serial | parallel | fused
+    # any path make_search_fn supports: block_table | chain_walk | union |
+    # union_pallas | union_fused | union_fused_scan (typos raise ValueError
+    # at construction — a silent fallback would serve the wrong path)
+    search_path: str = "block_table"
+    # exact-fp32 re-rank epilogue over the fused survivors (fused paths
+    # only; rejected at construction otherwise)
+    rerank: bool = False
+    # latency samples kept for stats(); unbounded lists grow forever under
+    # sustained traffic
+    latency_window: int = 10_000
+    # run dead-space-reclaiming compaction passes on the mutation lane after
+    # a delete/update batch whenever a cluster crosses the dead-fraction
+    # trigger (see core.rearrange); off by default — maintenance cadence is
+    # a deployment decision
+    auto_compact: bool = False
+    compact_passes: int = 4
+    # ---- fault tolerance (docs/serving_ops.md) --------------------------
+    # bound on mutation rows in the system (queued + in flight); None keeps
+    # the seed's unbounded queue.  On overflow: "reject" raises QueueFull
+    # in the caller's thread, "block" waits up to admission_timeout for
+    # capacity first (backpressure with a bounded stall).
+    max_pending_mutations: Optional[int] = None
+    admission: str = "reject"  # reject | block
+    admission_timeout: float = 1.0
+    # deadline (seconds from submit) stamped on every request that does not
+    # pass its own; None = requests never expire.  Expired requests are
+    # shed from the queue with DeadlineExceeded, never dispatched late.
+    default_deadline: Optional[float] = None
+    # degradation ladder rungs, applied cumulatively under sustained
+    # overload, e.g. ("no_rerank", "half_nprobe", "half_budget"); empty =
+    # always full service.  Pressure signal: queue-age watermark of each
+    # search dispatch vs the overload_high/low hysteresis band.
+    degradation_ladder: tuple = ()
+    overload_high: float = 0.05  # step down above this queue age (s)
+    overload_low: float = 0.01  # step back up below this (s)
+    overload_patience: int = 3  # consecutive observations per step
+    # crash-safe workers: bounded restarts with exponential backoff; a lane
+    # that exhausts the budget fails its queue and stops admission (loud)
+    max_worker_restarts: int = 5
+    restart_backoff: float = 0.05
+    # fail malformed payloads (wrong dim / non-finite / empty / non-numeric)
+    # in the caller's thread at submit time instead of deep in a worker batch
+    validate: bool = True
+    # stop() default: flush queued mutations (True) or fail everything
+    # undispatched with RuntimeShutdown (False)
+    drain_on_stop: bool = True
+
+
+class ServingRuntime:
+    """Owns the IVF index state + jitted steps; serves search/insert."""
+
+    def __init__(self, index: IVFIndex, cfg: RuntimeConfig = RuntimeConfig(),
+                 faults: Optional[FaultPlan] = None):
+        self.index = index
+        self.cfg = cfg
+        self.pool_cfg = index.pool_cfg
+        self._faults = faults if faults is not None else NO_FAULTS
+        self._state_lock = threading.Lock()
+        self._slots = threading.Semaphore(cfg.n_slots)
+        self._stop = threading.Event()
+        self._search_q: queue.Queue = queue.Queue()
+        self._insert_q: queue.Queue = queue.Queue()
+        # submit/stop transition guard: stop() flips _accepting under this
+        # lock, submits check-and-enqueue under it — nothing can slip into a
+        # queue after the shutdown drain has swept it
+        self._submit_lock = threading.Lock()
+        self._accepting = True
+        self._drained = False
+        self._lane_dead: Optional[str] = None
+        self._gate = AdmissionGate(
+            cfg.max_pending_mutations, cfg.admission, cfg.admission_timeout
+        )
+        self._ladder = DegradationLadder(
+            cfg.degradation_ladder, cfg.overload_high, cfg.overload_low,
+            cfg.overload_patience,
+        )
+        # bounded: stats() reports over a sliding window instead of every
+        # sample since process start.  Appends and snapshots share a lock —
+        # iterating a deque while a worker appends raises RuntimeError
+        # (unlike the copy-a-list-under-GIL idiom it replaced).
+        self._lat_lock = threading.Lock()
+        self._search_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
+        self._insert_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
+        self._mutation_lat: collections.deque = collections.deque(
+            maxlen=cfg.latency_window
+        )
+        # every counter the runtime bumps lives here: workers, submit paths
+        # and the supervisor all increment concurrently, and bare += on
+        # instance ints drops increments (see metrics.CounterSet)
+        self._counters = CounterSet()
+        self._fused_pending = queue.Queue()
+        # serial-mode pending mutations live on the instance (not a loop
+        # local) so supervisor restarts and the shutdown drain see them
+        self._serial_pending: list[_Timed] = []
+        self._serial_last_flush = time.perf_counter()
+        self._build_steps()
+        self._threads = [
+            threading.Thread(
+                target=self._supervised,
+                args=(self._insert_loop_body, "insert_loop"),
+                daemon=True,
+            ),
+            threading.Thread(
+                target=self._supervised,
+                args=(self._search_loop_body, "search_loop"),
+                daemon=True,
+            ),
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ steps --
+    def _build_steps(self):
+        cfg, pc = self.cfg, self.pool_cfg
+        pq = self.index.pq
+        # fail at construction, not inside the worker thread's first jit
+        # trace: raises ValueError on an unknown path (no silent fallback)
+        # and NotImplementedError on a payload mismatch
+        self._search_impl = resolve_search_impl(
+            pc, cfg.search_path, cfg.rerank
+        )
+        # state-free: centroids come from the traced state argument, so the
+        # cached steps never bake a stale pool copy in as jit constants
+        self._score_fn = pqmod.pq_score_fn(pq) if pq is not None else None
+        # jitted steps are cached per (chain-budget bucket, degradation
+        # params): the budget is recomputed at dispatch time (see
+        # _current_budget), so online growth costs one recompile per
+        # power-of-two bucket, and each ladder rung adds at most one entry
+        # per bucket — degradation never recompiles per request
+        self._search_steps: dict[tuple, object] = {}
+        self._fused_steps: dict[tuple, object] = {}
+        # cached bucketed budget; None forces a recompute (a host readback
+        # of the live chain depth) — invalidated only by the insert paths,
+        # so pure-search traffic never pays the device sync
+        self._budget: Optional[int] = None
+
+        def _insert(state, vectors, ids, valid):
+            assign = assign_clusters(state.centroids, vectors)
+            if pq is None:
+                payload = vectors
+            else:
+                payload = pqmod.encode(pq, vectors - state.centroids[assign])
+            return insert_payload(pc, state, assign, payload, ids, valid)
+
+        def _delete(state, ids, valid):
+            return apply_delete(pc, state, ids, valid)
+
+        def _update(state, vectors, ids, valid):
+            # tombstone + re-insert under the same id, one dispatch: no
+            # state where both (or neither) copy is visible can be observed;
+            # duplicate targets merged into one run re-insert last-write-wins
+            state = apply_delete(pc, state, ids, valid)
+            return _insert(state, vectors, ids,
+                           last_occurrence_mask(ids, valid))
+
+        # raw fns feed the fused (search+mutation) programs; jitted steps
+        # serve the standalone mutation lane
+        self._mutation_fns = {
+            "insert": _insert, "delete": _delete, "update": _update,
+        }
+        self._insert_fn = _insert
+        self._insert_step = jax.jit(_insert, donate_argnums=(0,))
+        self._delete_step = jax.jit(_delete, donate_argnums=(0,))
+        self._update_step = jax.jit(_update, donate_argnums=(0,))
+
+    def _current_budget(self) -> int:
+        """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
+
+        The budget is the live chain depth bucketed to the next power of
+        two with 2x headroom (capped at ``max_chain``) *before* it keys the
+        ``_search_steps``/``_fused_steps`` jit caches, so steady chain
+        growth costs O(log max_chain) recompiles instead of one per
+        increment; computing it once at construction silently truncated
+        chains — and dropped candidates — after online inserts grew them
+        past 2x the initial depth.  The value is cached between inserts
+        (callers hold ``_state_lock``).  Chains never shrink, so when the
+        bucket advances the entries keyed by smaller *base* budgets can
+        never be dispatched again — they are evicted instead of pinning
+        their compiled executables (and output buffers) forever.  Ladder
+        rungs key smaller *effective* budgets under the current base
+        (key[0]), so degraded entries survive until the base itself moves.
+        """
+        if self._budget is None:
+            # IVFIndex._chain_budget() happens to return pow2 buckets
+            # already, making the _bucket pass idempotent today — it is
+            # enforced *here* regardless, because the jit-cache keys below
+            # are what actually bound the recompile count; a future budget
+            # heuristic must not silently re-introduce
+            # one-recompile-per-increment growth.
+            budget = min(
+                self._bucket(2 * self.index._chain_budget(), floor=1),
+                self.pool_cfg.max_chain,
+            )
+            # both caches key tuples whose first element is the base budget
+            for cache in (self._search_steps, self._fused_steps):
+                for stale in [k for k in cache if k[0] < budget]:
+                    del cache[stale]
+            self._budget = budget
+        return self._budget
+
+    def _make_search(self, budget: int, nprobe: int, rerank: bool):
+        cfg, pc = self.cfg, self.pool_cfg
+
+        def _search(state, queries, valid):
+            d, i = self._search_impl(
+                pc, state, queries, nprobe=nprobe, k=cfg.k,
+                score_fn=self._score_fn, chain_budget=budget,
+                pq=self.index.pq, rerank=rerank,
+            )
+            return d, jnp.where(valid[:, None], i, -1)
+
+        return _search
+
+    def _search_step_for(self, base: int, budget: Optional[int] = None,
+                         nprobe: Optional[int] = None,
+                         rerank: Optional[bool] = None):
+        budget = base if budget is None else budget
+        nprobe = self.cfg.nprobe if nprobe is None else nprobe
+        rerank = self.cfg.rerank if rerank is None else rerank
+        key = (base, budget, nprobe, rerank)
+        if key not in self._search_steps:
+            self._search_steps[key] = jax.jit(
+                self._make_search(budget, nprobe, rerank)
+            )
+        return self._search_steps[key]
+
+    def _fused_step_for(self, base: int, kind: str = "insert",
+                        budget: Optional[int] = None,
+                        nprobe: Optional[int] = None,
+                        rerank: Optional[bool] = None):
+        budget = base if budget is None else budget
+        nprobe = self.cfg.nprobe if nprobe is None else nprobe
+        rerank = self.cfg.rerank if rerank is None else rerank
+        key = (base, budget, nprobe, rerank, kind)
+        if key not in self._fused_steps:
+            _search = self._make_search(budget, nprobe, rerank)
+            _mutate = self._mutation_fns[kind]
+
+            def _fused(state, queries, qvalid, *m_args):
+                # two independent subgraphs; XLA overlaps them (multi-stream)
+                d, i = _search(state, queries, qvalid)
+                new_state = _mutate(state, *m_args)
+                return new_state, d, i
+
+            self._fused_steps[key] = jax.jit(_fused, donate_argnums=(0,))
+        return self._fused_steps[key]
+
+    # ------------------------------------------------------------ API ----
+    def _check_accepting(self):
+        if not self._accepting:
+            if self._lane_dead is not None:
+                raise RuntimeShutdown(
+                    f"{self._lane_dead} died (restart budget exhausted); "
+                    "runtime no longer accepts requests"
+                )
+            raise RuntimeShutdown("runtime stopped")
+
+    def _abs_deadline(self, deadline: Optional[float]) -> Optional[float]:
+        d = deadline if deadline is not None else self.cfg.default_deadline
+        return None if d is None else time.perf_counter() + d
+
+    def submit_search(self, queries: np.ndarray, *,
+                      deadline: Optional[float] = None) -> Future:
+        if self.cfg.validate:
+            queries = validate_vectors(queries, self.pool_cfg.dim, "queries")
+        with self._submit_lock:
+            self._check_accepting()
+            if not self._slots.acquire(blocking=False):
+                self._counters.inc("rejected_search")
+                raise RequestRejected("resource pool exhausted")
+            fut = Future()
+            self._search_q.put(_Timed(
+                fut, time.perf_counter(), queries, kind="search",
+                deadline=self._abs_deadline(deadline),
+            ))
+        return fut
+
+    def _submit_mutation(self, payload, kind: str, rows: int,
+                         deadline: Optional[float]) -> Future:
+        self._check_accepting()  # cheap early out before blocking admission
+        try:
+            self._faults.check("admission")
+            self._gate.acquire(rows)
+        except QueueFull:
+            self._counters.inc("rejected_mutation")
+            raise
+        try:
+            with self._submit_lock:
+                self._check_accepting()
+                fut = Future()
+                self._insert_q.put(_Timed(
+                    fut, time.perf_counter(), payload, kind=kind,
+                    deadline=self._abs_deadline(deadline), rows=rows,
+                ))
+            return fut
+        except BaseException:
+            self._gate.release(rows)
+            raise
+
+    def submit_insert(self, vectors: np.ndarray, *,
+                      deadline: Optional[float] = None) -> Future:
+        if self.cfg.validate:
+            vectors = validate_vectors(vectors, self.pool_cfg.dim, "vectors")
+        else:
+            vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        return self._submit_mutation(
+            vectors, "insert", len(vectors), deadline
+        )
+
+    def submit_delete(self, ids: np.ndarray, *,
+                      deadline: Optional[float] = None) -> Future:
+        """Tombstone ids through the mutation lane.  Resolves with the ids
+        once the delete step has been applied (misses — unknown or already
+        deleted ids — are counted in the index state, not surfaced per
+        request: the batch is one fused dispatch)."""
+        if self.cfg.validate:
+            ids = validate_ids(ids)
+        else:
+            ids = np.atleast_1d(np.asarray(ids, np.int32))
+        return self._submit_mutation(ids, "delete", len(ids), deadline)
+
+    def submit_update(self, vectors: np.ndarray, ids: np.ndarray, *,
+                      deadline: Optional[float] = None) -> Future:
+        """Replace the vectors behind ``ids`` (tombstone + re-insert under
+        the same id, one dispatch).  Resolves with the ids once applied."""
+        if self.cfg.validate:
+            vectors = validate_vectors(vectors, self.pool_cfg.dim, "vectors")
+            ids = validate_ids(ids)
+        else:
+            vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+            ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if len(ids) != len(vectors):
+            raise ValueError(f"{len(ids)} ids for {len(vectors)} vectors")
+        return self._submit_mutation(
+            (vectors, ids), "update", len(ids), deadline
+        )
+
+    def stop(self, drain: Optional[bool] = None, timeout: float = 10.0):
+        """Graceful shutdown.  Stops admission (later ``submit_*`` raise
+        ``RuntimeShutdown``), joins the workers, then drains: queued
+        mutation batches are *flushed* (``drain=True``, the default from
+        ``cfg.drain_on_stop`` — their futures resolve with ids) or failed
+        with ``RuntimeShutdown``; queued searches are always failed (their
+        results cannot be delivered to anyone meaningfully late) and their
+        slots released.  No submitted future is ever left unresolved."""
+        drain = self.cfg.drain_on_stop if drain is None else drain
+        with self._submit_lock:
+            self._accepting = False
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout)
+        with self._submit_lock:
+            if self._drained:
+                return
+            self._drained = True
+        self._drain_on_stop(drain)
+
+    def _drain_on_stop(self, drain: bool):
+        # mutation lane: everything not yet dispatched, in arrival order —
+        # serial-mode pending first (oldest), then fused hand-offs, then
+        # the queue itself
+        items: list[_Timed] = []
+        items.extend(self._serial_pending)
+        self._serial_pending = []
+        while True:
+            try:
+                items.extend(self._fused_pending.get_nowait())
+            except queue.Empty:
+                break
+        while True:
+            try:
+                items.append(self._insert_q.get_nowait())
+            except queue.Empty:
+                break
+        # deadline semantics survive shutdown: an expired mutation is shed,
+        # not flushed late under the cover of drain
+        items = self._shed_expired(items, "mutation")
+        if items:
+            if drain:
+                # flush: _apply_mutations resolves every future (result on
+                # success, exception per failed run/item)
+                self._apply_mutations(items)
+            else:
+                self._fail_futures(
+                    items, RuntimeShutdown("runtime stopped before dispatch")
+                )
+        # search lane: undispatchable — fail + release the submit-time slot
+        exc = RuntimeShutdown("runtime stopped before dispatch")
+        while True:
+            try:
+                it = self._search_q.get_nowait()
+            except queue.Empty:
+                break
+            if not it.future.done():
+                it.future.set_exception(exc)
+            self._slots.release()
+
+    def reset_stats(self):
+        """Zero the latency windows and counters (ladder level and pool
+        gauges are live state, not samples, and are left alone)."""
+        with self._lat_lock:
+            self._search_lat.clear()
+            self._insert_lat.clear()
+            self._mutation_lat.clear()
+        self._counters.reset()
+
+    def stats(self, timeout_ms: float = 20.0):
+        with self._lat_lock:
+            search = tuple(self._search_lat)
+            insert = tuple(self._insert_lat)
+            mutation = tuple(self._mutation_lat)
+        c = self._counters.snapshot()
+        out = {
+            "search": LatencyStats.from_samples(search, timeout_ms),
+            "insert": LatencyStats.from_samples(insert, timeout_ms),
+            "mutation": LatencyStats.from_samples(mutation, timeout_ms),
+            # request outcome counters
+            "rejected": c.get("rejected_search", 0),
+            "rejected_search": c.get("rejected_search", 0),
+            "rejected_mutation": c.get("rejected_mutation", 0),
+            "shed_search": c.get("shed_search", 0),
+            "shed_mutation": c.get("shed_mutation", 0),
+            "poisoned": c.get("poisoned", 0),
+            "isolations": c.get("isolations", 0),
+            "fused_fallbacks": c.get("fused_fallbacks", 0),
+            "worker_restarts": c.get("worker_restarts", 0),
+            # mutation-stream counters (rows applied, not batches)
+            "inserts": c.get("inserts", 0),
+            "deletes": c.get("deletes", 0),
+            "updates": c.get("updates", 0),
+            "compactions": c.get("compactions", 0),
+            # live gauges
+            "pending_mutations": self._gate.pending(),
+            "pending_searches": self._search_q.qsize(),
+            "degradation_rung": self._ladder.rung,
+            "degradation_level": self._ladder.level,
+            "degradation_transitions": self._ladder.transitions,
+            "accepting": self._accepting,
+        }
+        # live-occupancy gauges: allocated != occupied once tombstones exist
+        with self._state_lock:
+            out.update(pool_stats(self.index.state, self.pool_cfg))
+        return out
+
+    # --------------------------------------------------------- workers ---
+    def _supervised(self, body, name: str):
+        """Run a worker loop body under bounded-restart supervision: an
+        uncaught exception used to kill the lane silently and forever.  A
+        crash is logged, counted, and restarted with exponential backoff;
+        when the restart budget is exhausted the lane fails its queue
+        (futures resolve with ``RuntimeShutdown``) and stops admission —
+        loud and bounded, never a silent wedge."""
+        restarts = 0
+        while not self._stop.is_set():
+            try:
+                body()
+                return  # clean exit: stop was requested
+            except Exception:
+                log.exception("worker %s crashed", name)
+                self._counters.inc("worker_restarts")
+                self._counters.inc(f"restarts_{name}")
+                restarts += 1
+                if restarts > self.cfg.max_worker_restarts:
+                    log.error(
+                        "worker %s: restart budget (%d) exhausted; failing "
+                        "its queue and stopping admission",
+                        name, self.cfg.max_worker_restarts,
+                    )
+                    self._lane_dead = name
+                    with self._submit_lock:
+                        self._accepting = False
+                    self._fail_lane_queue(name)
+                    return
+                time.sleep(min(
+                    self.cfg.restart_backoff * (2 ** (restarts - 1)), 1.0
+                ))
+
+    def _fail_lane_queue(self, name: str):
+        exc = RuntimeShutdown(f"{name} died (restart budget exhausted)")
+        if name == "insert_loop":
+            items = []
+            while True:
+                try:
+                    items.append(self._insert_q.get_nowait())
+                except queue.Empty:
+                    break
+            self._fail_futures(items, exc)
+        else:
+            # search lane owns serial-mode mutations and fused hand-offs too
+            items = list(self._serial_pending)
+            self._serial_pending = []
+            while True:
+                try:
+                    items.extend(self._fused_pending.get_nowait())
+                except queue.Empty:
+                    break
+            self._fail_futures(items, exc)
+            while True:
+                try:
+                    it = self._search_q.get_nowait()
+                except queue.Empty:
+                    break
+                if not it.future.done():
+                    it.future.set_exception(exc)
+                self._slots.release()
+
+    @staticmethod
+    def _n_rows(it: _Timed) -> int:
+        """Row count of a mutation item (vectors for insert, ids for
+        delete, paired (vectors, ids) for update)."""
+        if it.kind == "delete":
+            return len(np.atleast_1d(it.payload))
+        if it.kind == "update":
+            return len(np.atleast_2d(it.payload[0]))
+        return len(np.atleast_2d(it.payload))
+
+    def _release_gate(self, it: _Timed):
+        """Return an item's admission rows exactly once, when it leaves the
+        system (applied / failed / shed / drained)."""
+        if it.kind != "search" and it.rows and not it.released:
+            it.released = True
+            self._gate.release(it.rows)
+
+    def _fail_futures(self, items: list[_Timed], exc: BaseException):
+        """Propagate a mid-step failure: an unresolved future would hang its
+        caller forever.  Mutation items also return their admission rows."""
+        for it in items:
+            if not it.future.done():
+                it.future.set_exception(exc)
+            self._release_gate(it)
+
+    def _shed_expired(self, items: list[_Timed], lane: str) -> list[_Timed]:
+        """Load shedding: resolve expired requests with ``DeadlineExceeded``
+        instead of dispatching them late — serving a dead request steals
+        capacity from live ones.  Search sheds release the submit-time
+        slot; mutation sheds return their admission rows."""
+        now = time.perf_counter()
+        live: list[_Timed] = []
+        for it in items:
+            if it.deadline is not None and now > it.deadline:
+                if not it.future.done():
+                    it.future.set_exception(DeadlineExceeded(
+                        f"{it.kind} expired in queue "
+                        f"({now - it.t_arrival:.3f}s old)"
+                    ))
+                self._counters.inc(f"shed_{lane}")
+                if lane == "search":
+                    self._slots.release()
+                else:
+                    self._release_gate(it)
+            else:
+                live.append(it)
+        return live
+
+    def _drain_inserts(self) -> list[_Timed]:
+        """Dynamic batching policy from §3.3 over the mutation lane.
+
+        A running row count is kept instead of re-concatenating every pending
+        payload per queue pop (that was quadratic in batch size)."""
+        items: list[_Timed] = []
+        pending_rows = 0
+        deadline = time.perf_counter() + self.cfg.flush_interval
+        while not self._stop.is_set():
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                break
+            try:
+                item = self._insert_q.get(timeout=min(timeout, 0.01))
+            except queue.Empty:
+                continue
+            items.append(item)
+            pending_rows += self._n_rows(item)
+            if pending_rows >= self.cfg.flush_min:
+                break
+        return items
+
+    def _split_flush(self, items: list[_Timed]):
+        """Longest whole-item same-kind prefix within ``flush_max`` rows +
+        the remainder.
+
+        Items are never split mid-payload (each future must resolve with its
+        exact ids), so a single oversized item is dispatched alone and may
+        exceed the cap.  A kind switch also ends the batch: runs of the same
+        kind dispatch as one fused step, and arrival order across kinds is
+        preserved (delete-then-insert of an id must never reorder).  The
+        remainder is applied next, never dropped."""
+        take: list[_Timed] = []
+        rows = 0
+        for pos, it in enumerate(items):
+            n = self._n_rows(it)
+            if take and (
+                rows + n > self.cfg.flush_max or it.kind != take[0].kind
+            ):
+                return take, items[pos:]
+            take.append(it)
+            rows += n
+        return take, []
+
+    @staticmethod
+    def _pending_vectors(items: list[_Timed]) -> np.ndarray:
+        if not items:
+            return np.zeros((0, 1), np.float32)
+        return np.concatenate([np.atleast_2d(i.payload) for i in items], 0)
+
+    @staticmethod
+    def _bucket(n: int, floor: int = 8) -> int:
+        """Next power-of-two bucket — keeps the jit cache tiny."""
+        b = floor
+        while b < n:
+            b *= 2
+        return b
+
+    def _padded(self, rows: np.ndarray, bucket: int):
+        n = len(rows)
+        out = np.zeros((bucket, rows.shape[1]), np.float32)
+        out[:n] = rows
+        valid = np.zeros((bucket,), bool)
+        valid[:n] = True
+        return out, valid
+
+    def _mutation_args(self, kind: str, items: list[_Timed]):
+        """Pack one same-kind run into the padded, fixed-shape device args
+        of its jitted step.  Returns (step_args, ids) — ids are the
+        per-row ids each future's slice resolves with (freshly assigned for
+        inserts, caller-provided for delete/update)."""
+        if kind == "insert":
+            vecs = self._pending_vectors(items)
+            b = len(vecs)
+            ids = np.arange(
+                self.index._next_id, self.index._next_id + b, dtype=np.int32
+            )
+            self.index._next_id += b
+            pv, valid = self._padded(vecs, self._bucket(b))
+        elif kind == "delete":
+            ids = np.concatenate(
+                [np.atleast_1d(i.payload) for i in items]
+            ).astype(np.int32)
+            b = len(ids)
+            valid = np.zeros((self._bucket(b),), bool)
+            valid[:b] = True
+        else:  # update
+            vecs = np.concatenate(
+                [np.atleast_2d(i.payload[0]) for i in items], 0
+            )
+            ids = np.concatenate(
+                [np.atleast_1d(i.payload[1]) for i in items]
+            ).astype(np.int32)
+            b = len(ids)
+            pv, valid = self._padded(vecs, self._bucket(b))
+        pids = np.full((len(valid),), -1, np.int32)
+        pids[:b] = ids
+        if kind == "delete":
+            args = (jnp.asarray(pids), jnp.asarray(valid))
+        else:
+            args = (jnp.asarray(pv), jnp.asarray(pids), jnp.asarray(valid))
+        return args, ids
+
+    def _maybe_compact(self):
+        """Opportunistic dead-space reclamation on the mutation lane (the
+        caller holds no lock; passes run under it).  Uses the index's
+        rearrange step, whose trigger covers both the paper's insert
+        statistic and the mutation subsystem's dead-fraction threshold."""
+        fn = self.index._rearrange_fn
+        if fn is None:
+            return
+        for _ in range(max(self.cfg.compact_passes, 0)):
+            with self._state_lock:
+                self.index.state, triggered = fn(self.index.state)
+                self._budget = None  # compaction may shrink chains
+            if not bool(triggered):
+                break
+            self._counters.inc("compactions")
+
+    def _apply_run(self, items: list[_Timed], *, _isolate: bool = True):
+        """Dispatch one same-kind run as one jitted step; same failure
+        discipline as the search path (no future may hang).  A failed
+        multi-item run retries once per item so one poisoned payload fails
+        only its own future."""
+        kind = items[0].kind
+        step = {
+            "insert": self._insert_step,
+            "delete": self._delete_step,
+            "update": self._update_step,
+        }[kind]
+        try:
+            self._faults.check("mutation_step")
+            args, ids = self._mutation_args(kind, items)
+            with self._state_lock:
+                self.index.state = step(self.index.state, *args)
+                st = self.index.state
+                self._budget = None  # chains may have grown
+            jax.block_until_ready(st.cluster_len)
+        except Exception as e:
+            if _isolate and len(items) > 1:
+                self._counters.inc("isolations")
+                for it in items:
+                    self._apply_run([it], _isolate=False)
+                return
+            self._counters.inc("poisoned", len(items))
+            self._fail_futures(items, e)
+            return
+        self._counters.inc(
+            {"insert": "inserts", "delete": "deletes",
+             "update": "updates"}[kind],
+            len(ids),
+        )
+        self._resolve_mutations(items, ids)
+        # after the futures resolve: a compaction failure must not fail
+        # a mutation that already applied
+        if kind != "insert" and self.cfg.auto_compact:
+            try:
+                self._maybe_compact()
+            except Exception:
+                log.exception("auto-compact pass failed")
+                self._counters.inc("compact_errors")
+
+    def _apply_mutations(self, items: list[_Timed]):
+        """Apply a drained (possibly mixed-kind) item list run by run, in
+        arrival order."""
+        while items:
+            take, items = self._split_flush(items)
+            self._apply_run(take)
+
+    def _resolve_mutations(self, items: list[_Timed], ids: np.ndarray):
+        """Each future gets exactly the ids of its own rows."""
+        t = time.perf_counter()
+        off = 0
+        for it in items:
+            n = self._n_rows(it)
+            lat = self._insert_lat if it.kind == "insert" else \
+                self._mutation_lat
+            with self._lat_lock:
+                lat.append(t - it.t_arrival)
+            if not it.future.done():
+                it.future.set_result(ids[off : off + n])
+            self._release_gate(it)
+            off += n
+
+    def _insert_loop_body(self):
+        if self.cfg.mode == "serial":
+            return  # serial mode: the search loop owns mutations too
+        while not self._stop.is_set():
+            items: list[_Timed] = []
+            try:
+                # fault site sits before any dequeue so an injected crash
+                # never strands items in hand
+                self._faults.check("insert_loop")
+                items = self._drain_inserts()
+                items = self._shed_expired(items, "mutation")
+                if not items:
+                    continue
+                if self.cfg.mode == "fused":
+                    # hand the batch to the search loop for fused dispatch
+                    self._fused_pending.put(items)
+                    items = []
+                else:
+                    self._apply_mutations(items)
+                    items = []
+            except Exception as e:
+                # crash with a batch in hand: its futures must not outlive
+                # the worker (the supervisor restarts the loop, not them)
+                self._fail_futures(items, e)
+                raise
+
+    def _collect_search_batch(self) -> list[_Timed]:
+        items: list[_Timed] = []
+        try:
+            items.append(self._search_q.get(timeout=0.005))
+        except queue.Empty:
+            return items
+        while len(items) < self.cfg.max_search_batch:
+            try:
+                items.append(self._search_q.get_nowait())
+            except queue.Empty:
+                break
+        return self._shed_expired(items, "search")
+
+    def _run_search(self, items: list[_Timed], *, _isolate: bool = True,
+                    _release: bool = True):
+        """Dispatch one search batch.  A mid-step exception (jit failure,
+        injected fault, ...) must not leak: every batched future is
+        resolved — result or exception — and every acquired slot is
+        released in the ``finally`` (one slot per item, taken at submit).
+        A failed multi-item batch retries once per item (poison isolation)."""
+        try:
+            try:
+                self._faults.check("search_step")
+                qs = [np.atleast_2d(i.payload) for i in items]
+                counts = [len(q) for q in qs]
+                batch = np.concatenate(qs, 0)
+                pb, valid = self._padded(batch, self._bucket(len(batch)))
+                with self._state_lock:
+                    st = self.index.state
+                    base = self._current_budget()
+                    if _isolate:  # top-level dispatch: feed the ladder
+                        age = time.perf_counter() - min(
+                            i.t_arrival for i in items
+                        )
+                        level = self._ladder.observe(age)
+                    else:
+                        level = self._ladder.level
+                    nprobe, rerank, eff = self._ladder.apply(
+                        self.cfg.nprobe, self.cfg.rerank, base, level
+                    )
+                    step = self._search_step_for(base, eff, nprobe, rerank)
+                    d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
+                d, i = np.asarray(d), np.asarray(i)
+            except Exception as e:
+                if _isolate and len(items) > 1:
+                    self._counters.inc("isolations")
+                    for it in items:
+                        self._run_search(
+                            [it], _isolate=False, _release=False
+                        )
+                    return
+                self._counters.inc("poisoned", len(items))
+                self._fail_futures(items, e)
+                return
+            t = time.perf_counter()
+            off = 0
+            for it, c in zip(items, counts):
+                with self._lat_lock:
+                    self._search_lat.append(t - it.t_arrival)
+                if not it.future.done():
+                    it.future.set_result(
+                        (d[off : off + c], i[off : off + c])
+                    )
+                off += c
+        finally:
+            if _release:
+                for _ in items:
+                    self._slots.release()
+
+    def _serial_mutations(self):
+        """Fig. 2a single-lane mode: mutations interleave with (and block)
+        searches on the same execution stream.  Pending items live on the
+        instance so restarts and the shutdown drain never strand them."""
+        try:
+            self._serial_pending.append(self._insert_q.get_nowait())
+        except queue.Empty:
+            pass
+        self._serial_pending = self._shed_expired(
+            self._serial_pending, "mutation"
+        )
+        n_pend = sum(self._n_rows(x) for x in self._serial_pending)
+        if self._serial_pending and (
+            n_pend >= self.cfg.flush_min
+            or time.perf_counter() - self._serial_last_flush
+            > self.cfg.flush_interval
+        ):
+            items, self._serial_pending = self._serial_pending, []
+            self._apply_mutations(items)
+            self._serial_last_flush = time.perf_counter()
+
+    def _search_loop_body(self):
+        while not self._stop.is_set():
+            items: list[_Timed] = []
+            ins: Optional[list[_Timed]] = None
+            try:
+                self._faults.check("search_loop")
+                if self.cfg.mode == "serial":
+                    self._serial_mutations()
+                items = self._collect_search_batch()
+                if self.cfg.mode == "fused":
+                    try:
+                        ins = self._fused_pending.get_nowait()
+                    except queue.Empty:
+                        ins = None
+                    if ins:
+                        ins = self._shed_expired(ins, "mutation") or None
+                    if ins and items:
+                        s, m = items, ins
+                        items, ins = [], None
+                        self._run_fused(s, m)
+                        continue
+                    if ins:  # no search to pair with: standalone mutation
+                        m, ins = ins, None
+                        self._apply_mutations(m)
+                if items:
+                    s, items = items, []
+                    self._run_search(s)
+            except Exception as e:
+                # crash with requests in hand: resolve them (and release
+                # their slots) before the supervisor restarts the loop
+                for it in items:
+                    if not it.future.done():
+                        it.future.set_exception(e)
+                    self._slots.release()
+                if ins:
+                    self._fail_futures(ins, e)
+                raise
+
+    def _run_fused(self, s_items: list[_Timed], i_items: list[_Timed]):
+        """One fused search+mutation dispatch (the paper's multi-stream
+        mode, now covering insert *and* delete/update batches).  The first
+        same-kind run pairs with the search batch as ONE jitted program;
+        any remaining runs of the drained batch are applied right after, in
+        arrival order.  Same leak discipline as ``_run_search``: a mid-step
+        exception resolves every search *and* mutation future, and the
+        search slots are released in the ``finally``.  A failed fused
+        program decomposes into the two separate lanes so per-item poison
+        isolation can find the bad payload."""
+        i_run, rest = self._split_flush(i_items)
+        kind = i_run[0].kind
+        try:
+            try:
+                self._faults.check("fused_step")
+                qs = [np.atleast_2d(x.payload) for x in s_items]
+                counts = [len(q) for q in qs]
+                qbatch = np.concatenate(qs, 0)
+                m_args, ids = self._mutation_args(kind, i_run)
+                pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
+                with self._state_lock:
+                    base = self._current_budget()
+                    age = time.perf_counter() - min(
+                        x.t_arrival for x in s_items
+                    )
+                    nprobe, rerank, eff = self._ladder.apply(
+                        self.cfg.nprobe, self.cfg.rerank, base,
+                        self._ladder.observe(age),
+                    )
+                    fused_step = self._fused_step_for(
+                        base, kind, eff, nprobe, rerank
+                    )
+                    self.index.state, d, i = fused_step(
+                        self.index.state,
+                        jnp.asarray(pq_),
+                        jnp.asarray(qvalid),
+                        *m_args,
+                    )
+                    st = self.index.state
+                    self._budget = None  # chains may have grown or shrunk
+                d, i = np.asarray(d), np.asarray(i)
+                jax.block_until_ready(st.cluster_len)
+            except Exception:
+                self._counters.inc("fused_fallbacks")
+                self._run_search(s_items, _release=False)
+                self._apply_run(i_run)
+                return
+            self._counters.inc(
+                {"insert": "inserts", "delete": "deletes",
+                 "update": "updates"}[kind],
+                len(ids),
+            )
+            t = time.perf_counter()
+            off = 0
+            for it, c in zip(s_items, counts):
+                with self._lat_lock:
+                    self._search_lat.append(t - it.t_arrival)
+                if not it.future.done():
+                    it.future.set_result(
+                        (d[off : off + c], i[off : off + c])
+                    )
+                off += c
+            self._resolve_mutations(i_run, ids)
+            if kind != "insert" and self.cfg.auto_compact:
+                try:
+                    self._maybe_compact()
+                except Exception:
+                    log.exception("auto-compact pass failed")
+                    self._counters.inc("compact_errors")
+        except Exception as e:
+            self._fail_futures(s_items, e)
+            self._fail_futures(i_run, e)
+        finally:
+            for _ in s_items:
+                self._slots.release()
+        if rest:  # later runs / overflow of the drained batch, in order
+            self._apply_mutations(rest)

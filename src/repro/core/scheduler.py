@@ -1,654 +1,14 @@
-"""Multi-stream serving runtime (paper Alg. 4 + deployment §3.3).
+"""Compatibility shim: the serving runtime moved to ``repro.core.runtime``
+(with admission control / deadlines / degradation in
+``repro.core.admission`` and deterministic fault injection in
+``repro.core.faults``).  Import from those modules in new code; this one
+keeps the historical ``repro.core.scheduler`` entry point working."""
 
-Reproduces the paper's execution architecture with TPU-appropriate
-mechanisms (DESIGN.md §2, §5):
-
-* **Resource pool** — 32 slots, each a permit to dispatch a search; when all
-  slots are busy the request is *rejected* (the paper's lock-free queue with
-  rejection).  Slot scratch memory is implicit in JAX (each jitted search
-  owns preallocated output buffers), the central-pool overflow grant is
-  modelled by the shared device arena.
-* **Dedicated mutation lane** — one thread owns the index state and applies
-  donated insert/delete/update steps; the paper's single data stream, grown
-  into a full mutation stream.  Deletes tombstone rows through the device
-  id map, updates tombstone + re-insert under the same id in one dispatch
-  (core.mutate), and arrival order is preserved: the lane batches
-  *consecutive runs of the same kind*, so delete-then-insert of an id can
-  never be reordered into insert-then-delete.
-* **Dynamic batcher** — inserts aggregate until ``flush_min`` (128) pending
-  or ``flush_interval`` (1 s) elapsed, capped at ``flush_max`` (1024);
-  search batches are capped at ``max_search_batch`` (10).  All paper §3.3
-  values are the defaults.
-* **Execution modes** (benchmarked in Fig. 3 reproduction):
-    - ``serial``   — Fig. 2a: one lane; an insert in flight blocks searches.
-    - ``parallel`` — Fig. 2b: search slots dispatch concurrently with the
-      insert lane.  Correctness under buffer donation: dispatch happens
-      under the state lock (cheap — dispatch is async), execution overlaps.
-    - ``fused``    — TPU-native multi-stream: a pending insert batch and a
-      pending search batch are submitted as ONE jitted program whose two
-      subgraphs share no data edge, so the XLA scheduler overlaps them
-      (search reads the pre-insert state — the legal concurrent
-      serialisation, same as the paper's streams).
-"""
-
-from __future__ import annotations
-
-import collections
-import dataclasses
-import queue
-import threading
-import time
-from concurrent.futures import Future
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.block_pool import pool_stats
-from repro.core.insert import assign_clusters, insert_payload
-from repro.core.ivf import IVFIndex
-from repro.core.metrics import LatencyStats
-from repro.core.mutate import apply_delete, last_occurrence_mask
-from repro.core import pq as pqmod
-from repro.core.search import resolve_search_impl
-
-
-class RequestRejected(RuntimeError):
-    """All resource-pool slots busy (paper: reject at 32 exhausted)."""
-
-
-@dataclasses.dataclass
-class _Timed:
-    future: Future
-    t_arrival: float
-    payload: object
-    kind: str = "insert"  # insert | delete | update (mutation lane kinds)
-    t_done: float = 0.0
-
-
-@dataclasses.dataclass
-class RuntimeConfig:
-    n_slots: int = 32  # paper: 32 independent resources
-    max_search_batch: int = 10  # paper: max search batch 10
-    flush_min: int = 128  # paper: dispatch at 128 pending inserts
-    flush_max: int = 1024  # paper: cap 1024
-    flush_interval: float = 1.0  # paper: flush every second
-    nprobe: int = 16
-    k: int = 10
-    mode: str = "parallel"  # serial | parallel | fused
-    # any path make_search_fn supports: block_table | chain_walk | union |
-    # union_pallas | union_fused | union_fused_scan (typos raise ValueError
-    # at construction — a silent fallback would serve the wrong path)
-    search_path: str = "block_table"
-    # exact-fp32 re-rank epilogue over the fused survivors (fused paths
-    # only; rejected at construction otherwise)
-    rerank: bool = False
-    # latency samples kept for stats(); unbounded lists grow forever under
-    # sustained traffic
-    latency_window: int = 10_000
-    # run dead-space-reclaiming compaction passes on the mutation lane after
-    # a delete/update batch whenever a cluster crosses the dead-fraction
-    # trigger (see core.rearrange); off by default — maintenance cadence is
-    # a deployment decision
-    auto_compact: bool = False
-    compact_passes: int = 4
-
-
-class ServingRuntime:
-    """Owns the IVF index state + jitted steps; serves search/insert."""
-
-    def __init__(self, index: IVFIndex, cfg: RuntimeConfig = RuntimeConfig()):
-        self.index = index
-        self.cfg = cfg
-        self.pool_cfg = index.pool_cfg
-        self._state_lock = threading.Lock()
-        self._slots = threading.Semaphore(cfg.n_slots)
-        self._stop = threading.Event()
-        self._search_q: queue.Queue = queue.Queue()
-        self._insert_q: queue.Queue = queue.Queue()
-        # bounded: stats() reports over a sliding window instead of every
-        # sample since process start.  Appends and snapshots share a lock —
-        # iterating a deque while a worker appends raises RuntimeError
-        # (unlike the copy-a-list-under-GIL idiom it replaced).
-        self._lat_lock = threading.Lock()
-        self._search_lat: collections.deque = collections.deque(
-            maxlen=cfg.latency_window
-        )
-        self._insert_lat: collections.deque = collections.deque(
-            maxlen=cfg.latency_window
-        )
-        self._mutation_lat: collections.deque = collections.deque(
-            maxlen=cfg.latency_window
-        )
-        self._rejects = 0
-        # mutation-stream counters (rows applied, not batches)
-        self._n_inserts = 0
-        self._n_deletes = 0
-        self._n_updates = 0
-        self._n_compactions = 0
-        self._fused_pending = queue.Queue()
-        self._build_steps()
-        self._threads = [
-            threading.Thread(target=self._insert_loop, daemon=True),
-            threading.Thread(target=self._search_loop, daemon=True),
-        ]
-        for t in self._threads:
-            t.start()
-
-    # ------------------------------------------------------------ steps --
-    def _build_steps(self):
-        cfg, pc = self.cfg, self.pool_cfg
-        pq = self.index.pq
-        # fail at construction, not inside the worker thread's first jit
-        # trace: raises ValueError on an unknown path (no silent fallback)
-        # and NotImplementedError on a payload mismatch
-        self._search_impl = resolve_search_impl(
-            pc, cfg.search_path, cfg.rerank
-        )
-        # state-free: centroids come from the traced state argument, so the
-        # cached steps never bake a stale pool copy in as jit constants
-        self._score_fn = pqmod.pq_score_fn(pq) if pq is not None else None
-        # jitted steps are cached per chain budget: the budget is recomputed
-        # at dispatch time (see _current_budget), so online growth costs one
-        # recompile per power-of-two bucket instead of silently truncating
-        self._search_steps: dict[int, object] = {}
-        self._fused_steps: dict[int, object] = {}
-        # cached bucketed budget; None forces a recompute (a host readback
-        # of the live chain depth) — invalidated only by the insert paths,
-        # so pure-search traffic never pays the device sync
-        self._budget: Optional[int] = None
-
-        def _insert(state, vectors, ids, valid):
-            assign = assign_clusters(state.centroids, vectors)
-            if pq is None:
-                payload = vectors
-            else:
-                payload = pqmod.encode(pq, vectors - state.centroids[assign])
-            return insert_payload(pc, state, assign, payload, ids, valid)
-
-        def _delete(state, ids, valid):
-            return apply_delete(pc, state, ids, valid)
-
-        def _update(state, vectors, ids, valid):
-            # tombstone + re-insert under the same id, one dispatch: no
-            # state where both (or neither) copy is visible can be observed;
-            # duplicate targets merged into one run re-insert last-write-wins
-            state = apply_delete(pc, state, ids, valid)
-            return _insert(state, vectors, ids,
-                           last_occurrence_mask(ids, valid))
-
-        # raw fns feed the fused (search+mutation) programs; jitted steps
-        # serve the standalone mutation lane
-        self._mutation_fns = {
-            "insert": _insert, "delete": _delete, "update": _update,
-        }
-        self._insert_fn = _insert
-        self._insert_step = jax.jit(_insert, donate_argnums=(0,))
-        self._delete_step = jax.jit(_delete, donate_argnums=(0,))
-        self._update_step = jax.jit(_update, donate_argnums=(0,))
-
-    def _current_budget(self) -> int:
-        """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
-
-        The budget is the live chain depth bucketed to the next power of
-        two with 2x headroom (capped at ``max_chain``) *before* it keys the
-        ``_search_steps``/``_fused_steps`` jit caches, so steady chain
-        growth costs O(log max_chain) recompiles instead of one per
-        increment; computing it once at construction silently truncated
-        chains — and dropped candidates — after online inserts grew them
-        past 2x the initial depth.  The value is cached between inserts
-        (callers hold ``_state_lock``).  Chains never shrink, so when the
-        bucket advances the entries keyed by smaller budgets can never be
-        dispatched again — they are evicted instead of pinning their
-        compiled executables (and output buffers) forever.
-        """
-        if self._budget is None:
-            # IVFIndex._chain_budget() happens to return pow2 buckets
-            # already, making the _bucket pass idempotent today — it is
-            # enforced *here* regardless, because the jit-cache keys below
-            # are what actually bound the recompile count; a future budget
-            # heuristic must not silently re-introduce
-            # one-recompile-per-increment growth.
-            budget = min(
-                self._bucket(2 * self.index._chain_budget(), floor=1),
-                self.pool_cfg.max_chain,
-            )
-            # _search_steps is keyed by budget, _fused_steps by
-            # (budget, mutation kind)
-            for cache in (self._search_steps, self._fused_steps):
-                for stale in [
-                    k for k in cache
-                    if (k[0] if isinstance(k, tuple) else k) < budget
-                ]:
-                    del cache[stale]
-            self._budget = budget
-        return self._budget
-
-    def _make_search(self, budget: int):
-        cfg, pc = self.cfg, self.pool_cfg
-
-        def _search(state, queries, valid):
-            d, i = self._search_impl(
-                pc, state, queries, nprobe=cfg.nprobe, k=cfg.k,
-                score_fn=self._score_fn, chain_budget=budget,
-                pq=self.index.pq, rerank=cfg.rerank,
-            )
-            return d, jnp.where(valid[:, None], i, -1)
-
-        return _search
-
-    def _search_step_for(self, budget: int):
-        if budget not in self._search_steps:
-            self._search_steps[budget] = jax.jit(self._make_search(budget))
-        return self._search_steps[budget]
-
-    def _fused_step_for(self, budget: int, kind: str = "insert"):
-        key = (budget, kind)
-        if key not in self._fused_steps:
-            _search = self._make_search(budget)
-            _mutate = self._mutation_fns[kind]
-
-            def _fused(state, queries, qvalid, *m_args):
-                # two independent subgraphs; XLA overlaps them (multi-stream)
-                d, i = _search(state, queries, qvalid)
-                new_state = _mutate(state, *m_args)
-                return new_state, d, i
-
-            self._fused_steps[key] = jax.jit(_fused, donate_argnums=(0,))
-        return self._fused_steps[key]
-
-    # ------------------------------------------------------------ API ----
-    def submit_search(self, queries: np.ndarray) -> Future:
-        if not self._slots.acquire(blocking=False):
-            self._rejects += 1
-            raise RequestRejected("resource pool exhausted")
-        fut = Future()
-        self._search_q.put(_Timed(fut, time.perf_counter(), queries))
-        return fut
-
-    def submit_insert(self, vectors: np.ndarray) -> Future:
-        fut = Future()
-        self._insert_q.put(_Timed(fut, time.perf_counter(), vectors))
-        return fut
-
-    def submit_delete(self, ids: np.ndarray) -> Future:
-        """Tombstone ids through the mutation lane.  Resolves with the ids
-        once the delete step has been applied (misses — unknown or already
-        deleted ids — are counted in the index state, not surfaced per
-        request: the batch is one fused dispatch)."""
-        fut = Future()
-        ids = np.atleast_1d(np.asarray(ids, np.int32))
-        self._insert_q.put(
-            _Timed(fut, time.perf_counter(), ids, kind="delete")
-        )
-        return fut
-
-    def submit_update(self, vectors: np.ndarray, ids: np.ndarray) -> Future:
-        """Replace the vectors behind ``ids`` (tombstone + re-insert under
-        the same id, one dispatch).  Resolves with the ids once applied."""
-        vectors = np.atleast_2d(vectors)
-        ids = np.atleast_1d(np.asarray(ids, np.int32))
-        if len(ids) != len(vectors):
-            raise ValueError(f"{len(ids)} ids for {len(vectors)} vectors")
-        fut = Future()
-        self._insert_q.put(
-            _Timed(fut, time.perf_counter(), (vectors, ids), kind="update")
-        )
-        return fut
-
-    def stop(self):
-        self._stop.set()
-        for t in self._threads:
-            t.join(timeout=5)
-
-    def stats(self, timeout_ms: float = 20.0):
-        with self._lat_lock:
-            search = tuple(self._search_lat)
-            insert = tuple(self._insert_lat)
-            mutation = tuple(self._mutation_lat)
-        out = {
-            "search": LatencyStats.from_samples(search, timeout_ms),
-            "insert": LatencyStats.from_samples(insert, timeout_ms),
-            "mutation": LatencyStats.from_samples(mutation, timeout_ms),
-            "rejected": self._rejects,
-            "inserts": self._n_inserts,
-            "deletes": self._n_deletes,
-            "updates": self._n_updates,
-            "compactions": self._n_compactions,
-        }
-        # live-occupancy gauges: allocated != occupied once tombstones exist
-        with self._state_lock:
-            out.update(pool_stats(self.index.state, self.pool_cfg))
-        return out
-
-    # --------------------------------------------------------- workers ---
-    @staticmethod
-    def _n_rows(it: _Timed) -> int:
-        """Row count of a mutation item (vectors for insert, ids for
-        delete, paired (vectors, ids) for update)."""
-        if it.kind == "delete":
-            return len(np.atleast_1d(it.payload))
-        if it.kind == "update":
-            return len(np.atleast_2d(it.payload[0]))
-        return len(np.atleast_2d(it.payload))
-
-    def _drain_inserts(self) -> list[_Timed]:
-        """Dynamic batching policy from §3.3 over the mutation lane.
-
-        A running row count is kept instead of re-concatenating every pending
-        payload per queue pop (that was quadratic in batch size)."""
-        items: list[_Timed] = []
-        pending_rows = 0
-        deadline = time.perf_counter() + self.cfg.flush_interval
-        while not self._stop.is_set():
-            timeout = deadline - time.perf_counter()
-            if timeout <= 0:
-                break
-            try:
-                item = self._insert_q.get(timeout=min(timeout, 0.01))
-            except queue.Empty:
-                continue
-            items.append(item)
-            pending_rows += self._n_rows(item)
-            if pending_rows >= self.cfg.flush_min:
-                break
-        return items
-
-    def _split_flush(self, items: list[_Timed]):
-        """Longest whole-item same-kind prefix within ``flush_max`` rows +
-        the remainder.
-
-        Items are never split mid-payload (each future must resolve with its
-        exact ids), so a single oversized item is dispatched alone and may
-        exceed the cap.  A kind switch also ends the batch: runs of the same
-        kind dispatch as one fused step, and arrival order across kinds is
-        preserved (delete-then-insert of an id must never reorder).  The
-        remainder is applied next, never dropped."""
-        take: list[_Timed] = []
-        rows = 0
-        for pos, it in enumerate(items):
-            n = self._n_rows(it)
-            if take and (
-                rows + n > self.cfg.flush_max or it.kind != take[0].kind
-            ):
-                return take, items[pos:]
-            take.append(it)
-            rows += n
-        return take, []
-
-    @staticmethod
-    def _pending_vectors(items: list[_Timed]) -> np.ndarray:
-        if not items:
-            return np.zeros((0, 1), np.float32)
-        return np.concatenate([np.atleast_2d(i.payload) for i in items], 0)
-
-    @staticmethod
-    def _bucket(n: int, floor: int = 8) -> int:
-        """Next power-of-two bucket — keeps the jit cache tiny."""
-        b = floor
-        while b < n:
-            b *= 2
-        return b
-
-    def _padded(self, rows: np.ndarray, bucket: int):
-        n = len(rows)
-        out = np.zeros((bucket, rows.shape[1]), np.float32)
-        out[:n] = rows
-        valid = np.zeros((bucket,), bool)
-        valid[:n] = True
-        return out, valid
-
-    @staticmethod
-    def _fail_futures(items: list[_Timed], exc: BaseException):
-        """Propagate a mid-step failure: an unresolved future would hang its
-        caller forever."""
-        for it in items:
-            if not it.future.done():
-                it.future.set_exception(exc)
-
-    def _mutation_args(self, kind: str, items: list[_Timed]):
-        """Pack one same-kind run into the padded, fixed-shape device args
-        of its jitted step.  Returns (step_args, ids) — ids are the
-        per-row ids each future's slice resolves with (freshly assigned for
-        inserts, caller-provided for delete/update)."""
-        if kind == "insert":
-            vecs = self._pending_vectors(items)
-            b = len(vecs)
-            ids = np.arange(
-                self.index._next_id, self.index._next_id + b, dtype=np.int32
-            )
-            self.index._next_id += b
-            pv, valid = self._padded(vecs, self._bucket(b))
-        elif kind == "delete":
-            ids = np.concatenate(
-                [np.atleast_1d(i.payload) for i in items]
-            ).astype(np.int32)
-            b = len(ids)
-            valid = np.zeros((self._bucket(b),), bool)
-            valid[:b] = True
-        else:  # update
-            vecs = np.concatenate(
-                [np.atleast_2d(i.payload[0]) for i in items], 0
-            )
-            ids = np.concatenate(
-                [np.atleast_1d(i.payload[1]) for i in items]
-            ).astype(np.int32)
-            b = len(ids)
-            pv, valid = self._padded(vecs, self._bucket(b))
-        pids = np.full((len(valid),), -1, np.int32)
-        pids[:b] = ids
-        if kind == "delete":
-            args = (jnp.asarray(pids), jnp.asarray(valid))
-        else:
-            args = (jnp.asarray(pv), jnp.asarray(pids), jnp.asarray(valid))
-        return args, ids
-
-    def _maybe_compact(self):
-        """Opportunistic dead-space reclamation on the mutation lane (the
-        caller holds no lock; passes run under it).  Uses the index's
-        rearrange step, whose trigger covers both the paper's insert
-        statistic and the mutation subsystem's dead-fraction threshold."""
-        fn = self.index._rearrange_fn
-        if fn is None:
-            return
-        for _ in range(max(self.cfg.compact_passes, 0)):
-            with self._state_lock:
-                self.index.state, triggered = fn(self.index.state)
-                self._budget = None  # compaction may shrink chains
-            if not bool(triggered):
-                break
-            self._n_compactions += 1
-
-    def _apply_run(self, items: list[_Timed]):
-        """Dispatch one same-kind run as one jitted step; same failure
-        discipline as the search path (no future may hang)."""
-        kind = items[0].kind
-        step = {
-            "insert": self._insert_step,
-            "delete": self._delete_step,
-            "update": self._update_step,
-        }[kind]
-        try:
-            args, ids = self._mutation_args(kind, items)
-            with self._state_lock:
-                self.index.state = step(self.index.state, *args)
-                st = self.index.state
-                self._budget = None  # chains may have grown
-            jax.block_until_ready(st.cluster_len)
-            if kind == "insert":
-                self._n_inserts += len(ids)
-            elif kind == "delete":
-                self._n_deletes += len(ids)
-            else:
-                self._n_updates += len(ids)
-            self._resolve_mutations(items, ids)
-            # after the futures resolve: a compaction failure must not fail
-            # a mutation that already applied
-            if kind != "insert" and self.cfg.auto_compact:
-                self._maybe_compact()
-        except Exception as e:
-            self._fail_futures(items, e)
-
-    def _apply_mutations(self, items: list[_Timed]):
-        """Apply a drained (possibly mixed-kind) item list run by run, in
-        arrival order."""
-        while items:
-            take, items = self._split_flush(items)
-            self._apply_run(take)
-
-    def _resolve_mutations(self, items: list[_Timed], ids: np.ndarray):
-        """Each future gets exactly the ids of its own rows."""
-        t = time.perf_counter()
-        off = 0
-        for it in items:
-            n = self._n_rows(it)
-            lat = self._insert_lat if it.kind == "insert" else \
-                self._mutation_lat
-            with self._lat_lock:
-                lat.append(t - it.t_arrival)
-            it.future.set_result(ids[off : off + n])
-            off += n
-
-    def _insert_loop(self):
-        if self.cfg.mode == "serial":
-            return  # serial mode: the search loop owns mutations too
-        while not self._stop.is_set():
-            items = self._drain_inserts()
-            if not items:
-                continue
-            if self.cfg.mode == "fused":
-                # hand the batch to the search loop for fused dispatch
-                self._fused_pending.put(items)
-            else:
-                self._apply_mutations(items)
-
-    def _collect_search_batch(self) -> list[_Timed]:
-        items: list[_Timed] = []
-        try:
-            items.append(self._search_q.get(timeout=0.005))
-        except queue.Empty:
-            return items
-        while len(items) < self.cfg.max_search_batch:
-            try:
-                items.append(self._search_q.get_nowait())
-            except queue.Empty:
-                break
-        return items
-
-    def _run_search(self, items: list[_Timed]):
-        """Dispatch one search batch.  A mid-step exception (bad payload
-        shape, jit failure, ...) must not leak: every batched future is
-        resolved — result or exception — and every acquired slot is
-        released in the ``finally`` (one slot per item, taken at submit)."""
-        try:
-            qs = [np.atleast_2d(i.payload) for i in items]
-            counts = [len(q) for q in qs]
-            batch = np.concatenate(qs, 0)
-            pb, valid = self._padded(batch, self._bucket(len(batch)))
-            with self._state_lock:
-                st = self.index.state
-                step = self._search_step_for(self._current_budget())
-                d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
-            d, i = np.asarray(d), np.asarray(i)
-            t = time.perf_counter()
-            off = 0
-            for it, c in zip(items, counts):
-                with self._lat_lock:
-                    self._search_lat.append(t - it.t_arrival)
-                it.future.set_result((d[off : off + c], i[off : off + c]))
-                off += c
-        except Exception as e:
-            self._fail_futures(items, e)
-        finally:
-            for _ in items:
-                self._slots.release()
-
-    def _search_loop(self):
-        serial_insert_items: list[_Timed] = []
-        last_flush = time.perf_counter()
-        while not self._stop.is_set():
-            if self.cfg.mode == "serial":
-                # Fig. 2a: one lane — inserts interleave with (and block)
-                # searches on the same execution stream.
-                try:
-                    it = self._insert_q.get_nowait()
-                    serial_insert_items.append(it)
-                except queue.Empty:
-                    pass
-                n_pend = sum(self._n_rows(x) for x in serial_insert_items)
-                if serial_insert_items and (
-                    n_pend >= self.cfg.flush_min
-                    or time.perf_counter() - last_flush > self.cfg.flush_interval
-                ):
-                    self._apply_mutations(serial_insert_items)
-                    serial_insert_items = []
-                    last_flush = time.perf_counter()
-            items = self._collect_search_batch()
-            if self.cfg.mode == "fused":
-                try:
-                    ins_items = self._fused_pending.get_nowait()
-                except queue.Empty:
-                    ins_items = None
-                if ins_items and items:
-                    self._run_fused(items, ins_items)
-                    continue
-                if ins_items:  # no search to pair with: standalone mutation
-                    self._apply_mutations(ins_items)
-            if items:
-                self._run_search(items)
-
-    def _run_fused(self, s_items: list[_Timed], i_items: list[_Timed]):
-        """One fused search+mutation dispatch (the paper's multi-stream
-        mode, now covering insert *and* delete/update batches).  The first
-        same-kind run pairs with the search batch as ONE jitted program;
-        any remaining runs of the drained batch are applied right after, in
-        arrival order.  Same leak discipline as ``_run_search``: a mid-step
-        exception resolves every search *and* mutation future, and the
-        search slots are released in the ``finally``."""
-        i_items, rest = self._split_flush(i_items)
-        kind = i_items[0].kind
-        try:
-            qs = [np.atleast_2d(x.payload) for x in s_items]
-            counts = [len(q) for q in qs]
-            qbatch = np.concatenate(qs, 0)
-            m_args, ids = self._mutation_args(kind, i_items)
-            pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
-            with self._state_lock:
-                fused_step = self._fused_step_for(
-                    self._current_budget(), kind
-                )
-                self.index.state, d, i = fused_step(
-                    self.index.state,
-                    jnp.asarray(pq_),
-                    jnp.asarray(qvalid),
-                    *m_args,
-                )
-                st = self.index.state
-                self._budget = None  # chains may have grown or shrunk
-            d, i = np.asarray(d), np.asarray(i)
-            jax.block_until_ready(st.cluster_len)
-            if kind == "insert":
-                self._n_inserts += len(ids)
-            elif kind == "delete":
-                self._n_deletes += len(ids)
-            else:
-                self._n_updates += len(ids)
-            t = time.perf_counter()
-            off = 0
-            for it, c in zip(s_items, counts):
-                with self._lat_lock:
-                    self._search_lat.append(t - it.t_arrival)
-                it.future.set_result((d[off : off + c], i[off : off + c]))
-                off += c
-            self._resolve_mutations(i_items, ids)
-            if kind != "insert" and self.cfg.auto_compact:
-                self._maybe_compact()
-        except Exception as e:
-            self._fail_futures(s_items, e)
-            self._fail_futures(i_items, e)
-        finally:
-            for _ in s_items:
-                self._slots.release()
-        if rest:  # later runs / overflow of the drained batch, in order
-            self._apply_mutations(rest)
+from repro.core.admission import (  # noqa: F401
+    DeadlineExceeded,
+    QueueFull,
+    RequestRejected,
+    RuntimeShutdown,
+)
+from repro.core.faults import FaultPlan  # noqa: F401
+from repro.core.runtime import RuntimeConfig, ServingRuntime  # noqa: F401

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import IVFIndex, IVFIndexConfig, build_ivf
+from repro.core.faults import FaultPlan
 from repro.core.scheduler import RequestRejected, RuntimeConfig, ServingRuntime
 
 
@@ -233,10 +234,12 @@ def test_budget_buckets_pow2_and_evicts_stale_steps():
             assert b & (b - 1) == 0 or b == cfg.max_chain, b
             seen.add(b)
             rt._search_step_for(b)
-            rt._fused_step_for(b)  # fused cache keys are (budget, kind)
-            # only the current bucket's entries survive growth
-            assert set(rt._search_steps) == {b}
-            assert set(rt._fused_steps) == {(b, "insert")}
+            rt._fused_step_for(b)
+            # only the current bucket's entries survive growth; keys carry
+            # (base, effective_budget, nprobe, rerank[, kind]) so ladder
+            # rungs can share the caches without thrashing eviction
+            assert set(rt._search_steps) == {(b, b, 4, False)}
+            assert set(rt._fused_steps) == {(b, b, 4, False, "insert")}
         assert len(seen) > 2, "test must cross several buckets"
         assert len(seen) < 8, "pow2 bucketing keeps the bucket count small"
     finally:
@@ -246,21 +249,32 @@ def test_budget_buckets_pow2_and_evicts_stale_steps():
 def test_search_failure_resolves_futures_and_releases_slots(base_index):
     """Regression (slot/future leak): an exception mid-dispatch used to
     leave every batched future unresolved and the semaphore slots acquired
-    forever — after a few failures the runtime rejected all traffic."""
+    forever — after a few failures the runtime rejected all traffic.
+    Malformed payloads now fail fast at submit, so the mid-step failure is
+    injected deterministically instead."""
     x, make = base_index
     n_slots = 4
+    plan = FaultPlan().fail("search_step", nth=range(n_slots))
     rt = ServingRuntime(
         make(),
         RuntimeConfig(mode="parallel", n_slots=n_slots, nprobe=4, k=5),
+        faults=plan,
     )
     try:
-        # wrong dimensionality -> the jitted step raises inside the worker
-        bad = [rt.submit_search(np.zeros((1, 3), np.float32))
-               for _ in range(n_slots)]
+        # every dispatch in the first wave fails (single-item batches fail
+        # outright; multi-item batches burn several call indices retrying)
+        bad = [rt.submit_search(x[:1]) for _ in range(2)]
         for f in bad:
             with pytest.raises(Exception):
                 f.result(timeout=30)
         # every slot must be back: a full burst of valid searches succeeds
+        deadline = time.perf_counter() + 30
+        while plan.calls("search_step") < n_slots:  # drain the fault window
+            assert time.perf_counter() < deadline
+            try:
+                rt.submit_search(x[:1]).result(timeout=30)
+            except Exception:
+                pass
         good = [rt.submit_search(x[i : i + 1]) for i in range(n_slots)]
         for i, f in enumerate(good):
             d, ids = f.result(timeout=30)
@@ -271,19 +285,50 @@ def test_search_failure_resolves_futures_and_releases_slots(base_index):
 
 def test_insert_failure_resolves_futures(base_index):
     """A failing insert batch must fail its futures, not hang them, and the
-    insert lane must keep serving afterwards."""
+    insert lane must keep serving afterwards (failure injected: malformed
+    payloads no longer reach the worker)."""
     x, make = base_index
     rt = ServingRuntime(
         make(),
         RuntimeConfig(mode="parallel", nprobe=4, k=5, flush_min=1,
                       flush_interval=0.05),
+        faults=FaultPlan().fail("mutation_step", nth=0),
     )
     try:
-        bad = rt.submit_insert(np.zeros((2, 3), np.float32))  # wrong dim
+        bad = rt.submit_insert(_data(2, 16, seed=299))
         with pytest.raises(Exception):
             bad.result(timeout=30)
         ok = rt.submit_insert(_data(4, 16, seed=300))
         assert len(ok.result(timeout=30)) == 4
+    finally:
+        rt.stop()
+
+
+def test_malformed_payload_fails_fast_at_submit(base_index):
+    """Wrong-dim / non-finite / empty payloads raise in the caller's thread
+    at submit time and consume no slot — they can never fail a co-batched
+    request deep in a worker."""
+    x, make = base_index
+    n_slots = 3
+    rt = ServingRuntime(
+        make(), RuntimeConfig(mode="parallel", n_slots=n_slots, nprobe=4, k=5)
+    )
+    try:
+        for _ in range(2 * n_slots):  # more tries than slots: none consumed
+            with pytest.raises(ValueError, match="dim"):
+                rt.submit_search(np.zeros((1, 3), np.float32))
+        with pytest.raises(ValueError, match="non-finite"):
+            rt.submit_insert(np.full((2, 16), np.nan, np.float32))
+        with pytest.raises(ValueError, match="empty"):
+            rt.submit_insert(np.zeros((0, 16), np.float32))
+        with pytest.raises(ValueError, match="not integral"):
+            rt.submit_delete(np.array([1.5, 2.5]))
+        with pytest.raises(ValueError, match="ids for"):
+            rt.submit_update(_data(3, 16), np.array([1, 2], np.int32))
+        # all slots still free; the lanes were never involved
+        good = [rt.submit_search(x[i : i + 1]) for i in range(n_slots)]
+        for i, f in enumerate(good):
+            assert f.result(timeout=30)[1][0, 0] == i
     finally:
         rt.stop()
 
