@@ -119,6 +119,14 @@ def main():
     # crash-safe workers, drain-on-shutdown.  Operational contract and
     # the fault-injection API: docs/serving_ops.md.
 
+    # ---- static analysis ------------------------------------------------
+    # Before shipping changes to kernels or the serving layer, run
+    # `python -m repro.analysis --fail-on-findings`: it traces every
+    # dispatchable program above (all search paths x payloads, mutations,
+    # compaction) and enforces intermediate-byte budgets, int8-contraction
+    # dtype discipline, VMEM residency, and host-side lock/counter/
+    # jit-cache-key hygiene.  Rule catalog: docs/static_analysis.md.
+
 
 if __name__ == "__main__":
     main()

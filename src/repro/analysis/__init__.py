@@ -1,0 +1,25 @@
+"""Static analysis for the serving stack: a jaxpr trace auditor (layer 1)
+and a repo-specific AST linter (layer 2).  ``python -m repro.analysis``
+runs both plus the VMEM docs check and exits nonzero on findings; CI wires
+it in as the ``analysis`` job.  Rule catalog: docs/static_analysis.md.
+"""
+
+from repro.analysis.findings import Finding  # noqa: F401
+
+DOCS_SEARCH_PATHS = "docs/search_paths.md"
+
+
+def run_all(repo_root: str = "."):
+    """(findings, stats): full lint + trace audit + VMEM docs check."""
+    import os
+
+    from repro.analysis import jaxpr_audit, vmem
+    from repro.analysis.lint import lint_repo
+
+    findings = list(lint_repo(repo_root))
+    trace_findings, stats = jaxpr_audit.run_trace_audit()
+    findings.extend(trace_findings)
+    findings.extend(
+        vmem.check_docs(os.path.join(repo_root, DOCS_SEARCH_PATHS))
+    )
+    return findings, stats

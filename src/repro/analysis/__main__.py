@@ -1,0 +1,95 @@
+"""``python -m repro.analysis`` — run every static layer, exit nonzero on
+findings.
+
+    python -m repro.analysis                  # lint + trace audit + vmem docs
+    python -m repro.analysis --fail-on-findings   # same (explicit, for CI)
+    python -m repro.analysis --write-docs     # regenerate docs vmem section
+    python -m repro.analysis --fixture tests/fixtures/analysis/int8_upcast.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+from typing import List
+
+from repro.analysis.findings import Finding
+
+
+def _run_fixture(path: str) -> List[Finding]:
+    """Seeded-bad snippets declare FIXTURE_KIND = 'lint' | 'trace'."""
+    spec = importlib.util.spec_from_file_location("_analysis_fixture", path)
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+    kind = getattr(module, "FIXTURE_KIND", None)
+    if kind == "lint":
+        from repro.analysis.lint import lint_file
+
+        return lint_file(
+            os.path.basename(path), repo_root=os.path.dirname(path) or "."
+        )
+    if kind == "trace":
+        from repro.analysis.jaxpr_audit import audit_trace
+
+        case = module.build()
+        return audit_trace(
+            case.get("name", os.path.basename(path)),
+            case["fn"],
+            case["args"],
+            case["budget_bytes"],
+            int8_contract=case.get("int8_contract", False),
+        )
+    raise SystemExit(
+        f"{path}: fixture must declare FIXTURE_KIND = 'lint' | 'trace'"
+    )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+    parser.add_argument(
+        "--fail-on-findings", action="store_true",
+        help="exit nonzero when findings exist (the default; kept explicit "
+             "so the CI invocation documents its contract)",
+    )
+    parser.add_argument(
+        "--write-docs", action="store_true",
+        help="regenerate the generated VMEM section of docs/search_paths.md",
+    )
+    parser.add_argument(
+        "--fixture", metavar="PATH",
+        help="run the analyzers on a single fixture file instead of the repo",
+    )
+    parser.add_argument(
+        "--root", default=".", help="repo root (default: cwd)"
+    )
+    args = parser.parse_args(argv)
+
+    if args.fixture:
+        findings = _run_fixture(args.fixture)
+        stats = None
+    else:
+        from repro.analysis import DOCS_SEARCH_PATHS, run_all
+        from repro.analysis import vmem
+
+        if args.write_docs:
+            vmem.write_docs(os.path.join(args.root, DOCS_SEARCH_PATHS))
+            print(f"regenerated vmem section of {DOCS_SEARCH_PATHS}")
+        findings, stats = run_all(args.root)
+
+    for finding in findings:
+        print(finding)
+    if stats is not None:
+        print(
+            f"audited {stats['total']} traces "
+            f"({stats['search']} search, {stats['mutation']} mutation, "
+            f"{stats['rearrange']} rearrange; "
+            f"{stats['invalid_combos']} combos rejected by the registry), "
+            f"{len(findings)} finding(s)"
+        )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

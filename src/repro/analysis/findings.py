@@ -1,0 +1,17 @@
+"""The one currency every analysis layer trades in."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # stable rule id (docs/static_analysis.md catalogs them)
+    path: str  # file (lint) or trace name (jaxpr audit)
+    line: int  # 0 when the finding has no source line (trace audit)
+    message: str
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"[{self.rule}] {loc}: {self.message}"

@@ -1,0 +1,591 @@
+"""Layer 1: trace-time audit of every jitted program the system dispatches.
+
+Enumerates every registered search path × payload dtype × rerank from
+``resolve_search_impl``/``SEARCH_IMPLS`` plus the mutation and compaction
+dispatches mirrored from ``ServingRuntime._build_steps``, traces each with
+``jax.make_jaxpr`` on representative ``ShapeDtypeStruct`` state (nothing is
+materialized or executed), and checks four properties per trace:
+
+* **intermediate-bytes** — no equation output exceeds the per-path byte
+  budget.  This is the ``[C, Q, T]``-class regression the fused kernels
+  exist to prevent (pre-PR1 the union path materialized 268 MB to HBM).
+* **int8-upcast** — int8/uint8 payloads are never dequantized wholesale
+  before the contraction; int8 paths must keep an integer ``dot_general``
+  (the MXU contraction PR 3 moved to int8 operands).
+* **host-callback** — no ``pure_callback``/``io_callback``/``debug_callback``
+  inside a traced program (a silent host sync on the serving hot path).
+* **baked-const** — no concrete array above 4 KiB closed over as a jit
+  constant (the PR 2 stale-centroids bug class: state must flow through
+  the traced arguments, never the closure).
+
+Everything here is geometry-parameterized so budgets are formulas, not
+magic numbers; the audit geometry is small enough that the full 42-trace
+sweep runs in a couple of seconds on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# audit geometry + enumeration bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditGeometry:
+    """Representative shapes: small enough to trace fast, large enough that
+    a rematerialized ``[C, Q, T]`` intermediate dwarfs every legitimate one."""
+
+    q: int = 64  # query batch
+    dim: int = 64  # D
+    block_size: int = 128  # T
+    n_blocks: int = 256  # P
+    n_clusters: int = 64  # N
+    max_chain: int = 8
+    nprobe: int = 8
+    k: int = 10
+    batch: int = 128  # mutation batch rows
+    pq_m: int = 8
+
+
+GEOM = AuditGeometry()
+
+PAYLOAD_CONFIGS = ("float32", "bfloat16", "int8", "pq")
+MUTATION_KINDS = ("insert", "delete", "update")
+
+# resolve_search_impl admits exactly these combos (asserted by the audit and
+# by tests/test_analysis.py): 6 paths for f32/bf16 + fused rerank (8 each),
+# 2 fused paths × rerank for int8 (4), 4 PQ paths + fused rerank (6).
+EXPECTED_SEARCH_TRACES = 26
+EXPECTED_INVALID_COMBOS = 22
+EXPECTED_MUTATION_TRACES = len(MUTATION_KINDS) * len(PAYLOAD_CONFIGS)  # 12
+EXPECTED_REARRANGE_TRACES = len(PAYLOAD_CONFIGS)  # 4
+EXPECTED_TOTAL_TRACES = (
+    EXPECTED_SEARCH_TRACES + EXPECTED_MUTATION_TRACES + EXPECTED_REARRANGE_TRACES
+)
+
+# jit constants larger than this are treated as baked-in state
+CONST_BYTES_LIMIT = 4 * 2 ** 10
+
+# size-preserving view primitives: XLA lowers these to bitcasts/layout
+# changes, so counting their outputs would double-bill every pool-sized
+# reshape as a materialization
+_VIEW_PRIMS = frozenset({"reshape", "bitcast_convert_type"})
+
+_CALLBACK_PRIMS = ("callback", "outside_call", "host")
+
+
+def default_kprime(k: int) -> int:
+    from repro.core.search import default_kprime as _dk
+
+    return _dk(k)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct state builder (mirrors block_pool.init_state leaf shapes)
+# ---------------------------------------------------------------------------
+
+
+def spec_state(cfg):
+    """An ``IVFState`` whose leaves are ``ShapeDtypeStruct``s — traceable by
+    ``jax.make_jaxpr`` without allocating a byte of device memory."""
+    from repro.core.block_pool import IVFState
+
+    n, p, t, mc = cfg.n_clusters, cfg.n_blocks, cfg.block_size, cfg.max_chain
+    S = jax.ShapeDtypeStruct
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+    scalar = lambda: S((), i32)  # noqa: E731
+    return IVFState(
+        centroids=S((n, cfg.dim), f32),
+        pool_payload=S(cfg.payload_shape(), cfg.payload_dtype()),
+        pool_ids=S((p, t), i32),
+        pool_scales=S(cfg.scales_shape(), f32),
+        pool_live=S((p, t), u8),
+        id_map=S((cfg.max_ids,), i32),
+        block_owner=S((p,), i32),
+        next_block=S((p,), i32),
+        cluster_head=S((n,), i32),
+        cluster_tail=S((n,), i32),
+        cluster_blocks=S((n, mc), i32),
+        cluster_nblocks=S((n,), i32),
+        cluster_len=S((n,), i32),
+        dead_count=S((n,), i32),
+        new_since_rearrange=S((n,), i32),
+        cur_p=scalar(),
+        free_stack=S((p,), i32),
+        free_top=scalar(),
+        num_vectors=scalar(),
+        num_dropped=scalar(),
+        num_deleted=scalar(),
+        num_missed=scalar(),
+        num_unmapped=scalar(),
+    )
+
+
+def _pool_config(payload: str, geom: AuditGeometry):
+    from repro.core.block_pool import PoolConfig
+
+    kw = dict(
+        n_clusters=geom.n_clusters,
+        dim=geom.dim,
+        block_size=geom.block_size,
+        n_blocks=geom.n_blocks,
+        max_chain=geom.max_chain,
+    )
+    if payload == "pq":
+        return PoolConfig(payload="pq", pq_m=geom.pq_m, **kw)
+    return PoolConfig(dtype=payload, **kw)
+
+
+def _spec_pq(geom: AuditGeometry):
+    from repro.core.pq import KSUB, PQParams
+
+    return PQParams(
+        codebooks=jax.ShapeDtypeStruct(
+            (geom.pq_m, KSUB, geom.dim // geom.pq_m), jnp.float32
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-path byte budgets
+# ---------------------------------------------------------------------------
+
+
+def search_budget_bytes(
+    path: str, payload: str, rerank: bool, geom: AuditGeometry = GEOM
+) -> int:
+    """2x the documented dominant intermediate of each path (the cost model
+    from docs/search_paths.md, evaluated at the audit geometry).
+
+    The gather paths (block_table / chain_walk) and plain-union paths
+    materialize large score/gather tensors *by design*; the fused paths'
+    whole point is that they do not — their budgets are K'-row sized, so a
+    reintroduced ``[C, Q, T]`` materialization fails the audit by an order
+    of magnitude rather than a rounding error.
+    """
+    from repro.core.pq import KSUB
+
+    g = geom
+    q, t, d, m = g.q, g.block_size, g.dim, g.pq_m
+    c = g.nprobe * g.max_chain  # gathered chain slots per query
+    cb = min(g.q * g.nprobe * g.max_chain, g.n_blocks)  # union candidates
+    kp = default_kprime(g.k)
+    rerank_term = q * kp * d * 4 if rerank else 0
+    if path == "block_table":
+        # one-HLO gather of every probed chain, scored in f32
+        peak = q * c * t * (2 * m * 4 if payload == "pq" else d * 4)
+    elif path == "chain_walk":
+        # per-hop gather under lax.scan: one chain slot per probe per hop
+        peak = q * g.nprobe * t * (2 * m * 4 if payload == "pq" else d * 4)
+    elif path in ("union", "union_pallas"):
+        # the [CB, Q, T] score tensor is this path's documented cost
+        peak = cb * q * t * 4
+    elif path == "union_fused":
+        # streaming kernel: [Q, K'] writeback + routing prologue; PQ builds
+        # the [Q, NP, M, KSUB] LUT, int8 quantizes [Q, NP, D] residuals
+        peak = max(
+            q * kp * 8,
+            q * g.nprobe * d * 4,
+            q * g.nprobe * m * KSUB * 4 if payload == "pq" else 0,
+            rerank_term,
+        )
+    elif path == "union_fused_scan":
+        # pure-XLA fallback: adds a [Q, chunk * T] score tile per scan step
+        chunk = 16 if payload == "pq" else 64
+        peak = max(
+            q * chunk * t * (4 * m * 4 if payload == "pq" else 4),
+            q * g.nprobe * d * 4,
+            rerank_term,
+        )
+    else:  # pragma: no cover - enumeration comes from SEARCH_IMPLS
+        raise ValueError(f"no budget model for search path {path!r}")
+    return 2 * max(peak, rerank_term)
+
+
+def mutation_budget_bytes(
+    kind: str, payload: str, geom: AuditGeometry = GEOM
+) -> int:
+    """Mutation steps are donated full-state updates: the budget is the
+    largest state leaf (the payload scatter) plus encode/batch terms."""
+    from repro.core.pq import KSUB
+
+    g = geom
+    esize = {"float32": 4, "bfloat16": 2, "int8": 1, "pq": 1}[payload]
+    pool = g.n_blocks * g.block_size * (g.pq_m if payload == "pq" else g.dim)
+    id_map = 2 * g.n_blocks * g.block_size * 4
+    if kind == "delete":
+        peak = max(id_map, g.n_blocks * g.block_size * 4)
+    else:  # insert / update (+ PQ encode distance matrix)
+        encode = g.batch * g.pq_m * KSUB * 4 if payload == "pq" else 0
+        peak = max(pool * esize, id_map, encode)
+    return 2 * peak
+
+
+def rearrange_budget_bytes(payload: str, geom: AuditGeometry = GEOM) -> int:
+    g = geom
+    esize = {"float32": 4, "bfloat16": 2, "int8": 1, "pq": 1}[payload]
+    pool = g.n_blocks * g.block_size * (g.pq_m if payload == "pq" else g.dim)
+    return 2 * max(pool * esize, g.n_blocks * g.block_size * 4)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walkers
+# ---------------------------------------------------------------------------
+
+
+def _subjaxprs(eqn):
+    for v in eqn.params.values():
+        if hasattr(v, "jaxpr"):  # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):  # raw Jaxpr
+            yield v
+
+
+def peak_intermediate_bytes(jaxpr) -> int:
+    """Largest equation output in the trace, HBM view.
+
+    Pallas inner jaxprs are skipped — their values are VMEM refs budgeted
+    by ``repro.analysis.vmem`` — but a ``pallas_call``'s *outputs* count
+    (an oversized kernel writeback is an HBM intermediate like any other).
+    """
+    peak = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            for v in eqn.outvars:
+                peak = max(peak, v.aval.size * v.aval.dtype.itemsize)
+            continue
+        if eqn.primitive.name not in _VIEW_PRIMS:
+            for v in eqn.outvars:
+                aval = v.aval
+                if hasattr(aval, "shape"):
+                    peak = max(peak, aval.size * aval.dtype.itemsize)
+        for sub in _subjaxprs(eqn):
+            peak = max(peak, peak_intermediate_bytes(sub))
+    return peak
+
+
+def find_int8_upcasts(jaxpr, min_elements: int) -> list:
+    """(shape, dtype, size) of every int8/uint8 -> float convert at or above
+    ``min_elements`` — pool-scale dequantization before the contraction."""
+    out = []
+    small = (jnp.int8.dtype, jnp.uint8.dtype)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.params["new_dtype"]
+            if (
+                getattr(src, "dtype", None) in small
+                and jnp.issubdtype(dst, jnp.floating)
+                and src.size >= min_elements
+            ):
+                out.append((tuple(src.shape), str(dst), int(src.size)))
+        for sub in _subjaxprs(eqn):
+            out.extend(find_int8_upcasts(sub, min_elements))
+    return out
+
+
+def has_integer_dot(jaxpr) -> bool:
+    """Whether any dot_general contracts integer operands (the int8 MXU
+    path; disappears if someone dequantizes before the dot)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            if all(
+                jnp.issubdtype(v.aval.dtype, jnp.integer) for v in eqn.invars
+            ):
+                return True
+        for sub in _subjaxprs(eqn):
+            if has_integer_dot(sub):
+                return True
+    return False
+
+
+def find_callbacks(jaxpr) -> list:
+    out = []
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if any(tag in name for tag in _CALLBACK_PRIMS):
+            out.append(name)
+        for sub in _subjaxprs(eqn):
+            out.extend(find_callbacks(sub))
+    return out
+
+
+def find_big_consts(closed_jaxpr, limit: int = CONST_BYTES_LIMIT) -> list:
+    """Concrete arrays the traced fn closed over (stale-state bug class)."""
+    out = []
+    for const in closed_jaxpr.consts:
+        arr = np.asarray(const)
+        nbytes = arr.size * arr.dtype.itemsize
+        if nbytes > limit:
+            out.append((tuple(arr.shape), str(arr.dtype), nbytes))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trace enumeration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCase:
+    name: str
+    kind: str  # "search" | "mutation" | "rearrange"
+    fn: Callable
+    args: tuple
+    budget_bytes: int
+    int8_contract: bool = False  # enforce the integer-MXU rules
+
+
+def enumerate_traces(geom: AuditGeometry = GEOM) -> tuple:
+    """(cases, invalid_combos): every dispatchable program the runtime can
+    build, plus the (path, payload, rerank) combos the registry must reject."""
+    from repro.core import pq as pqmod
+    from repro.core import rearrange
+    from repro.core import search as searchmod
+    from repro.core.insert import assign_clusters, insert_payload
+    from repro.core.mutate import apply_delete, last_occurrence_mask
+
+    S = jax.ShapeDtypeStruct
+    queries = S((geom.q, geom.dim), jnp.float32)
+    cases: List[TraceCase] = []
+    invalid: List[tuple] = []
+
+    for payload in PAYLOAD_CONFIGS:
+        cfg = _pool_config(payload, geom)
+        state = spec_state(cfg)
+        pq = _spec_pq(geom) if payload == "pq" else None
+
+        # ---- search: registry enumeration -----------------------------
+        for path in searchmod.SEARCH_IMPLS:
+            for rerank in (False, True):
+                try:
+                    impl = searchmod.resolve_search_impl(cfg, path, rerank)
+                except (ValueError, NotImplementedError):
+                    invalid.append((path, payload, rerank))
+                    continue
+
+                def _search_fn(
+                    state, queries, pq=None,
+                    _impl=impl, _cfg=cfg, _path=path, _rerank=rerank,
+                ):
+                    # PQ scoring hooks take pq from the *traced* arguments,
+                    # mirroring ServingRuntime._build_steps / make_search_fn
+                    # (a concrete closure would trip the baked-const rule,
+                    # which is exactly the PR 2 bug it exists to catch)
+                    score_fn = (
+                        pqmod.pq_score_fn(pq)
+                        if pq is not None and _path in ("block_table", "chain_walk")
+                        else None
+                    )
+                    return _impl(
+                        _cfg, state, queries,
+                        nprobe=geom.nprobe, k=geom.k, score_fn=score_fn,
+                        chain_budget=None, pq=pq, rerank=_rerank,
+                    )
+
+                args = (state, queries, pq) if payload == "pq" else (state, queries)
+                cases.append(
+                    TraceCase(
+                        name=f"search/{path}/{payload}"
+                        + ("/rerank" if rerank else ""),
+                        kind="search",
+                        fn=_search_fn,
+                        args=args,
+                        budget_bytes=search_budget_bytes(
+                            path, payload, rerank, geom
+                        ),
+                        int8_contract=payload == "int8",
+                    )
+                )
+
+        # ---- mutations: the runtime's _build_steps dispatches ----------
+        vecs = S((geom.batch, geom.dim), jnp.float32)
+        ids = S((geom.batch,), jnp.int32)
+        valid = S((geom.batch,), jnp.bool_)
+
+        def _insert(state, vectors, ids, valid, pq=None, _cfg=cfg):
+            assign = assign_clusters(state.centroids, vectors)
+            if pq is None:
+                payload_rows = vectors
+            else:
+                payload_rows = pqmod.encode(
+                    pq, vectors - state.centroids[assign]
+                )
+            return insert_payload(
+                _cfg, state, assign, payload_rows, ids, valid
+            )
+
+        def _delete(state, ids, valid, pq=None, _cfg=cfg):
+            return apply_delete(_cfg, state, ids, valid)
+
+        def _update(state, vectors, ids, valid, pq=None, _cfg=cfg):
+            state = apply_delete(_cfg, state, ids, valid)
+            return _insert(
+                state, vectors, ids, last_occurrence_mask(ids, valid),
+                pq, _cfg=_cfg,
+            )
+
+        extra = (pq,) if payload == "pq" else ()
+        for kind, fn, margs in (
+            ("insert", _insert, (state, vecs, ids, valid) + extra),
+            ("delete", _delete, (state, ids, valid) + extra),
+            ("update", _update, (state, vecs, ids, valid) + extra),
+        ):
+            cases.append(
+                TraceCase(
+                    name=f"mutation/{kind}/{payload}",
+                    kind="mutation",
+                    fn=fn,
+                    args=margs,
+                    budget_bytes=mutation_budget_bytes(kind, payload, geom),
+                )
+            )
+
+        # ---- compaction ------------------------------------------------
+        cases.append(
+            TraceCase(
+                name=f"rearrange/{payload}",
+                kind="rearrange",
+                fn=rearrange.make_rearrange_fn(cfg, threshold=geom.max_chain // 2),
+                args=(state,),
+                budget_bytes=rearrange_budget_bytes(payload, geom),
+            )
+        )
+
+    return cases, invalid
+
+
+# ---------------------------------------------------------------------------
+# the audit
+# ---------------------------------------------------------------------------
+
+
+def audit_trace(
+    name: str,
+    fn: Callable,
+    args: tuple,
+    budget_bytes: int,
+    int8_contract: bool = False,
+    geom: AuditGeometry = GEOM,
+) -> List[Finding]:
+    """Run the four jaxpr rules on one traced program."""
+    findings: List[Finding] = []
+    try:
+        closed = jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # a path that no longer traces is itself a finding
+        return [
+            Finding(
+                rule="trace-error", path=name, line=0,
+                message=f"{type(e).__name__}: {e}",
+            )
+        ]
+    peak = peak_intermediate_bytes(closed.jaxpr)
+    if peak > budget_bytes:
+        findings.append(
+            Finding(
+                rule="intermediate-bytes", path=name, line=0,
+                message=(
+                    f"peak intermediate {peak:,} B exceeds the per-path "
+                    f"budget {budget_bytes:,} B "
+                    f"([C, Q, T]-class rematerialization?)"
+                ),
+            )
+        )
+    for prim in find_callbacks(closed.jaxpr):
+        findings.append(
+            Finding(
+                rule="host-callback", path=name, line=0,
+                message=f"host callback primitive {prim!r} in traced program",
+            )
+        )
+    for shape, dtype, nbytes in find_big_consts(closed):
+        findings.append(
+            Finding(
+                rule="baked-const", path=name, line=0,
+                message=(
+                    f"concrete {dtype}{list(shape)} ({nbytes:,} B) closed "
+                    "over as a jit constant — pass it through the traced "
+                    "arguments (stale-centroids bug class)"
+                ),
+            )
+        )
+    if int8_contract:
+        # legitimate ceiling: the rerank epilogue dequantizes the gathered
+        # [Q, K', D] survivor rows; anything bigger is a pool-scale upcast
+        limit = geom.q * default_kprime(geom.k) * geom.dim + 1
+        for shape, dtype, size in find_int8_upcasts(closed.jaxpr, limit):
+            findings.append(
+                Finding(
+                    rule="int8-upcast", path=name, line=0,
+                    message=(
+                        f"int8/uint8 tensor {list(shape)} upcast to {dtype} "
+                        f"({size:,} elements) before the contraction"
+                    ),
+                )
+            )
+        if not has_integer_dot(closed.jaxpr):
+            findings.append(
+                Finding(
+                    rule="int8-upcast", path=name, line=0,
+                    message=(
+                        "no integer dot_general in an int8-payload trace — "
+                        "the contraction left the integer MXU"
+                    ),
+                )
+            )
+    return findings
+
+
+def run_trace_audit(geom: AuditGeometry = GEOM) -> tuple:
+    """(findings, stats) over the full enumeration.
+
+    stats carries the enumeration counts the acceptance tests assert, so a
+    registry change that silently drops a path from the audit fails CI.
+    """
+    cases, invalid = enumerate_traces(geom)
+    findings: List[Finding] = []
+    stats = {
+        "search": sum(1 for c in cases if c.kind == "search"),
+        "mutation": sum(1 for c in cases if c.kind == "mutation"),
+        "rearrange": sum(1 for c in cases if c.kind == "rearrange"),
+        "invalid_combos": len(invalid),
+        "total": len(cases),
+    }
+    if stats["search"] != EXPECTED_SEARCH_TRACES:
+        findings.append(
+            Finding(
+                rule="enumeration", path="registry", line=0,
+                message=(
+                    f"expected {EXPECTED_SEARCH_TRACES} search combos from "
+                    f"SEARCH_IMPLS, enumerated {stats['search']} — update "
+                    "the expected counts alongside the registry"
+                ),
+            )
+        )
+    if stats["invalid_combos"] != EXPECTED_INVALID_COMBOS:
+        findings.append(
+            Finding(
+                rule="enumeration", path="registry", line=0,
+                message=(
+                    f"expected {EXPECTED_INVALID_COMBOS} rejected combos, "
+                    f"got {stats['invalid_combos']}"
+                ),
+            )
+        )
+    for case in cases:
+        findings.extend(
+            audit_trace(
+                case.name, case.fn, case.args, case.budget_bytes,
+                int8_contract=case.int8_contract, geom=geom,
+            )
+        )
+    return findings, stats

@@ -1,0 +1,17 @@
+"""AST rule registry.  A rule is ``(LintModule) -> list[Finding]``; adding
+one means writing the module and listing its ``check`` here (and in the
+catalog in docs/static_analysis.md)."""
+
+from repro.analysis.rules import (
+    counters,
+    guarded_by,
+    jit_cache_keys,
+    nondeterminism,
+)
+
+ALL_RULES = (
+    guarded_by.check,
+    counters.check,
+    jit_cache_keys.check,
+    nondeterminism.check,
+)

@@ -1,0 +1,214 @@
+"""Lock-discipline checker for ``# guarded-by:`` annotated fields.
+
+Annotation (on the field's assignment in ``__init__``):
+
+    self._accepting = True            # guarded-by: _submit_lock
+    self.index = index                # guarded-by: _state_lock [state, _next_id]
+
+The bare form guards the attribute itself; the bracketed form guards the
+named sub-attributes of a held object (``self.index.state`` must be read
+under ``_state_lock``; ``self.index.pq`` is immutable and stays free).
+
+Every access outside ``__init__`` must then be lexically inside
+``with self.<lock>:``.  Helpers that are only ever called with the lock
+held declare it on their ``def`` line:
+
+    def _current_budget(self):  # holds: _state_lock
+
+(call sites of a ``# holds:``-annotated helper are then checked for the
+declared lock too), and individually-safe accesses carry a justified
+suppression:
+
+    self._check_accepting()  # unlocked-ok: racy fast-path, rechecked under lock
+
+The check is lexical by design: a nested function's body runs later, so
+entering one resets the held-lock set (a closure traced under the lock
+does not execute under it).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintModule, check_suppression
+
+_ANNOT_RE = re.compile(r"^(\w+)(?:\s*\[([^\]]*)\])?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    field: str
+    lock: str
+    attrs: Optional[frozenset]  # None = the field itself; else sub-attrs
+    line: int
+
+
+def _attr_path(node) -> Optional[tuple]:
+    """('index', 'state') for ``self.index.state``; None if not self-rooted."""
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name) and cur.id == "self":
+        return tuple(reversed(parts))
+    return None
+
+
+def _with_locks(node) -> Set[str]:
+    locks: Set[str] = set()
+    for item in node.items:
+        path = _attr_path(item.context_expr)
+        if path is not None and len(path) == 1:
+            locks.add(path[0])
+    return locks
+
+
+def _holds(mod: LintModule, func) -> Set[str]:
+    declared = mod.tagged(func.lineno, "holds")
+    if not declared:
+        return set()
+    return {name.strip() for name in declared.split(",") if name.strip()}
+
+
+def _collect_specs(mod: LintModule, cls) -> Dict[str, FieldSpec]:
+    specs: Dict[str, FieldSpec] = {}
+    for node in ast.walk(cls):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            continue
+        annot = mod.tagged(node.lineno, "guarded-by")
+        if annot is None:
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for target in targets:
+            path = _attr_path(target)
+            if path is None or len(path) != 1:
+                continue
+            m = _ANNOT_RE.match(annot)
+            if m is None:
+                continue
+            lock, attrs = m.group(1), m.group(2)
+            specs[path[0]] = FieldSpec(
+                field=path[0],
+                lock=lock,
+                attrs=(
+                    frozenset(a.strip() for a in attrs.split(",") if a.strip())
+                    if attrs is not None
+                    else None
+                ),
+                line=node.lineno,
+            )
+    return specs
+
+
+def _match(specs: Dict[str, FieldSpec], path: tuple) -> Optional[FieldSpec]:
+    if not path or path[0] not in specs:
+        return None
+    spec = specs[path[0]]
+    if spec.attrs is None:
+        return spec if len(path) == 1 else None
+    return spec if len(path) == 2 and path[1] in spec.attrs else None
+
+
+def check(mod: LintModule) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def check_class(cls, specs: Dict[str, FieldSpec],
+                    holds_map: Dict[str, Set[str]]):
+        def walk(node, held: Set[str]):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    walk(item.context_expr, held)
+                    if item.optional_vars is not None:
+                        walk(item.optional_vars, held)
+                inner = held | _with_locks(node)
+                for stmt in node.body:
+                    walk(stmt, inner)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def's body runs after the enclosing with released
+                for child in ast.iter_child_nodes(node):
+                    walk(child, _holds(mod, node))
+                return
+            if isinstance(node, ast.Lambda):
+                walk(node.body, set())
+                return
+            if isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute
+            ):
+                # calling a helper that declares "# holds: X" is itself an
+                # access that needs X held at the call site
+                fpath = _attr_path(node.func)
+                if fpath is not None and len(fpath) == 1:
+                    missing = holds_map.get(fpath[0], set()) - held
+                    if missing:
+                        suppressed, extra = check_suppression(
+                            mod, node.lineno, "unlocked-ok"
+                        )
+                        findings.extend(extra)
+                        if not suppressed:
+                            findings.append(
+                                Finding(
+                                    rule="guarded-by",
+                                    path=mod.path,
+                                    line=node.lineno,
+                                    message=(
+                                        f"call to self.{fpath[0]}() outside "
+                                        "'with self."
+                                        f"{', '.join(sorted(missing))}:' "
+                                        "(its def declares '# holds:')"
+                                    ),
+                                )
+                            )
+            if isinstance(node, ast.Attribute):
+                path = _attr_path(node)
+                spec = _match(specs, path) if path else None
+                if spec is not None and spec.lock not in held:
+                    if node.lineno != spec.line:  # annotation line registers
+                        suppressed, extra = check_suppression(
+                            mod, node.lineno, "unlocked-ok"
+                        )
+                        findings.extend(extra)
+                        if not suppressed:
+                            dotted = "self." + ".".join(path)
+                            findings.append(
+                                Finding(
+                                    rule="guarded-by",
+                                    path=mod.path,
+                                    line=node.lineno,
+                                    message=(
+                                        f"{dotted} accessed outside "
+                                        f"'with self.{spec.lock}:' (declared "
+                                        f"guarded-by at line {spec.line})"
+                                    ),
+                                )
+                            )
+            for child in ast.iter_child_nodes(node):
+                walk(child, held)
+
+        for item in cls.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if item.name == "__init__":
+                continue  # construction precedes every worker thread
+            for child in ast.iter_child_nodes(item):
+                walk(child, _holds(mod, item))
+
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        specs = _collect_specs(mod, cls)
+        holds_map: Dict[str, Set[str]] = {}
+        for item in cls.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                declared = _holds(mod, item)
+                if declared:
+                    holds_map[item.name] = declared
+        if not specs and not holds_map:
+            continue
+        check_class(cls, specs, holds_map)
+    return findings

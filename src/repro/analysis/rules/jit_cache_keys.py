@@ -1,0 +1,113 @@
+"""jit-cache-key completeness (the PR 2 frozen-chain-budget bug class).
+
+The repo's jit caches all share one shape::
+
+    def _step_for(self, base, budget=None, nprobe=None, rerank=None):
+        ...
+        key = (base, budget, nprobe, rerank)
+        if key not in self._steps:
+            self._steps[key] = jax.jit(self._make(...))
+        return self._steps[key]
+
+Every parameter that can vary the traced closure must appear in the key
+tuple: a parameter missing from the key silently serves a step compiled
+for some *other* value of it (PR 2's frozen budget truncated chains — and
+recall — for every request after the first).  The rule finds
+membership-guarded cache inserts (``if <key> not in <cache>:`` +
+``<cache>[<key>] = ...``), resolves the key tuple's names, and requires
+every function parameter to appear in it.  Parameters that deliberately
+don't key the cache carry ``# cache-key-ok: <why>`` on the key assignment.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintModule, check_suppression
+
+
+def _key_tuple_assign(func, key_name: str) -> Optional[ast.Assign]:
+    found = None
+    for node in ast.walk(func):
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == key_name
+            and isinstance(node.value, ast.Tuple)
+        ):
+            found = node
+    return found
+
+
+def _is_cache_insert(if_node: ast.If, key_name: str) -> bool:
+    for node in ast.walk(if_node):
+        if (
+            isinstance(node, ast.Assign)
+            and isinstance(node.targets[0], ast.Subscript)
+        ):
+            sl = node.targets[0].slice
+            if isinstance(sl, ast.Name) and sl.id == key_name:
+                return True
+    return False
+
+
+def check(mod: LintModule) -> List[Finding]:
+    findings: List[Finding] = []
+    for func in ast.walk(mod.tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = [
+            a.arg
+            for a in (
+                func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+            )
+            if a.arg not in ("self", "cls")
+        ]
+        if not params:
+            continue
+        for node in ast.walk(func):
+            if not isinstance(node, ast.If):
+                continue
+            test = node.test
+            if not (
+                isinstance(test, ast.Compare)
+                and len(test.ops) == 1
+                and isinstance(test.ops[0], ast.NotIn)
+                and isinstance(test.left, ast.Name)
+            ):
+                continue
+            key_name = test.left.id
+            if not _is_cache_insert(node, key_name):
+                continue
+            key_assign = _key_tuple_assign(func, key_name)
+            if key_assign is None:
+                continue
+            key_names = {
+                n.id
+                for n in ast.walk(key_assign.value)
+                if isinstance(n, ast.Name)
+            }
+            missing = [p for p in params if p not in key_names]
+            if not missing:
+                continue
+            suppressed, extra = check_suppression(
+                mod, key_assign.lineno, "cache-key-ok"
+            )
+            findings.extend(extra)
+            if not suppressed:
+                findings.append(
+                    Finding(
+                        rule="jit-cache-key",
+                        path=mod.path,
+                        line=key_assign.lineno,
+                        message=(
+                            f"{func.name}: parameter(s) {missing} vary the "
+                            "cached closure but are missing from the cache "
+                            "key tuple (frozen-budget bug class)"
+                        ),
+                    )
+                )
+    return findings

@@ -1,0 +1,118 @@
+"""No wall-clock or host RNG inside traced functions.
+
+``time.time()`` inside a jitted function doesn't measure anything — it
+runs once at trace time and bakes a constant timestamp into the program;
+``np.random``/``random`` likewise freeze one sample forever.  The rule
+flags those calls inside any function it can prove is traced:
+
+* decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)``;
+* passed by name to ``jax.jit(fn, ...)`` or ``pl.pallas_call(kernel, ...)``
+  anywhere in the same module;
+* explicitly marked ``# traced-fn`` on its ``def`` line (search impls and
+  kernel bodies that are only ever called from inside a trace).
+
+``jax.random`` is fine (functional, keyed); a deliberate trace-time value
+carries ``# nondet-ok: <why>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintModule, check_suppression
+
+_BANNED_EXACT = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+}
+_BANNED_PREFIX = ("random.", "np.random.", "numpy.random.")
+
+
+def _dotted(node) -> Optional[str]:
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node) -> bool:
+    """jax.jit / jit, possibly wrapped in (functools.)partial(jax.jit, ...)."""
+    name = _dotted(node)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        fname = _dotted(node.func)
+        if fname in ("partial", "functools.partial") and node.args:
+            return _is_jit_expr(node.args[0])
+        return _is_jit_expr(node.func)
+    return False
+
+
+def _traced_by_reference(tree) -> Set[str]:
+    """Function names passed to jax.jit(...) / pl.pallas_call(...)."""
+    traced: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        fname = _dotted(node.func) or ""
+        if fname in ("jax.jit", "jit") or fname.endswith("pallas_call"):
+            first = node.args[0]
+            if isinstance(first, ast.Name):
+                traced.add(first.id)
+    return traced
+
+
+def _is_traced(mod: LintModule, func, by_ref: Set[str]) -> bool:
+    if func.name in by_ref:
+        return True
+    if mod.tagged(func.lineno, "traced-fn") is not None:
+        return True
+    return any(_is_jit_expr(d) for d in func.decorator_list)
+
+
+def check(mod: LintModule) -> List[Finding]:
+    findings: List[Finding] = []
+    by_ref = _traced_by_reference(mod.tree)
+
+    def scan(func):
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name is None:
+                continue
+            if name in _BANNED_EXACT or any(
+                name.startswith(p) for p in _BANNED_PREFIX
+            ):
+                suppressed, extra = check_suppression(
+                    mod, node.lineno, "nondet-ok"
+                )
+                findings.extend(extra)
+                if not suppressed:
+                    findings.append(
+                        Finding(
+                            rule="nondeterminism",
+                            path=mod.path,
+                            line=node.lineno,
+                            message=(
+                                f"{name}() inside traced function "
+                                f"{func.name!r} runs once at trace time and "
+                                "bakes in a constant"
+                            ),
+                        )
+                    )
+
+    for func in ast.walk(mod.tree):
+        if isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _is_traced(mod, func, by_ref):
+                scan(func)
+    return findings

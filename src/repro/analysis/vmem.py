@@ -1,0 +1,449 @@
+"""BlockSpec-derived VMEM budgets for the Pallas kernels.
+
+The estimator does not re-model the kernels: it traces each public
+``repro.kernels.ops`` wrapper with ``jax.make_jaxpr`` on the documented
+geometry, finds the ``pallas_call`` equation, and reads the per-grid-step
+resident set straight off the kernel jaxpr's ref avals (block operands,
+outputs, and VMEM scratch — scalar-prefetch SMEM operands excluded).
+Whatever BlockSpecs the kernels declare is therefore what gets budgeted;
+if a kernel grows an operand, the labelled-operand count check below fails
+loudly instead of silently under-reporting.
+
+The same renderer produces the generated section of
+``docs/search_paths.md`` (between the ``vmem-budgets`` markers), which
+``python -m repro.analysis`` byte-compares against a fresh render — docs
+and kernels cannot drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+# Per-core VMEM on current TPU generations (the number the kernel tiling
+# was sized against in docs/search_paths.md).
+VMEM_LIMIT_BYTES = 16 * 2 ** 20
+
+BEGIN_MARK = "<!-- BEGIN GENERATED: vmem-budgets " \
+             "(python -m repro.analysis --write-docs) -->"
+END_MARK = "<!-- END GENERATED: vmem-budgets -->"
+
+
+@dataclasses.dataclass(frozen=True)
+class DocGeometry:
+    """The documented deployment geometry (paper §3.1: T_m = 1024)."""
+
+    q: int = 128  # query batch
+    dim: int = 128  # D
+    block_size: int = 1024  # T_m
+    n_blocks: int = 64  # P (irrelevant to per-step residents)
+    n_clusters: int = 1024  # N (coarse kernel streams over this)
+    n_candidates: int = 8  # C (grid size only)
+    nprobe: int = 16
+    kprime: int = 128
+    pq_m: int = 16
+    pq_ksub: int = 256
+
+
+DOC_GEOM = DocGeometry()
+
+
+@dataclasses.dataclass(frozen=True)
+class Resident:
+    label: str
+    shape: tuple
+    dtype: str
+    space: str  # "block" (auto-pipelined operand/output) | "scratch"
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBudget:
+    kernel: str
+    grid: tuple
+    residents: List[Resident]
+    sort_transient: int  # analytic concat width of the in-kernel sort
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self.residents)
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.total_bytes + self.sort_transient
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    # operand labels in kernel-jaxpr order, scalar-prefetch refs excluded
+    labels: Sequence[str]
+    build: Callable  # geom -> (fn, args) to trace
+    # analytic transient: bytes of the widest (dist, id) concat the
+    # in-kernel bitonic sort materializes, from the discovered residents
+    sort_rows: Callable  # (geom, residents) -> int
+
+
+def _q_tile_default(kernel_name: str) -> int:
+    from repro.kernels import ivf_scan
+
+    fn = getattr(ivf_scan, kernel_name)
+    return inspect.signature(fn).parameters["q_tile"].default
+
+
+def _find_pallas_eqns(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None) if hasattr(v, "jaxpr") else (
+                v if hasattr(v, "eqns") else None
+            )
+            if sub is not None:
+                _find_pallas_eqns(sub, out)
+    return out
+
+
+def _build_coarse(g: DocGeometry):
+    from repro.kernels import ops
+
+    S = jax.ShapeDtypeStruct
+    return (
+        lambda q, c: ops.coarse_topk(q, c, nprobe=g.nprobe),
+        (S((g.q, g.dim), jnp.float32), S((g.n_clusters, g.dim), jnp.float32)),
+    )
+
+
+def _build_block_topk(g: DocGeometry):
+    from repro.kernels import ops
+
+    S = jax.ShapeDtypeStruct
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+    args = (
+        S((g.q, g.dim), f32),
+        S((g.n_blocks, g.block_size, g.dim), f32),
+        S((g.n_candidates,), i32),
+        S((g.n_candidates,), i32),
+        S((g.n_blocks, g.block_size), i32),
+        S((g.n_blocks, g.block_size), u8),
+        S((g.q, g.nprobe), i32),
+    )
+    return lambda *a: ops.ivf_block_topk(*a, kprime=g.kprime), args
+
+
+def _build_block_topk_int8(g: DocGeometry):
+    from repro.kernels import ops
+
+    S = jax.ShapeDtypeStruct
+    f32, i32, i8, u8 = jnp.float32, jnp.int32, jnp.int8, jnp.uint8
+    args = (
+        S((g.q, g.nprobe, g.dim), i8),
+        S((g.q, g.nprobe, 2), f32),
+        S((g.n_blocks, g.block_size, g.dim), i8),
+        S((g.n_blocks, g.block_size), f32),
+        S((g.n_candidates,), i32),
+        S((g.n_candidates,), i32),
+        S((g.n_blocks, g.block_size), i32),
+        S((g.n_blocks, g.block_size), u8),
+        S((g.q, g.nprobe), i32),
+    )
+    return lambda *a: ops.ivf_block_topk_int8(*a, kprime=g.kprime), args
+
+
+def _build_pq_topk(g: DocGeometry):
+    from repro.kernels import ops
+
+    S = jax.ShapeDtypeStruct
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+    args = (
+        S((g.q, g.nprobe, g.pq_m, g.pq_ksub), f32),
+        S((g.n_blocks, g.block_size, g.pq_m), u8),
+        S((g.n_candidates,), i32),
+        S((g.n_candidates,), i32),
+        S((g.n_blocks, g.block_size), i32),
+        S((g.n_blocks, g.block_size), u8),
+        S((g.q, g.nprobe), i32),
+    )
+    return lambda *a: ops.ivf_pq_block_topk(*a, kprime=g.kprime), args
+
+
+def _build_rerank(g: DocGeometry):
+    from repro.kernels import ops
+
+    S = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    args = (
+        S((g.q, g.dim), f32),
+        S((g.q, g.kprime, g.dim), f32),
+        S((g.q, g.kprime), f32),
+        S((g.q, g.kprime), i32),
+    )
+    return lambda *a: ops.rerank_topk(*a), args
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _sort_coarse(g: DocGeometry, residents) -> int:
+    # per sort step the kernel concatenates the [qt, NP'] accumulator with
+    # the [qt, c_tile] fresh tile, dists + ids at 8 B per entry
+    qt = _q_tile_default("coarse_topk")
+    npp = _round_up(g.nprobe, 128)
+    return qt * (npp + 128) * 8
+
+
+def _sort_topk(kernel_name: str):
+    def _sort(g: DocGeometry, residents) -> int:
+        qt = _q_tile_default(kernel_name)
+        return qt * (_round_up(g.kprime, 128) + g.block_size) * 8
+
+    return _sort
+
+
+def _sort_rerank(g: DocGeometry, residents) -> int:
+    qt = _q_tile_default("rerank_topk")
+    return qt * g.kprime * 8
+
+
+KERNEL_SPECS: List[KernelSpec] = [
+    KernelSpec(
+        name="coarse_topk",
+        labels=[
+            "queries tile",
+            "centroid tile",
+            "out dists [qt, NP']",
+            "out ids [qt, NP']",
+            "acc dists (scratch)",
+            "acc ids (scratch)",
+        ],
+        build=_build_coarse,
+        sort_rows=_sort_coarse,
+    ),
+    KernelSpec(
+        name="ivf_block_topk",
+        labels=[
+            "queries tile",
+            "probe list [qt, NP]",
+            "pool block [T, D]",
+            "id row [1, T]",
+            "live row [1, T]",
+            "out dists [qt, K']",
+            "out ids [qt, K']",
+            "acc dists (scratch)",
+            "acc ids (scratch)",
+        ],
+        build=_build_block_topk,
+        sort_rows=_sort_topk("ivf_block_topk"),
+    ),
+    KernelSpec(
+        name="ivf_block_topk_int8",
+        labels=[
+            "query residual codes [qt, NP, D]",
+            "query meta [qt, NP, 2]",
+            "probe list [qt, NP]",
+            "code block [T, D]",
+            "scale row [1, T]",
+            "id row [1, T]",
+            "live row [1, T]",
+            "out dists [qt, K']",
+            "out ids [qt, K']",
+            "acc dists (scratch)",
+            "acc ids (scratch)",
+        ],
+        build=_build_block_topk_int8,
+        sort_rows=_sort_topk("ivf_block_topk_int8"),
+    ),
+    KernelSpec(
+        name="ivf_pq_block_topk",
+        labels=[
+            "LUT tile [qt, NP, M, 256]",
+            "probe list [qt, NP]",
+            "code block [T, M]",
+            "id row [1, T]",
+            "live row [1, T]",
+            "out dists [qt, K']",
+            "out ids [qt, K']",
+            "acc dists (scratch)",
+            "acc ids (scratch)",
+        ],
+        build=_build_pq_topk,
+        sort_rows=_sort_topk("ivf_pq_block_topk"),
+    ),
+    KernelSpec(
+        name="rerank_topk",
+        labels=[
+            "queries tile",
+            "survivor rows [qt, K', D]",
+            "dequant scales [qt, K']",
+            "locations [qt, K']",
+            "out dists [qt, K']",
+            "out ids [qt, K']",
+        ],
+        build=_build_rerank,
+        sort_rows=_sort_rerank,
+    ),
+]
+
+
+def kernel_budget(spec: KernelSpec, geom: DocGeometry = DOC_GEOM) -> KernelBudget:
+    """Trace one kernel wrapper and read its resident set off the jaxpr."""
+    fn, args = spec.build(geom)
+    closed = jax.make_jaxpr(fn)(*args)
+    eqns = _find_pallas_eqns(closed.jaxpr, [])
+    if len(eqns) != 1:
+        raise AssertionError(
+            f"{spec.name}: expected exactly one pallas_call in the trace, "
+            f"found {len(eqns)}"
+        )
+    eqn = eqns[0]
+    grid = tuple(eqn.params["grid_mapping"].grid)
+    residents = []
+    for var in eqn.params["jaxpr"].invars:
+        aval = var.aval
+        space = str(getattr(aval, "memory_space", "")).lower()
+        if "smem" in space:
+            continue  # scalar prefetch (block ids / owners) lives in SMEM
+        residents.append(
+            Resident(
+                label="",
+                shape=tuple(aval.shape),
+                dtype=str(aval.dtype),
+                space="scratch" if "vmem" in space else "block",
+                nbytes=int(aval.size) * aval.dtype.itemsize,
+            )
+        )
+    if len(residents) != len(spec.labels):
+        raise AssertionError(
+            f"{spec.name}: kernel has {len(residents)} VMEM refs but "
+            f"{len(spec.labels)} documented operands — a kernel operand was "
+            f"added or removed; update KERNEL_SPECS and regenerate the docs"
+        )
+    residents = [
+        dataclasses.replace(r, label=lb)
+        for r, lb in zip(residents, spec.labels)
+    ]
+    return KernelBudget(
+        kernel=spec.name,
+        grid=grid,
+        residents=residents,
+        sort_transient=spec.sort_rows(geom, residents),
+    )
+
+
+def all_budgets(geom: DocGeometry = DOC_GEOM) -> List[KernelBudget]:
+    return [kernel_budget(s, geom) for s in KERNEL_SPECS]
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 2 ** 20:
+        return f"{n / 2 ** 20:.2f} MiB"
+    return f"{n / 2 ** 10:.1f} KiB"
+
+
+def render_markdown(geom: DocGeometry = DOC_GEOM) -> str:
+    """The generated docs section, exclusive of the BEGIN/END markers."""
+    g = geom
+    lines = [
+        "Per-grid-step VMEM residents of every Pallas kernel, read off the",
+        "kernel jaxprs' ref avals by `repro.analysis.vmem` (BlockSpec-derived,",
+        "not hand-maintained) at the documented geometry: "
+        f"Q = {g.q}, D = {g.dim}, T_m = {g.block_size}, "
+        f"nprobe = {g.nprobe}, K' = {g.kprime}, "
+        f"M = {g.pq_m}, N = {g.n_clusters} centroids.",
+        "`sort concat` is the transient (dists, ids) concatenation the",
+        "in-kernel bitonic selection materializes at 8 B per entry.",
+        "",
+    ]
+    for b in all_budgets(geom):
+        lines.append(f"### `{b.kernel}` — grid {b.grid}")
+        lines.append("")
+        lines.append("| operand | block shape | dtype | bytes |")
+        lines.append("|---|---|---|---|")
+        for r in b.residents:
+            shape = " × ".join(str(d) for d in r.shape)
+            lines.append(f"| {r.label} | {shape} | {r.dtype} | {r.nbytes:,} |")
+        lines.append(
+            f"| sort concat (transient) | | | {b.sort_transient:,} |"
+        )
+        lines.append(
+            f"| **peak** | | | **{b.peak_bytes:,} "
+            f"({_fmt_bytes(b.peak_bytes)})** |"
+        )
+        lines.append("")
+    lines.append(
+        f"Every kernel fits the {_fmt_bytes(VMEM_LIMIT_BYTES)}/core VMEM "
+        "budget with headroom for double-buffered pipelining; "
+        "`python -m repro.analysis` fails if a kernel change pushes a peak "
+        "past the limit or makes this section stale."
+    )
+    return "\n".join(lines)
+
+
+def _split_docs(text: str, path: str):
+    try:
+        head, rest = text.split(BEGIN_MARK, 1)
+        body, tail = rest.split(END_MARK, 1)
+    except ValueError:
+        raise AssertionError(
+            f"{path}: vmem-budgets markers not found (expected "
+            f"{BEGIN_MARK!r} ... {END_MARK!r})"
+        )
+    return head, body, tail
+
+
+def check_docs(doc_path: str, geom: DocGeometry = DOC_GEOM) -> List[Finding]:
+    """Byte-compare the docs section against a fresh render + VMEM limits."""
+    findings: List[Finding] = []
+    for b in all_budgets(geom):
+        if b.peak_bytes > VMEM_LIMIT_BYTES:
+            findings.append(
+                Finding(
+                    rule="vmem-budget",
+                    path=doc_path,
+                    line=0,
+                    message=(
+                        f"kernel {b.kernel} peak VMEM "
+                        f"{_fmt_bytes(b.peak_bytes)} exceeds the "
+                        f"{_fmt_bytes(VMEM_LIMIT_BYTES)}/core budget"
+                    ),
+                )
+            )
+    try:
+        with open(doc_path, encoding="utf-8") as f:
+            text = f.read()
+        _, body, _ = _split_docs(text, doc_path)
+    except (OSError, AssertionError) as e:
+        findings.append(
+            Finding(rule="vmem-docs", path=doc_path, line=0, message=str(e))
+        )
+        return findings
+    expected = "\n" + render_markdown(geom) + "\n"
+    if body != expected:
+        findings.append(
+            Finding(
+                rule="vmem-docs",
+                path=doc_path,
+                line=0,
+                message=(
+                    "generated VMEM section is stale — run "
+                    "`python -m repro.analysis --write-docs`"
+                ),
+            )
+        )
+    return findings
+
+
+def write_docs(doc_path: str, geom: DocGeometry = DOC_GEOM) -> None:
+    with open(doc_path, encoding="utf-8") as f:
+        text = f.read()
+    head, _, tail = _split_docs(text, doc_path)
+    new = head + BEGIN_MARK + "\n" + render_markdown(geom) + "\n" + END_MARK + tail
+    with open(doc_path, "w", encoding="utf-8") as f:
+        f.write(new)

@@ -75,10 +75,10 @@ class AdmissionGate:
         self.max_pending = max_pending
         self.policy = policy
         self.timeout = timeout
-        self._pending = 0
+        self._pending = 0  # guarded-by: _cond
         self._cond = threading.Condition()
 
-    def _fits(self, rows: int) -> bool:
+    def _fits(self, rows: int) -> bool:  # holds: _cond
         if self.max_pending is None:
             return True
         if rows > self.max_pending:
@@ -154,10 +154,12 @@ class DegradationLadder:
         self.low_s = low_s
         self.patience = max(1, patience)
         self._lock = threading.Lock()
-        self._level = 0
-        self._hot = 0  # consecutive observations above high_s
-        self._cool = 0  # consecutive observations below low_s
-        self.transitions = 0  # rung changes (both directions)
+        self._level = 0  # guarded-by: _lock
+        # _hot/_cool: consecutive observations above high_s / below low_s
+        self._hot = 0  # guarded-by: _lock
+        self._cool = 0  # guarded-by: _lock
+        # rung changes (both directions)
+        self.transitions = 0  # guarded-by: _lock
 
     @property
     def level(self) -> int:
@@ -168,6 +170,17 @@ class DegradationLadder:
     def rung(self) -> str:
         with self._lock:
             return self.rungs[self._level]
+
+    def snapshot(self) -> dict:
+        """One consistent ``{level, rung, transitions}`` read — three
+        separate property reads can interleave with a transition and
+        report a level that never co-existed with its rung."""
+        with self._lock:
+            return {
+                "level": self._level,
+                "rung": self.rungs[self._level],
+                "transitions": self.transitions,
+            }
 
     def observe(self, queue_age_s: float) -> int:
         """Feed one dispatch's queue-age watermark; returns the level to

@@ -116,6 +116,9 @@ class IVFIndex:
         b = x.shape[0]
         if ids is None:
             ids = np.arange(self._next_id, self._next_id + b, dtype=np.int32)
+            # IVFIndex is a single-writer host object; concurrent submitters
+            # allocate ids in ServingRuntime._mutation_args instead, so:
+            # counter-ok: single-writer by contract (runtime path holds _state_lock)
             self._next_id += b
         self.state = self._insert_fn(self.state, x, jnp.asarray(ids, jnp.int32))
         return np.asarray(ids)

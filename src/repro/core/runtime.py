@@ -167,7 +167,7 @@ class ServingRuntime:
 
     def __init__(self, index: IVFIndex, cfg: RuntimeConfig = RuntimeConfig(),
                  faults: Optional[FaultPlan] = None):
-        self.index = index
+        self.index = index  # guarded-by: _state_lock [state, _next_id]
         self.cfg = cfg
         self.pool_cfg = index.pool_cfg
         self._faults = faults if faults is not None else NO_FAULTS
@@ -180,9 +180,9 @@ class ServingRuntime:
         # lock, submits check-and-enqueue under it — nothing can slip into a
         # queue after the shutdown drain has swept it
         self._submit_lock = threading.Lock()
-        self._accepting = True
-        self._drained = False
-        self._lane_dead: Optional[str] = None
+        self._accepting = True  # guarded-by: _submit_lock
+        self._drained = False  # guarded-by: _submit_lock
+        self._lane_dead: Optional[str] = None  # guarded-by: _submit_lock
         self._gate = AdmissionGate(
             cfg.max_pending_mutations, cfg.admission, cfg.admission_timeout
         )
@@ -195,12 +195,15 @@ class ServingRuntime:
         # iterating a deque while a worker appends raises RuntimeError
         # (unlike the copy-a-list-under-GIL idiom it replaced).
         self._lat_lock = threading.Lock()
+        # guarded-by: _lat_lock
         self._search_lat: collections.deque = collections.deque(
             maxlen=cfg.latency_window
         )
+        # guarded-by: _lat_lock
         self._insert_lat: collections.deque = collections.deque(
             maxlen=cfg.latency_window
         )
+        # guarded-by: _lat_lock
         self._mutation_lat: collections.deque = collections.deque(
             maxlen=cfg.latency_window
         )
@@ -211,8 +214,19 @@ class ServingRuntime:
         self._fused_pending = queue.Queue()
         # serial-mode pending mutations live on the instance (not a loop
         # local) so supervisor restarts and the shutdown drain see them
-        self._serial_pending: list[_Timed] = []
+        self._serial_pending: list[_Timed] = []  # guarded-by: _submit_lock
         self._serial_last_flush = time.perf_counter()
+        # jitted steps are cached per (chain-budget bucket, degradation
+        # params): the budget is recomputed at dispatch time (see
+        # _current_budget), so online growth costs one recompile per
+        # power-of-two bucket, and each ladder rung adds at most one entry
+        # per bucket — degradation never recompiles per request
+        self._search_steps: dict[tuple, object] = {}  # guarded-by: _state_lock
+        self._fused_steps: dict[tuple, object] = {}  # guarded-by: _state_lock
+        # cached bucketed budget; None forces a recompute (a host readback
+        # of the live chain depth) — invalidated only by the insert paths,
+        # so pure-search traffic never pays the device sync
+        self._budget: Optional[int] = None  # guarded-by: _state_lock
         self._build_steps()
         self._threads = [
             threading.Thread(
@@ -242,17 +256,6 @@ class ServingRuntime:
         # state-free: centroids come from the traced state argument, so the
         # cached steps never bake a stale pool copy in as jit constants
         self._score_fn = pqmod.pq_score_fn(pq) if pq is not None else None
-        # jitted steps are cached per (chain-budget bucket, degradation
-        # params): the budget is recomputed at dispatch time (see
-        # _current_budget), so online growth costs one recompile per
-        # power-of-two bucket, and each ladder rung adds at most one entry
-        # per bucket — degradation never recompiles per request
-        self._search_steps: dict[tuple, object] = {}
-        self._fused_steps: dict[tuple, object] = {}
-        # cached bucketed budget; None forces a recompute (a host readback
-        # of the live chain depth) — invalidated only by the insert paths,
-        # so pure-search traffic never pays the device sync
-        self._budget: Optional[int] = None
 
         def _insert(state, vectors, ids, valid):
             assign = assign_clusters(state.centroids, vectors)
@@ -283,7 +286,7 @@ class ServingRuntime:
         self._delete_step = jax.jit(_delete, donate_argnums=(0,))
         self._update_step = jax.jit(_update, donate_argnums=(0,))
 
-    def _current_budget(self) -> int:
+    def _current_budget(self) -> int:  # holds: _state_lock
         """Adaptive chain budget (§Perf), recomputed at *dispatch* time.
 
         The budget is the live chain depth bucketed to the next power of
@@ -331,6 +334,7 @@ class ServingRuntime:
 
         return _search
 
+    # holds: _state_lock
     def _search_step_for(self, base: int, budget: Optional[int] = None,
                          nprobe: Optional[int] = None,
                          rerank: Optional[bool] = None):
@@ -344,6 +348,7 @@ class ServingRuntime:
             )
         return self._search_steps[key]
 
+    # holds: _state_lock
     def _fused_step_for(self, base: int, kind: str = "insert",
                         budget: Optional[int] = None,
                         nprobe: Optional[int] = None,
@@ -366,7 +371,7 @@ class ServingRuntime:
         return self._fused_steps[key]
 
     # ------------------------------------------------------------ API ----
-    def _check_accepting(self):
+    def _check_accepting(self):  # holds: _submit_lock
         if not self._accepting:
             if self._lane_dead is not None:
                 raise RuntimeShutdown(
@@ -397,7 +402,9 @@ class ServingRuntime:
 
     def _submit_mutation(self, payload, kind: str, rows: int,
                          deadline: Optional[float]) -> Future:
-        self._check_accepting()  # cheap early out before blocking admission
+        # cheap early out before blocking admission; the racy read is safe:
+        # unlocked-ok: re-checked under _submit_lock before anything enqueues
+        self._check_accepting()
         try:
             self._faults.check("admission")
             self._gate.acquire(rows)
@@ -480,8 +487,9 @@ class ServingRuntime:
         # serial-mode pending first (oldest), then fused hand-offs, then
         # the queue itself
         items: list[_Timed] = []
-        items.extend(self._serial_pending)
-        self._serial_pending = []
+        with self._submit_lock:
+            items.extend(self._serial_pending)
+            self._serial_pending = []
         while True:
             try:
                 items.extend(self._fused_pending.get_nowait())
@@ -530,6 +538,9 @@ class ServingRuntime:
             insert = tuple(self._insert_lat)
             mutation = tuple(self._mutation_lat)
         c = self._counters.snapshot()
+        ladder = self._ladder.snapshot()
+        with self._submit_lock:
+            accepting = self._accepting
         out = {
             "search": LatencyStats.from_samples(search, timeout_ms),
             "insert": LatencyStats.from_samples(insert, timeout_ms),
@@ -552,10 +563,10 @@ class ServingRuntime:
             # live gauges
             "pending_mutations": self._gate.pending(),
             "pending_searches": self._search_q.qsize(),
-            "degradation_rung": self._ladder.rung,
-            "degradation_level": self._ladder.level,
-            "degradation_transitions": self._ladder.transitions,
-            "accepting": self._accepting,
+            "degradation_rung": ladder["rung"],
+            "degradation_level": ladder["level"],
+            "degradation_transitions": ladder["transitions"],
+            "accepting": accepting,
         }
         # live-occupancy gauges: allocated != occupied once tombstones exist
         with self._state_lock:
@@ -586,8 +597,10 @@ class ServingRuntime:
                         "its queue and stopping admission",
                         name, self.cfg.max_worker_restarts,
                     )
-                    self._lane_dead = name
                     with self._submit_lock:
+                        # set before _accepting flips so a rejected submit
+                        # never reports a plain "stopped" for a dead lane
+                        self._lane_dead = name
                         self._accepting = False
                     self._fail_lane_queue(name)
                     return
@@ -607,8 +620,9 @@ class ServingRuntime:
             self._fail_futures(items, exc)
         else:
             # search lane owns serial-mode mutations and fused hand-offs too
-            items = list(self._serial_pending)
-            self._serial_pending = []
+            with self._submit_lock:
+                items = list(self._serial_pending)
+                self._serial_pending = []
             while True:
                 try:
                     items.extend(self._fused_pending.get_nowait())
@@ -746,10 +760,16 @@ class ServingRuntime:
         if kind == "insert":
             vecs = self._pending_vectors(items)
             b = len(vecs)
-            ids = np.arange(
-                self.index._next_id, self.index._next_id + b, dtype=np.int32
-            )
-            self.index._next_id += b
+            # id allocation shares _next_id with every other dispatch path;
+            # an unlocked read-bump handed two concurrent runs (fused lane +
+            # drain, or mutation lane + shutdown flush) overlapping id
+            # ranges
+            with self._state_lock:
+                ids = np.arange(
+                    self.index._next_id, self.index._next_id + b,
+                    dtype=np.int32,
+                )
+                self.index._next_id += b
             pv, valid = self._padded(vecs, self._bucket(b))
         elif kind == "delete":
             ids = np.concatenate(
@@ -847,9 +867,9 @@ class ServingRuntime:
         off = 0
         for it in items:
             n = self._n_rows(it)
-            lat = self._insert_lat if it.kind == "insert" else \
-                self._mutation_lat
             with self._lat_lock:
+                lat = self._insert_lat if it.kind == "insert" else \
+                    self._mutation_lat
                 lat.append(t - it.t_arrival)
             if not it.future.done():
                 it.future.set_result(ids[off : off + n])
@@ -954,21 +974,27 @@ class ServingRuntime:
     def _serial_mutations(self):
         """Fig. 2a single-lane mode: mutations interleave with (and block)
         searches on the same execution stream.  Pending items live on the
-        instance so restarts and the shutdown drain never strand them."""
-        try:
-            self._serial_pending.append(self._insert_q.get_nowait())
-        except queue.Empty:
-            pass
-        self._serial_pending = self._shed_expired(
-            self._serial_pending, "mutation"
-        )
-        n_pend = sum(self._n_rows(x) for x in self._serial_pending)
-        if self._serial_pending and (
-            n_pend >= self.cfg.flush_min
-            or time.perf_counter() - self._serial_last_flush
-            > self.cfg.flush_interval
-        ):
-            items, self._serial_pending = self._serial_pending, []
+        instance so restarts and the shutdown drain never strand them; the
+        list is shared with the drain paths, so it is only touched under
+        ``_submit_lock`` — a due batch is swapped out whole and dispatched
+        after the lock drops (jit dispatch must not block submitters)."""
+        items: list[_Timed] = []
+        with self._submit_lock:
+            try:
+                self._serial_pending.append(self._insert_q.get_nowait())
+            except queue.Empty:
+                pass
+            self._serial_pending = self._shed_expired(
+                self._serial_pending, "mutation"
+            )
+            n_pend = sum(self._n_rows(x) for x in self._serial_pending)
+            if self._serial_pending and (
+                n_pend >= self.cfg.flush_min
+                or time.perf_counter() - self._serial_last_flush
+                > self.cfg.flush_interval
+            ):
+                items, self._serial_pending = self._serial_pending, []
+        if items:
             self._apply_mutations(items)
             self._serial_last_flush = time.perf_counter()
 

@@ -1,0 +1,32 @@
+"""Seeded-bad trace: a concrete array closed over as a jit constant.
+
+The PR 2 stale-centroids class: the closure captures a host array, so the
+compiled program scores against the snapshot taken at trace time forever,
+no matter how the live state moves.  The audit must flag ``baked-const``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FIXTURE_KIND = "trace"
+EXPECT_RULES = ("baked-const",)
+
+# 16 KiB of f32 — over the 4 KiB constant allowance
+CENTROIDS = np.zeros((64, 64), np.float32)
+
+
+def build():
+    S = jax.ShapeDtypeStruct
+
+    def assign(queries):
+        cents = jnp.asarray(CENTROIDS)  # baked in, not a traced argument
+        d = ((queries[:, None, :] - cents[None]) ** 2).sum(-1)
+        return jnp.argmin(d, axis=1)
+
+    return {
+        "name": "fixture/baked_constant",
+        "fn": assign,
+        "args": (S((8, 64), jnp.float32),),
+        "budget_bytes": 1 << 20,
+    }

@@ -1,0 +1,21 @@
+"""Seeded-bad lint: a jit-cache key missing a parameter.
+
+``nprobe`` varies the traced closure but is absent from the key tuple, so
+the first-compiled step is silently reused for every later ``nprobe`` —
+the PR 2 frozen-chain-budget bug class.  The linter must flag
+``jit-cache-key``.
+"""
+
+FIXTURE_KIND = "lint"
+EXPECT_RULES = ("jit-cache-key",)
+
+
+class Steps:
+    def __init__(self):
+        self._steps = {}
+
+    def step_for(self, budget, nprobe, rerank):
+        key = (budget, rerank)  # nprobe missing
+        if key not in self._steps:
+            self._steps[key] = ("compiled", budget, nprobe, rerank)
+        return self._steps[key]

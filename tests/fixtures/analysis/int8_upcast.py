@@ -1,0 +1,35 @@
+"""Seeded-bad trace: pool-scale int8 dequantization before the dot.
+
+Converting the whole int8 pool to float32 and contracting in f32 throws
+away the integer-MXU path (and doubles HBM traffic).  The audit must flag
+``int8-upcast`` twice: once for the oversized convert, once because no
+integer ``dot_general`` remains in the trace.
+"""
+
+import jax
+import jax.numpy as jnp
+
+FIXTURE_KIND = "trace"
+EXPECT_RULES = ("int8-upcast",)
+
+
+def build():
+    S = jax.ShapeDtypeStruct
+
+    def score(queries, pool_codes):
+        # dequantize 1M int8 codes up front (the legit ceiling is the
+        # [Q, K', D] rerank gather, ~0.5M elements at the audit geometry)
+        deq = pool_codes.astype(jnp.float32)
+        return jax.lax.top_k(queries @ deq.T, 10)
+
+    return {
+        "name": "fixture/int8_upcast",
+        "fn": score,
+        "args": (
+            S((64, 64), jnp.float32),
+            S((16384, 64), jnp.int8),
+        ),
+        # generous: only the int8 rules should fire
+        "budget_bytes": 64 << 20,
+        "int8_contract": True,
+    }

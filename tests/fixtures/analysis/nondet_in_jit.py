@@ -1,0 +1,19 @@
+"""Seeded-bad lint: wall-clock read inside a jitted function.
+
+``time.time()`` runs once at trace time and bakes that instant into the
+compiled program as a constant — it measures nothing and silently
+poisons any logic built on it.  The linter must flag ``nondeterminism``.
+"""
+
+import time
+
+import jax
+
+FIXTURE_KIND = "lint"
+EXPECT_RULES = ("nondeterminism",)
+
+
+@jax.jit
+def stamped_step(x):
+    t = time.time()  # trace-time constant, not a timestamp
+    return x * t

@@ -1,0 +1,33 @@
+"""Seeded-bad trace: a ``[C, Q, T]``-class score materialization.
+
+The one-HLO gather-everything idiom the fused paths were built to kill:
+scoring every probed block against every query materializes an 8 MB
+tensor where the streaming kernel's writeback budget is ~128 KB.  The
+audit must flag ``intermediate-bytes``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+FIXTURE_KIND = "trace"
+EXPECT_RULES = ("intermediate-bytes",)
+
+
+def build():
+    S = jax.ShapeDtypeStruct
+
+    def scores(queries, blocks):
+        # [C, Q, T] in one HLO: C=256 blocks x Q=64 queries x T=128 slots
+        s = jnp.einsum("qd,ctd->cqt", queries, blocks)
+        return s.max(axis=(0, 2))
+
+    return {
+        "name": "fixture/oversized_intermediate",
+        "fn": scores,
+        "args": (
+            S((64, 64), jnp.float32),
+            S((256, 128, 64), jnp.float32),
+        ),
+        # the K'-row budget a streaming path would get (2x Q*K' floats)
+        "budget_bytes": 2 * 64 * 128 * 8,
+    }

@@ -1,0 +1,177 @@
+"""Self-tests for the ``repro.analysis`` static layers (marker: analysis).
+
+The acceptance contract:
+
+* the clean repo passes — zero findings from the linter, the trace audit,
+  and the VMEM docs check, and the CLI exits 0;
+* every seeded-bad fixture under ``tests/fixtures/analysis/`` is flagged
+  with its declared rule(s), and the CLI exits nonzero on it;
+* the trace enumeration counts are pinned, so a registry change that adds
+  a search path (or payload) without an audit budget fails here;
+* the generated VMEM section of ``docs/search_paths.md`` is byte-identical
+  to a fresh render from the estimator.
+"""
+
+import importlib.util
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import jaxpr_audit, run_all, vmem
+from repro.analysis.__main__ import _run_fixture, main
+from repro.analysis.lint import lint_file
+
+pytestmark = pytest.mark.analysis
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+
+def _fixture_paths():
+    return sorted(
+        os.path.join(FIXTURES, f)
+        for f in os.listdir(FIXTURES)
+        if f.endswith(".py")
+    )
+
+
+@pytest.fixture(scope="module")
+def clean_run():
+    # traces all 42 programs + the 5 kernel wrappers; do it once per module
+    return run_all(REPO)
+
+
+# ------------------------------------------------------------- clean repo --
+def test_clean_repo_has_no_findings(clean_run):
+    findings, _ = clean_run
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exits_zero_on_clean_repo(capsys):
+    assert main(["--root", REPO, "--fail-on-findings"]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+
+
+def test_enumeration_counts_are_pinned(clean_run):
+    _, stats = clean_run
+    assert stats["search"] == jaxpr_audit.EXPECTED_SEARCH_TRACES == 26
+    assert stats["mutation"] == jaxpr_audit.EXPECTED_MUTATION_TRACES == 12
+    assert stats["rearrange"] == jaxpr_audit.EXPECTED_REARRANGE_TRACES == 4
+    assert stats["invalid_combos"] == jaxpr_audit.EXPECTED_INVALID_COMBOS == 22
+    assert stats["total"] == jaxpr_audit.EXPECTED_TOTAL_TRACES == 42
+
+
+# --------------------------------------------------------------- fixtures --
+def test_fixture_inventory_complete():
+    names = {os.path.basename(p) for p in _fixture_paths()}
+    assert names == {
+        "oversized_intermediate.py",
+        "int8_upcast.py",
+        "baked_constant.py",
+        "unlocked_field.py",
+        "incomplete_cache_key.py",
+        "nondet_in_jit.py",
+    }
+
+
+@pytest.mark.parametrize("path", _fixture_paths(), ids=os.path.basename)
+def test_fixture_is_flagged(path, capsys):
+    spec = importlib.util.spec_from_file_location("_fixture_probe", path)
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+    expected = set(module.EXPECT_RULES)
+
+    findings = _run_fixture(path)
+    assert findings, f"{path}: seeded-bad fixture produced no findings"
+    rules = {f.rule for f in findings}
+    assert expected <= rules, f"{path}: flagged {rules}, expected {expected}"
+    assert main(["--fixture", path]) == 1
+
+
+# --------------------------------------------------------------- vmem docs --
+def test_docs_vmem_section_byte_identical():
+    doc = os.path.join(REPO, "docs", "search_paths.md")
+    with open(doc, encoding="utf-8") as f:
+        text = f.read()
+    _, body, _ = vmem._split_docs(text, doc)
+    assert body == "\n" + vmem.render_markdown() + "\n"
+    assert vmem.check_docs(doc) == []
+
+
+def test_kernel_budgets_fit_vmem():
+    for budget in vmem.all_budgets():
+        assert budget.peak_bytes <= vmem.VMEM_LIMIT_BYTES, budget.kernel
+        assert budget.residents, budget.kernel
+
+
+# ------------------------------------------------------------ linter units --
+def _lint_source(tmp_path, source):
+    p = tmp_path / "snippet.py"
+    p.write_text(textwrap.dedent(source))
+    return lint_file("snippet.py", repo_root=str(tmp_path))
+
+
+def test_empty_suppression_is_itself_a_finding(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lock
+
+            def bump(self):
+                # unlocked-ok:
+                self._n = 1
+        """,
+    )
+    assert {f.rule for f in findings} == {"invalid-suppression"}
+
+
+def test_trailing_annotation_does_not_leak_to_next_line(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._a = 0  # guarded-by: _lock
+                self._b = 0
+
+            def poke(self):
+                self._b = 1
+        """,
+    )
+    assert findings == []
+
+
+def test_holds_helper_checked_at_call_site(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lock
+
+            def _bump(self):  # holds: _lock
+                self._n += 1
+
+            def good(self):
+                with self._lock:
+                    self._bump()
+
+            def bad(self):
+                self._bump()
+        """,
+    )
+    assert [f.rule for f in findings] == ["guarded-by"]
+    assert "_bump" in findings[0].message

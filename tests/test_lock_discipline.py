@@ -1,0 +1,115 @@
+"""Regression tests for the lock-discipline fixes the linter demanded.
+
+Each test targets one concrete race the ``guarded-by`` / ``counter-race``
+rules flagged in the serving layer (marker: analysis, same CI slice as the
+analyzer):
+
+* id allocation in ``ServingRuntime._mutation_args`` read-modify-writes
+  ``index._next_id`` — without ``_state_lock`` two mutation lanes could
+  hand out overlapping id ranges;
+* ``stats()`` read ``_accepting`` without ``_submit_lock`` and the three
+  ladder properties without its lock, so a snapshot could pair a level
+  with a rung that never co-existed;
+* serial-mode's pending-mutation buffer was touched by both the flush
+  loop and the drain path; the drain must still resolve every queued
+  future now that the buffer is ``_submit_lock``-guarded.
+"""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core import build_ivf
+from repro.core.admission import DegradationLadder
+from repro.core.runtime import RuntimeConfig, ServingRuntime, _Timed
+
+pytestmark = pytest.mark.analysis
+
+D = 16
+
+
+def _data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, D)).astype(np.float32)
+
+
+def _make_runtime(**kw):
+    index = build_ivf(_data(256, seed=1), n_clusters=4, block_size=16,
+                      max_chain=64, add_batch=256, capacity_vectors=8000)
+    return ServingRuntime(index, RuntimeConfig(nprobe=4, k=5, **kw))
+
+
+def test_concurrent_id_allocation_never_overlaps():
+    rt = _make_runtime()
+    n_threads, rounds, rows = 8, 25, 4
+    barrier = threading.Barrier(n_threads)
+    chunks = [[] for _ in range(n_threads)]
+
+    def worker(slot):
+        barrier.wait()
+        for _ in range(rounds):
+            item = _Timed(Future(), 0.0, _data(rows, seed=slot), kind="insert")
+            _, ids = rt._mutation_args("insert", [item])
+            chunks[slot].append(ids)
+
+    try:
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        allocated = np.concatenate([i for c in chunks for i in c])
+        assert allocated.size == n_threads * rounds * rows
+        assert np.unique(allocated).size == allocated.size, \
+            "overlapping id ranges handed to concurrent mutation batches"
+    finally:
+        rt.stop()
+
+
+def test_stats_accepting_tracks_shutdown():
+    rt = _make_runtime()
+    try:
+        s = rt.stats()
+        assert s["accepting"] is True
+        assert "degradation_rung" in s and "degradation_level" in s
+    finally:
+        rt.stop()
+    assert rt.stats()["accepting"] is False
+
+
+def test_ladder_snapshot_is_internally_consistent():
+    ladder = DegradationLadder(("no_rerank", "half_nprobe"),
+                               high_s=0.01, low_s=0.001, patience=1)
+    stop = threading.Event()
+
+    def churn():
+        flip = True
+        while not stop.is_set():
+            ladder.observe(1.0 if flip else 0.0)
+            flip = not flip
+
+    t = threading.Thread(target=churn)
+    t.start()
+    try:
+        for _ in range(2000):
+            snap = ladder.snapshot()
+            assert snap["rung"] == ladder.rungs[snap["level"]]
+    finally:
+        stop.set()
+        t.join(timeout=10)
+
+
+def test_serial_mode_drain_resolves_pending_mutations():
+    # flush thresholds high enough that the insert stays buffered in
+    # _serial_pending until stop(drain=True) sweeps it out
+    rt = _make_runtime(mode="serial", flush_interval=30.0, flush_min=10_000)
+    fut = rt.submit_insert(_data(4, seed=7))
+    time.sleep(0.3)
+    assert not fut.done()
+    rt.stop(drain=True)
+    ids = fut.result(timeout=10)
+    assert len(ids) == 4
