@@ -1,0 +1,262 @@
+"""Durability artifact: snapshot cost, WAL replay rate, measured RPO/RTO.
+
+Drives acked mutation traffic against a persistent ``ServingRuntime``,
+takes mid-stream snapshots, then crashes the hard way — the runtime object
+is abandoned without ``stop()``, so the durable state is exactly what hit
+the filesystem — and recovers:
+
+* **snapshot cost** — wall time of ``snapshot(wait=True)`` (barrier +
+  checkpoint publish + WAL prune) at several live sizes, plus the
+  on-disk snapshot bytes;
+* **WAL replay rate** — a pure ``recover_index`` pass (recovery never
+  writes the persist dir, so it is repeatable) timed end-to-end:
+  records/s and rows/s over the replayed tail;
+* **RPO** — every row acked before the crash is present, bit-exact, in
+  the recovered index (the fsync-per-batch default's claim: **0 acked
+  rows lost**, measured, not asserted from theory);
+* **RTO** — wall time of ``ServingRuntime.recover`` (verified recovery +
+  post-recovery snapshot) to a serving-ready runtime, and search parity
+  between the pre-crash and recovered runtimes on the same queries.
+
+The ISSUE's acceptance bar is asserted in-script: recovery verifies, the
+acked-row loss count is exactly 0, every logged record past the fence
+replays, and recovered top-10 search results overlap the pre-crash
+results within 0.5%.
+
+Writes ``BENCH_recovery.json`` at the repo root when run as a script.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import build_ivf
+from repro.core.block_pool import NULL
+from repro.core.runtime import RuntimeConfig, ServingRuntime
+from repro.persist import SNAP_SUBDIR, WAL_SUBDIR, recover_index
+
+DIM = 32
+N0 = 4000
+N_CLUSTERS = 8
+BATCH_ROWS = 64  # rows per acked mutation batch
+SNAP_EVERY = 16  # batches between mid-stream snapshots
+N_BATCHES = 64  # acked traffic after the last warmup
+Q = 32  # parity probe queries
+K = 10
+
+
+def _make_runtime(persist_dir: str):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(N0, DIM)).astype(np.float32)
+    idx = build_ivf(
+        x, n_clusters=N_CLUSTERS, block_size=64, max_chain=64,
+        nprobe=4, k=K, capacity_vectors=4 * N0, add_batch=512,
+    )
+    rt = ServingRuntime(
+        idx,
+        RuntimeConfig(
+            mode="parallel", nprobe=4, k=K, flush_min=BATCH_ROWS,
+            flush_interval=0.05, persist_dir=persist_dir,
+            wal_sync_interval=1,  # the RPO = 0 configuration under test
+        ),
+    )
+    return rt, idx.cfg
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def _drive(rt, oracle: dict, n_batches: int, seed: int,
+           snap_every: int = 0):
+    """Acked insert/delete/update traffic; every ack lands in ``oracle``
+    (id -> vector) before the next submit — the host-side truth recovery
+    is measured against."""
+    rng = np.random.default_rng(seed)
+    snap_times = []
+    for b in range(n_batches):
+        if snap_every and b and b % snap_every == 0:
+            t0 = time.perf_counter()
+            rt.snapshot(wait=True)
+            snap_times.append(time.perf_counter() - t0)
+        r = rng.random()
+        if r < 0.6 or len(oracle) < 2 * BATCH_ROWS:
+            vecs = rng.normal(size=(BATCH_ROWS, DIM)).astype(np.float32)
+            ids = rt.submit_insert(vecs).result(timeout=120)
+            for i, vid in enumerate(ids):
+                oracle[int(vid)] = vecs[i]
+        elif r < 0.8:
+            pick = rng.choice(sorted(oracle), size=BATCH_ROWS // 2,
+                              replace=False).astype(np.int32)
+            rt.submit_delete(pick).result(timeout=120)
+            for vid in pick:
+                del oracle[int(vid)]
+        else:
+            pick = rng.choice(sorted(oracle), size=BATCH_ROWS // 2,
+                              replace=False).astype(np.int32)
+            vecs = rng.normal(size=(len(pick), DIM)).astype(np.float32)
+            rt.submit_update(vecs, pick).result(timeout=120)
+            for i, vid in enumerate(pick):
+                oracle[int(vid)] = vecs[i]
+    return snap_times
+
+
+def _live_vectors(index) -> dict:
+    st, cfg = index.state, index.pool_cfg
+    id_map = np.asarray(st.id_map)
+    live = np.asarray(st.pool_live)
+    pay = np.asarray(st.pool_payload)
+    out = {}
+    for vid in np.flatnonzero(id_map != NULL):
+        blk, off = divmod(int(id_map[vid]), cfg.block_size)
+        if live[blk, off]:
+            out[int(vid)] = pay[blk, off]
+    return out
+
+
+def _overlap(a: np.ndarray, b: np.ndarray) -> float:
+    """Mean per-query top-K id overlap between two [Q, K] result sets."""
+    return float(np.mean([
+        len(set(map(int, ra)) & set(map(int, rb))) / K
+        for ra, rb in zip(a, b)
+    ]))
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    rt, icfg = _make_runtime(tmp)
+    oracle: dict = {}
+    queries = np.random.default_rng(9).normal(
+        size=(Q, DIM)).astype(np.float32)
+
+    # warmup: pay the mutation/search compiles outside every measurement
+    _drive(rt, oracle, n_batches=3, seed=1)
+    rt.submit_search(queries).result(timeout=120)
+
+    snap_times = _drive(
+        rt, oracle, n_batches=N_BATCHES, seed=2, snap_every=SNAP_EVERY
+    )
+    pre_crash_ids = rt.submit_search(queries).result(timeout=120)[1]
+    acked = dict(oracle)  # frozen at the crash point
+    stats = rt.stats()
+    # ---- crash: abandon the runtime; disk is all that survives ----------
+    del rt
+
+    wal_bytes = _dir_bytes(os.path.join(tmp, WAL_SUBDIR))
+    snap_bytes = _dir_bytes(os.path.join(tmp, SNAP_SUBDIR))
+
+    # pure recovery pass: snapshot load + WAL replay + verification
+    t0 = time.perf_counter()
+    index, report = recover_index(icfg, tmp)
+    t_replay = time.perf_counter() - t0
+
+    # ---- RPO: acked rows missing from the recovered state ---------------
+    recovered = _live_vectors(index)
+    missing = [vid for vid in acked if vid not in recovered]
+    mismatched = [
+        vid for vid in acked
+        if vid in recovered
+        and not np.array_equal(recovered[vid], acked[vid])
+    ]
+
+    # serving RTO: verified recovery -> a runtime accepting traffic
+    t0 = time.perf_counter()
+    rt2 = ServingRuntime.recover(icfg, tmp, cfg=RuntimeConfig(
+        mode="parallel", nprobe=4, k=K, flush_min=BATCH_ROWS,
+        flush_interval=0.05,
+    ))
+    t_rto = time.perf_counter() - t0
+    post_ids = rt2.submit_search(queries).result(timeout=120)[1]
+    parity = _overlap(pre_crash_ids, post_ids)
+    rt2.stop()
+
+    # ---- the ISSUE's acceptance bar, asserted in-script ------------------
+    assert report.verified, "recovery did not verify"
+    assert not missing and not mismatched, (
+        f"RPO violated: {len(missing)} acked rows lost, "
+        f"{len(mismatched)} corrupted"
+    )
+    assert report.last_lsn == stats["applied_lsn"], (
+        f"replay stopped at lsn {report.last_lsn}, "
+        f"pre-crash applied lsn was {stats['applied_lsn']}"
+    )
+    assert parity >= 0.995, f"top-{K} parity {parity:.4f} < 0.995"
+    assert snap_times, "no mid-stream snapshot was measured"
+
+    result = {
+        "meta": {
+            "schema": {
+                "snapshot_s": "wall time of snapshot(wait=True): barrier "
+                              "+ checkpoint publish + WAL prune, at "
+                              f"every {SNAP_EVERY}th acked batch",
+                "replay_records_per_s": "WAL records replayed / pure "
+                                        "recover_index wall time (includes "
+                                        "snapshot load + verification)",
+                "rpo_acked_rows_lost": "acked-before-crash rows absent or "
+                                       "bit-different after recovery "
+                                       "(asserted == 0)",
+                "rto_s": "ServingRuntime.recover wall time to a verified, "
+                         "serving-ready runtime (includes the "
+                         "post-recovery snapshot)",
+                "search_parity": f"mean per-query top-{K} id overlap, "
+                                 "pre-crash vs recovered (asserted "
+                                 ">= 0.995)",
+            },
+            "workload": {
+                "batch_rows": BATCH_ROWS,
+                "acked_batches": N_BATCHES,
+                "mix": "60% insert / 20% delete / 20% update",
+                "wal_sync_interval": 1,
+            },
+        },
+        "snapshot": {
+            "count": len(snap_times),
+            "snapshot_s_mean": float(np.mean(snap_times)),
+            "snapshot_s_max": float(np.max(snap_times)),
+            "snapshot_dir_bytes": snap_bytes,
+        },
+        "replay": {
+            "wal_dir_bytes": wal_bytes,
+            "wal_segments": report.wal_segments,
+            "replayed_records": report.replayed_records,
+            "replayed_rows": report.replayed_rows,
+            "recover_s": t_replay,
+            "replay_records_per_s": report.replayed_records / t_replay,
+            "replay_rows_per_s": report.replayed_rows / t_replay,
+            "torn_tail": report.torn_tail,
+        },
+        "rpo_rto": {
+            "acked_rows_at_crash": len(acked),
+            "rpo_acked_rows_lost": len(missing) + len(mismatched),
+            "rto_s": t_rto,
+            "search_parity": parity,
+            "snapshot_lsn": report.snapshot_lsn,
+            "last_lsn": report.last_lsn,
+        },
+    }
+    print("section,metric,value")
+    print(f"snapshot,mean_s,{result['snapshot']['snapshot_s_mean']:.4f}")
+    print(f"replay,records_per_s,"
+          f"{result['replay']['replay_records_per_s']:.1f}")
+    print(f"replay,rows_per_s,{result['replay']['replay_rows_per_s']:.0f}")
+    print(f"rpo,acked_rows_lost,{result['rpo_rto']['rpo_acked_rows_lost']}")
+    print(f"rto,seconds,{t_rto:.3f}")
+    print(f"parity,top{K}_overlap,{parity:.4f}")
+    out = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_recovery.json"
+    out.write_text(json.dumps(result, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,13 @@ def main():
     # deadlines with load shedding, a degradation ladder under overload,
     # crash-safe workers, drain-on-shutdown.  Operational contract and
     # the fault-injection API: docs/serving_ops.md.
+    #
+    # Set RuntimeConfig(persist_dir=...) and the index also survives
+    # kill -9: every acked mutation is WAL-logged before it applies
+    # (RPO = 0 acked rows at the default fsync cadence), snapshots are
+    # crash-consistent online cuts, and ServingRuntime.recover() replays
+    # + verifies before serving — or refuses with RecoveryError.
+    # Runbook and RPO/RTO table: docs/serving_ops.md "Durability".
 
     # ---- static analysis ------------------------------------------------
     # Before shipping changes to kernels or the serving layer, run

@@ -7,6 +7,7 @@ from repro.analysis.rules import (
     guarded_by,
     jit_cache_keys,
     nondeterminism,
+    persist_format,
 )
 
 ALL_RULES = (
@@ -14,4 +15,5 @@ ALL_RULES = (
     counters.check,
     jit_cache_keys.check,
     nondeterminism.check,
+    persist_format.check,
 )

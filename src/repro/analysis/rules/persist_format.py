@@ -1,0 +1,72 @@
+"""Persist file-format strings must be named module-level constants.
+
+The durability layer's on-disk formats (WAL record headers, snapshot
+manifests) are cache-key-relevant config: two builds that disagree about
+a ``struct`` layout corrupt each other's files exactly the way two jit
+caches keyed on half the config serve each other's programs.  The repo's
+convention (``repro.persist.wal``) is one named UPPER_CASE constant per
+layout — ``REC_HEADER_FMT = "<IIQB3x"`` — referenced everywhere the
+bytes are produced or parsed, next to the format-version constant that
+must be bumped when it changes.
+
+This rule flags any ``struct.pack/unpack/unpack_from/pack_into/calcsize``
+call whose format argument is an *inline string literal*: an anonymous
+layout that version-bump discipline cannot see.  Assigning the literal
+to an UPPER_CASE module-level name is the fix; a deliberate throwaway
+(e.g. a test forging a corrupt header) carries ``# format-ok: <why>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import LintModule, check_suppression
+
+_STRUCT_FNS = {
+    "struct.pack", "struct.unpack", "struct.unpack_from",
+    "struct.pack_into", "struct.calcsize", "struct.iter_unpack",
+    "struct.Struct",
+}
+
+
+def _dotted(node):
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def check(mod: LintModule) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        if _dotted(node.func) not in _STRUCT_FNS:
+            continue
+        fmt = node.args[0]
+        if not (isinstance(fmt, ast.Constant) and isinstance(fmt.value, str)):
+            continue  # a Name — the convention this rule wants
+        suppressed, extra = check_suppression(mod, node.lineno, "format-ok")
+        findings.extend(extra)
+        if not suppressed:
+            findings.append(
+                Finding(
+                    rule="persist-format",
+                    path=mod.path,
+                    line=node.lineno,
+                    message=(
+                        f"inline struct format {fmt.value!r}: on-disk "
+                        "layouts are versioned config — assign it to an "
+                        "UPPER_CASE module constant (see repro.persist.wal) "
+                        "so format breaks are visible and greppable"
+                    ),
+                )
+            )
+    return findings

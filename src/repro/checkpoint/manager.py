@@ -5,14 +5,22 @@ Fault-tolerance contract (DESIGN.md §7):
 * ``save`` writes one ``.npz`` per host-shard plus a JSON manifest holding
   (step, mesh shape, RNG key, data cursor, tree structure).  Writes go to a
   temp dir and are atomically renamed — a crash mid-save never corrupts the
-  latest checkpoint.  ``async_save`` does the device->host transfer
+  latest checkpoint.  Re-saving an existing step renames the old dir aside,
+  publishes, then deletes it: at no instant is the previous good checkpoint
+  gone while the new one is unpublished (the earlier rmtree-then-rename had
+  exactly that crash window).  ``async_save`` does the device->host transfer
   synchronously (cheap) and the file IO on a background thread, so training
   resumes while bytes hit disk.
 * ``restore`` rebuilds the pytree and re-shards it onto the *current* mesh —
   elastic restart onto a different pod count re-shards on load (arrays are
-  saved unsharded-logical, so any target mesh works).
-* ``latest_step`` + retention give crash-loop safety; the training loop
-  installs a SIGTERM hook that forces a final synchronous save (preemption).
+  saved unsharded-logical, so any target mesh works).  Leaves are loaded by
+  their explicit ``arr_<i>`` key (never ``data.files`` iteration order), and
+  a leaf-count mismatch raises :class:`CheckpointCorruption`, not a bare
+  assert.
+* ``latest_step`` + retention give crash-loop safety; ``_gc`` also sweeps
+  orphaned ``*.tmp`` / ``*.old`` dirs left behind by crashed saves (they
+  used to leak forever).  The training loop installs a SIGTERM hook that
+  forces a final synchronous save (preemption).
 """
 
 from __future__ import annotations
@@ -29,22 +37,37 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint dir exists but cannot be trusted (missing leaves,
+    leaf-count mismatch, unreadable manifest) — named so callers can refuse
+    to serve instead of crashing on a bare assert."""
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: Optional[threading.Thread] = None
+        self._sweep_orphans()
 
     # ------------------------------------------------------------ paths --
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
+    @staticmethod
+    def _is_published(name: str) -> bool:
+        return (
+            name.startswith("step_")
+            and not name.endswith(".tmp")
+            and not name.endswith(".old")
+        )
+
     def latest_step(self) -> Optional[int]:
         steps = [
             int(d.split("_")[1])
             for d in os.listdir(self.dir)
-            if d.startswith("step_") and not d.endswith(".tmp")
+            if self._is_published(d)
         ]
         return max(steps) if steps else None
 
@@ -74,7 +97,9 @@ class CheckpointManager:
     def _write(self, step: int, host: list, treedef: str, extra: dict):
         final = self._step_dir(step)
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):  # leftover of a crashed save of this step
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         np.savez(os.path.join(tmp, "shard_0.npz"), *host)
         manifest = {
             "step": step,
@@ -85,16 +110,50 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # publish without a window where no good copy of this step exists:
+        # the previous copy (if any) is renamed aside — still restorable up
+        # to the instant the fresh one lands — and deleted only afterwards
+        old = final + ".old"
+        if os.path.exists(old):
+            if os.path.exists(final):  # superseded leftover
+                shutil.rmtree(old)
+            else:  # a previous publish died between its two renames
+                os.rename(old, final)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)  # atomic publish
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self._gc()
 
+    def _sweep_orphans(self):
+        """Crash cleanup.  ``*.tmp`` dirs are unfinished writes — delete
+        (there is no way to know the write completed).  A ``*.old`` whose
+        base step is still published was superseded — delete; one whose
+        base is *missing* is the previous good checkpoint caught between
+        the two publish renames — restore it instead of leaking (or worse,
+        deleting) it."""
+        names = os.listdir(self.dir)
+        published = {d for d in names if self._is_published(d)}
+        for d in names:
+            if not d.startswith("step_"):
+                continue
+            path = os.path.join(self.dir, d)
+            if d.endswith(".tmp"):
+                shutil.rmtree(path, ignore_errors=True)
+            elif d.endswith(".old"):
+                base = d.rsplit(".", 1)[0]
+                if base in published:
+                    shutil.rmtree(path, ignore_errors=True)
+                else:
+                    os.rename(path, os.path.join(self.dir, base))
+
     def _gc(self):
+        self._sweep_orphans()
         steps = sorted(
             int(d.split("_")[1])
             for d in os.listdir(self.dir)
-            if d.startswith("step_") and not d.endswith(".tmp")
+            if self._is_published(d)
         )
         for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
@@ -116,10 +175,28 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         data = np.load(os.path.join(d, "shard_0.npz"))
-        host = [data[k] for k in data.files]
-        assert like is not None, "pass `like` (a pytree template)"
+        n = manifest.get("n_leaves")
+        if n is None or n != len(data.files):
+            raise CheckpointCorruption(
+                f"{d}: manifest says {n} leaves, archive holds "
+                f"{len(data.files)}"
+            )
+        # load by explicit index — ``data.files`` iteration order is a zip
+        # implementation detail, and trusting it silently permutes leaves
+        try:
+            host = [data[f"arr_{i}"] for i in range(n)]
+        except KeyError as e:
+            raise CheckpointCorruption(
+                f"{d}: missing leaf {e.args[0]!r} (expected arr_0..arr_{n - 1})"
+            ) from e
+        if like is None:
+            raise ValueError("pass `like` (a pytree template)")
         leaves, treedef = jax.tree.flatten(like)
-        assert len(leaves) == len(host), (len(leaves), len(host))
+        if len(leaves) != len(host):
+            raise CheckpointCorruption(
+                f"{d}: checkpoint has {len(host)} leaves but the `like` "
+                f"template has {len(leaves)} — schema mismatch"
+            )
         if shardings is not None:
             sleaves = jax.tree.leaves(
                 shardings, is_leaf=lambda x: hasattr(x, "spec")

@@ -29,9 +29,32 @@ per batch.  Sites (see ``repro.core.runtime``):
     queued requests past their deadlines without touching wall-clock
     tuning.
 
+The durability layer (``repro.persist``) adds four more sites:
+
+``wal_append``
+    Immediately before a mutation batch's WAL record is written — a raise
+    here models a crash before anything hit disk (the batch is neither
+    durable nor applied, and its futures fail).
+``wal_fsync``
+    Immediately before the batched ``fsync`` — a raise models power loss
+    with bytes in the page cache (tests pair it with byte-level truncation
+    of the log tail).
+``snapshot_publish``
+    On the snapshot publisher thread, before the checkpoint write — a
+    crash here must leave the previous snapshot *and* the whole WAL intact.
+``recovery_replay``
+    Before each replayed WAL batch during ``recover()`` — a crash
+    mid-replay must be re-recoverable from the same directory.
+
 Rules trigger on exact call indices (``nth``, 0-based, int or iterable)
 or on every call (``nth=None``).  Call counting is per-site under a lock:
 the trigger sequence depends only on dispatch order, never on timing.
+
+Sites are **registered**: ``fail``/``delay`` raise ``ValueError`` at
+rule-creation time on a site outside :data:`KNOWN_SITES` — a typo'd site
+would otherwise silently never fire and the test would pass vacuously.
+Test-private sites (exercising a harness, not the runtime) use the escape
+hatch ``FaultPlan(extra_sites=("my_site",))``.
 """
 
 from __future__ import annotations
@@ -41,6 +64,17 @@ import dataclasses
 import threading
 import time
 from typing import Iterable, Optional
+
+#: Every site the runtime and durability layer actually check.  Adding a
+#: ``plan.check("new_site")`` call site means adding it here (and to the
+#: site catalog in docs/serving_ops.md).
+KNOWN_SITES = frozenset({
+    # serving runtime (repro.core.runtime)
+    "search_step", "mutation_step", "fused_step",
+    "search_loop", "insert_loop", "admission",
+    # durability layer (repro.persist)
+    "wal_append", "wal_fsync", "snapshot_publish", "recovery_replay",
+})
 
 
 class FaultError(RuntimeError):
@@ -62,10 +96,13 @@ class _Rule:
 class FaultPlan:
     """An injectable schedule of failures, keyed by (site, call index)."""
 
-    def __init__(self):
+    def __init__(self, extra_sites: Iterable[str] = ()):
         self._lock = threading.Lock()
         self._rules: list[_Rule] = []
         self._calls: collections.defaultdict = collections.defaultdict(int)
+        # escape hatch for test-private sites (a harness checking its own
+        # plan); immutable after construction so validation stays simple
+        self._extra_sites = frozenset(extra_sites)
 
     # -------------------------------------------------------- authoring --
     @staticmethod
@@ -76,11 +113,21 @@ class FaultPlan:
             return frozenset(int(i) for i in nth)
         return frozenset((int(nth),))
 
+    def _validate_site(self, site: str) -> None:
+        if site not in KNOWN_SITES and site not in self._extra_sites:
+            raise ValueError(
+                f"unknown fault site {site!r}: the runtime never checks it, "
+                "so this rule would silently never fire.  Known sites: "
+                f"{sorted(KNOWN_SITES)}; register test-private sites via "
+                "FaultPlan(extra_sites=...)"
+            )
+
     def fail(self, site: str, nth=0, *, exc: Optional[BaseException] = None,
              message: str = "") -> "FaultPlan":
         """Raise at ``site`` on call index(es) ``nth`` (0-based; iterable
         for several; ``None`` for every call).  ``exc`` overrides the
         raised exception instance."""
+        self._validate_site(site)
         e = exc if exc is not None else FaultError(
             message or f"injected failure @ {site}"
         )
@@ -91,6 +138,7 @@ class FaultPlan:
     def delay(self, site: str, seconds: float, nth=None) -> "FaultPlan":
         """Sleep ``seconds`` at ``site`` on matching calls (default: every
         call) — ages queued requests / pins resource slots without raising."""
+        self._validate_site(site)
         with self._lock:
             self._rules.append(
                 _Rule(site, "delay", self._nth_set(nth), delay_s=seconds)

@@ -10,6 +10,7 @@ offline/online split is purely operational, as deployed in the paper.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import jax
@@ -23,6 +24,88 @@ from repro.core.kmeans import kmeans
 from repro.core.mutate import make_delete_fn, make_update_fn
 from repro.core.rearrange import make_rearrange_fn
 from repro.core.search import make_search_fn
+
+#: Version stamp of the (field set, field semantics) of :class:`IVFState`
+#: as serialized by ``state_to_host``.  Bump it whenever a field is added,
+#: removed, re-typed, or its meaning changes — recovery refuses to load a
+#: snapshot written under a different schema rather than misinterpreting
+#: leaves (see repro.persist.snapshot / recovery).
+STATE_SCHEMA_VERSION = 1
+
+
+class StateSchemaError(RuntimeError):
+    """A serialized IVFState does not match this build's schema."""
+
+
+class StateChecksumError(RuntimeError):
+    """A serialized IVFState leaf failed its per-leaf CRC32."""
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def state_to_host(state) -> "tuple[dict[str, np.ndarray], dict]":
+    """One D2H transfer of the whole pytree -> ``{field: np.ndarray}`` plus
+    a schema + per-leaf-CRC32 meta dict (JSON-serializable).
+
+    bfloat16 leaves are stored as their uint16 bit pattern (npz cannot hold
+    ml_dtypes natively); the logical dtype is recorded in the meta and
+    restored exactly by ``state_from_host``.
+    """
+    fields = [f.name for f in dataclasses.fields(type(state))]
+    host = jax.device_get(state)
+    arrays: dict[str, np.ndarray] = {}
+    leaves: dict[str, dict] = {}
+    for name in fields:
+        arr = np.asarray(getattr(host, name))
+        logical = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[name] = arr
+        leaves[name] = {
+            "crc32": _leaf_crc(arr),
+            "dtype": logical,
+            "shape": list(arr.shape),
+        }
+    meta = {
+        "schema": STATE_SCHEMA_VERSION,
+        "fields": fields,
+        "leaves": leaves,
+    }
+    return arrays, meta
+
+
+def state_from_host(
+    arrays: "dict[str, np.ndarray]", meta: dict, *, verify: bool = True
+) -> IVFState:
+    """Inverse of ``state_to_host``: schema check, per-leaf CRC32 verify
+    (``StateChecksumError`` names the bad leaf), then device upload."""
+    if meta.get("schema") != STATE_SCHEMA_VERSION:
+        raise StateSchemaError(
+            f"snapshot schema {meta.get('schema')!r} != this build's "
+            f"{STATE_SCHEMA_VERSION} — refusing to reinterpret leaves"
+        )
+    fields = [f.name for f in dataclasses.fields(IVFState)]
+    if list(meta.get("fields", ())) != fields:
+        raise StateSchemaError(
+            f"snapshot fields {meta.get('fields')} != {fields}"
+        )
+    dev: dict[str, jax.Array] = {}
+    for name in fields:
+        if name not in arrays:
+            raise StateSchemaError(f"snapshot is missing leaf {name!r}")
+        arr = np.asarray(arrays[name])
+        info = meta["leaves"][name]
+        if verify and _leaf_crc(arr) != info["crc32"]:
+            raise StateChecksumError(
+                f"leaf {name!r} failed its CRC32 — snapshot bytes are "
+                "corrupt, refusing to serve from it"
+            )
+        if info["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        dev[name] = jnp.asarray(arr)
+    return IVFState(**dev)
 
 
 @dataclasses.dataclass
@@ -100,6 +183,12 @@ class IVFIndex:
             )
             res = xs - cents[assign]
             self.pq = pqmod.train_pq(res, self.cfg.pq_m, seed=self.cfg.seed)
+        self._build_fns()
+
+    def _build_fns(self) -> None:
+        """Build the jitted mutation/maintenance steps for the current
+        (pool_cfg, pq) pair.  Split out of ``train`` so recovery can adopt
+        a restored state without re-running k-means (``install_state``)."""
         encode = pqmod.make_pq_encode_fn(self.pq) if self.pq else None
         self._insert_fn = make_insert_fn(self.pool_cfg, encode=encode)
         self._delete_fn = make_delete_fn(self.pool_cfg)
@@ -108,6 +197,24 @@ class IVFIndex:
             self.pool_cfg, self.cfg.rearrange_threshold,
             dead_frac=self.cfg.dead_frac_threshold,
         )
+
+    def install_state(self, state: IVFState, *, pq=None,
+                      next_id: int = 0) -> None:
+        """Adopt a restored ``IVFState`` (recovery entry point): the
+        centroids/codebooks travel inside the snapshot, so no training
+        data is needed — only the config must match the snapshot schema."""
+        expect = self.pool_cfg.payload_shape()
+        if tuple(state.pool_payload.shape) != expect:
+            raise StateSchemaError(
+                f"restored pool payload {tuple(state.pool_payload.shape)} "
+                f"!= {expect} from config — wrong IVFIndexConfig for this "
+                "snapshot"
+            )
+        self.pq = pq
+        self.state = state
+        self._next_id = int(next_id)
+        self._search_fns = {}
+        self._build_fns()
 
     def add(self, x: np.ndarray | jax.Array, ids=None) -> np.ndarray:
         """Insert a batch (offline load and online insertion share this)."""

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.block_pool import NULL, IVFState, PoolConfig
-from repro.core.insert import assign_clusters, insert_payload
+from repro.core.insert import assign_clusters, insert_payload, make_insert_fn
 
 
 def last_occurrence_mask(ids: jax.Array, valid: jax.Array) -> jax.Array:
@@ -130,6 +130,37 @@ def make_delete_fn(cfg: PoolConfig):
         return apply_delete(cfg, state, del_ids, valid)
 
     return jax.jit(step, donate_argnums=(0,))
+
+
+#: Mutation kinds a WAL record may carry, in their wire-format order (the
+#: durability layer maps these to/from the record header's kind byte).
+REPLAY_KINDS = ("insert", "delete", "update")
+
+
+def make_replay_fns(cfg: PoolConfig, encode=None) -> dict:
+    """Durability replay entry points (``repro.persist.recovery``).
+
+    One jitted batch step per mutation kind with a *uniform* signature
+    ``(state, vectors, ids, valid) -> state`` (delete ignores ``vectors``),
+    built from the exact same step constructors the online lane uses — a
+    replayed WAL record goes through the same program as the original
+    dispatch, so recovery can never diverge from what serving applied.
+    """
+    insert_step = make_insert_fn(cfg, encode=encode)
+    delete_step = make_delete_fn(cfg)
+    update_step = make_update_fn(cfg, encode=encode)
+
+    def _insert(state, vectors, ids, valid=None):
+        return insert_step(state, vectors, ids, valid)
+
+    def _delete(state, vectors, ids, valid=None):
+        del vectors  # a delete record carries only ids
+        return delete_step(state, ids, valid)
+
+    def _update(state, vectors, ids, valid=None):
+        return update_step(state, vectors, ids, valid)
+
+    return {"insert": _insert, "delete": _delete, "update": _update}
 
 
 def make_update_fn(cfg: PoolConfig, encode=None):

@@ -60,6 +60,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
+import os
 import queue
 import threading
 import time
@@ -80,14 +81,18 @@ from repro.core.admission import (
     validate_ids,
     validate_vectors,
 )
+from repro.checkpoint.manager import CheckpointManager
 from repro.core.block_pool import pool_stats
 from repro.core.faults import NO_FAULTS, FaultPlan
 from repro.core.insert import assign_clusters, insert_payload
-from repro.core.ivf import IVFIndex
+from repro.core.ivf import IVFIndex, IVFIndexConfig, state_to_host
 from repro.core.metrics import CounterSet, LatencyStats
 from repro.core.mutate import apply_delete, last_occurrence_mask
 from repro.core import pq as pqmod
 from repro.core.search import resolve_search_impl
+from repro.persist import snapshot as snapmod
+from repro.persist.snapshot import SNAP_SUBDIR, WAL_SUBDIR
+from repro.persist.wal import MutationWAL
 
 log = logging.getLogger(__name__)
 
@@ -160,6 +165,16 @@ class RuntimeConfig:
     # stop() default: flush queued mutations (True) or fail everything
     # undispatched with RuntimeShutdown (False)
     drain_on_stop: bool = True
+    # ---- durability (repro.persist; docs/serving_ops.md "Durability") ---
+    # root directory for the mutation WAL + snapshots; None keeps the index
+    # volatile (the seed behaviour).  Reopening a directory that already
+    # holds data goes through ``ServingRuntime.recover`` — constructing a
+    # fresh runtime over it would fork the log from the state.
+    persist_dir: Optional[str] = None
+    # mutation batches between WAL fsyncs.  1 (default) = fsync before
+    # every ack: RPO = 0 acked rows.  N > 1 batches the fsync: up to N-1
+    # most-recent acked batches ride in the page cache across a crash.
+    wal_sync_interval: int = 1
 
 
 class ServingRuntime:
@@ -227,6 +242,45 @@ class ServingRuntime:
         # of the live chain depth) — invalidated only by the insert paths,
         # so pure-search traffic never pays the device sync
         self._budget: Optional[int] = None  # guarded-by: _state_lock
+        # ---- durability (repro.persist) ---------------------------------
+        # report attached by the `recover` classmethod; None on a cold start
+        self.recovery_report = None
+        self._wal: Optional[MutationWAL] = None
+        self._snap_mgr: Optional[CheckpointManager] = None
+        # LSN of the last mutation applied to device state.  Guarded by
+        # _state_lock because it must move atomically with index.state —
+        # the snapshot barrier reads (state, lsn) as one cut.
+        self._applied_lsn = 0  # guarded-by: _state_lock
+        # one snapshot publisher at a time; the thread handle + last
+        # published LSN move under this lock (never held across publish IO)
+        self._snap_lock = threading.Lock()
+        self._snap_thread: Optional[threading.Thread] = None  # guarded-by: _snap_lock
+        self._snapshot_lsn = 0  # guarded-by: _snap_lock
+        if cfg.persist_dir is not None:
+            self._snap_mgr = CheckpointManager(
+                os.path.join(cfg.persist_dir, SNAP_SUBDIR)
+            )
+            # publishes never overlap: held for the whole checkpoint write
+            self._publish_serial = threading.Lock()
+            latest = self._snap_mgr.latest_step()
+            self._wal = MutationWAL(
+                os.path.join(cfg.persist_dir, WAL_SUBDIR),
+                sync_interval=cfg.wal_sync_interval,
+                faults=self._faults,
+                # LSN floor = the snapshot fence: a log whose segments were
+                # all pruned must not restart numbering under the fence
+                start_lsn=latest or 0,
+            )
+            # cold start: 0.  After `recover`: the adopted log's last LSN —
+            # the installed state already includes every replayed record.
+            self._applied_lsn = self._wal.last_lsn
+            if latest is None:
+                # recovery requires a snapshot to anchor the LSN fence, so
+                # publish the pre-traffic state now, synchronously — a crash
+                # one batch in must already be recoverable
+                self.snapshot(wait=True)
+            else:
+                self._snapshot_lsn = latest
         self._build_steps()
         self._threads = [
             threading.Thread(
@@ -462,6 +516,107 @@ class ServingRuntime:
             (vectors, ids), "update", len(ids), deadline
         )
 
+    # --------------------------------------------------------- durability --
+    def snapshot(self, wait: bool = True) -> int:
+        """Crash-consistent online snapshot (the durability barrier).
+
+        Under ``_state_lock`` — quiescing the mutation lane for exactly one
+        device_get — capture ``(state, applied LSN, id cursor)`` as a
+        single cut, then seal the active WAL segment.  The expensive part
+        (checkpoint write, then WAL prune) runs on a background thread
+        while serving continues; the WAL is pruned only *after* the
+        publish succeeded, so a crash at any instant leaves snapshot + WAL
+        sufficient to rebuild the cut.  A publish failure (injectable at
+        the ``snapshot_publish`` site) is counted, logged, and leaves the
+        previous snapshot and the whole WAL intact — and is re-raised here
+        when ``wait=True``.  Returns the cut's LSN fence.
+        """
+        if self._wal is None or self._snap_mgr is None:
+            raise RuntimeError(
+                "snapshot() needs cfg.persist_dir (durability is off)"
+            )
+        with self._snap_lock:
+            prev = self._snap_thread
+        if prev is not None and prev.is_alive():
+            prev.join()  # barrier semantics: the previous cut lands first
+        with self._state_lock:
+            arrays, meta = state_to_host(self.index.state)
+            lsn = self._applied_lsn
+            next_id = self.index._next_id
+        # seal the segment: records after the cut land in a fresh file, so
+        # prune can drop covered history at whole-segment granularity (a
+        # post-cut record in the sealed segment just keeps it alive)
+        self._wal.rotate()
+        books = (
+            None if self.index.pq is None
+            else np.asarray(self.index.pq.codebooks)
+        )
+        box: dict = {}
+
+        def _publish():
+            try:
+                with self._publish_serial:
+                    snapmod.publish(
+                        self._snap_mgr, arrays, meta, lsn=lsn,
+                        next_id=next_id, pq_books=books, faults=self._faults,
+                    )
+                    with self._snap_lock:
+                        self._snapshot_lsn = max(self._snapshot_lsn, lsn)
+                    self._wal.prune(lsn)
+                self._counters.inc("snapshots")
+            except Exception as e:
+                log.exception(
+                    "snapshot publish @ lsn %d failed; WAL retained", lsn
+                )
+                self._counters.inc("snapshot_failures")
+                box["exc"] = e
+
+        t = threading.Thread(
+            target=_publish, daemon=True, name="snapshot-publish"
+        )
+        with self._snap_lock:
+            self._snap_thread = t
+        t.start()
+        if wait:
+            t.join()
+            if "exc" in box:
+                raise box["exc"]
+        return lsn
+
+    @classmethod
+    def recover(cls, index_cfg: IVFIndexConfig, persist_dir: str,
+                cfg: Optional[RuntimeConfig] = None,
+                faults: Optional[FaultPlan] = None,
+                sample: int = 256) -> "ServingRuntime":
+        """Verified crash recovery -> a serving runtime; the only correct
+        way to reopen a persist directory that already holds data (a plain
+        constructor over it would fork the log from the state).
+
+        Loads the newest snapshot, replays the WAL tail through the same
+        batch paths serving uses, verifies (``check_invariants`` + sampled
+        id_map/pool_live cross-check), then opens for traffic with the log
+        adopted at its last LSN.  Raises ``repro.persist.RecoveryError``
+        instead of serving anything it cannot prove.  The recovery report
+        is attached as ``runtime.recovery_report``."""
+        # runtime<->recovery would be a module-level import cycle
+        from repro.persist.recovery import recover_index
+        index, report = recover_index(
+            index_cfg, persist_dir, faults=faults, sample=sample
+        )
+        run_cfg = dataclasses.replace(
+            cfg if cfg is not None else RuntimeConfig(),
+            persist_dir=persist_dir,
+        )
+        rt = cls(index, run_cfg, faults=faults)
+        rt.recovery_report = report
+        try:
+            # collapse the replayed tail: the *next* crash replays only
+            # what arrives after this point (RTO), and the WAL can prune
+            rt.snapshot(wait=True)
+        except Exception:
+            log.exception("post-recovery snapshot failed; serving anyway")
+        return rt
+
     def stop(self, drain: Optional[bool] = None, timeout: float = 10.0):
         """Graceful shutdown.  Stops admission (later ``submit_*`` raise
         ``RuntimeShutdown``), joins the workers, then drains: queued
@@ -481,6 +636,20 @@ class ServingRuntime:
                 return
             self._drained = True
         self._drain_on_stop(drain)
+        self._finish_persist(timeout)
+
+    def _finish_persist(self, timeout: float):
+        """Shutdown tail of the durability layer: let an in-flight
+        snapshot publish land, then close the WAL (final fsync) — the
+        drain above already logged everything it flushed."""
+        with self._snap_lock:
+            t = self._snap_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+        if self._snap_mgr is not None:
+            self._snap_mgr.wait()
+        if self._wal is not None:
+            self._wal.close()
 
     def _drain_on_stop(self, drain: bool):
         # mutation lane: everything not yet dispatched, in arrival order —
@@ -568,8 +737,19 @@ class ServingRuntime:
             "degradation_transitions": ladder["transitions"],
             "accepting": accepting,
         }
+        # durability gauges: the LSN contract (docs/serving_ops.md) is
+        # snapshot_lsn <= applied_lsn <= wal_lsn, durable_lsn <= wal_lsn
+        if self._wal is not None:
+            out["wal_lsn"] = self._wal.last_lsn
+            out["wal_durable_lsn"] = self._wal.durable_lsn
+            with self._snap_lock:
+                out["snapshot_lsn"] = self._snapshot_lsn
+            out["snapshots"] = c.get("snapshots", 0)
+            out["snapshot_failures"] = c.get("snapshot_failures", 0)
         # live-occupancy gauges: allocated != occupied once tombstones exist
         with self._state_lock:
+            if self._wal is not None:
+                out["applied_lsn"] = self._applied_lsn
             out.update(pool_stats(self.index.state, self.pool_cfg))
         return out
 
@@ -752,24 +932,31 @@ class ServingRuntime:
         valid[:n] = True
         return out, valid
 
-    def _mutation_args(self, kind: str, items: list[_Timed]):
+    def _mutation_args(self, kind: str, items: list[_Timed],
+                       ids: Optional[np.ndarray] = None):
         """Pack one same-kind run into the padded, fixed-shape device args
-        of its jitted step.  Returns (step_args, ids) — ids are the
-        per-row ids each future's slice resolves with (freshly assigned for
-        inserts, caller-provided for delete/update)."""
+        of its jitted step.  Returns (step_args, ids, raw_vectors) — ids
+        are the per-row ids each future's slice resolves with (freshly
+        assigned for inserts, caller-provided for delete/update);
+        raw_vectors is the unpadded host batch (None for deletes), which is
+        what the WAL logs.  ``ids`` may be passed in by a retry of a run
+        whose ids were already assigned (and possibly already WAL-logged):
+        re-allocating there would ack different ids than the log replays."""
+        vecs = None
         if kind == "insert":
             vecs = self._pending_vectors(items)
             b = len(vecs)
-            # id allocation shares _next_id with every other dispatch path;
-            # an unlocked read-bump handed two concurrent runs (fused lane +
-            # drain, or mutation lane + shutdown flush) overlapping id
-            # ranges
-            with self._state_lock:
-                ids = np.arange(
-                    self.index._next_id, self.index._next_id + b,
-                    dtype=np.int32,
-                )
-                self.index._next_id += b
+            if ids is None:
+                # id allocation shares _next_id with every other dispatch
+                # path; an unlocked read-bump handed two concurrent runs
+                # (fused lane + drain, or mutation lane + shutdown flush)
+                # overlapping id ranges
+                with self._state_lock:
+                    ids = np.arange(
+                        self.index._next_id, self.index._next_id + b,
+                        dtype=np.int32,
+                    )
+                    self.index._next_id += b
             pv, valid = self._padded(vecs, self._bucket(b))
         elif kind == "delete":
             ids = np.concatenate(
@@ -793,7 +980,7 @@ class ServingRuntime:
             args = (jnp.asarray(pids), jnp.asarray(valid))
         else:
             args = (jnp.asarray(pv), jnp.asarray(pids), jnp.asarray(valid))
-        return args, ids
+        return args, ids, vecs
 
     def _maybe_compact(self):
         """Opportunistic dead-space reclamation on the mutation lane (the
@@ -811,30 +998,60 @@ class ServingRuntime:
                 break
             self._counters.inc("compactions")
 
-    def _apply_run(self, items: list[_Timed], *, _isolate: bool = True):
+    def _wal_append(self, kind: str, ids: np.ndarray,
+                    vectors: Optional[np.ndarray]) -> Optional[int]:
+        """Log one run before its device apply (no-op without a WAL).
+        Called under ``_state_lock`` — append order *is* apply order, so
+        the LSN sequence replays in exactly the order the device saw."""
+        if self._wal is None:
+            return None
+        return self._wal.append(kind, ids, vectors)
+
+    def _apply_run(self, items: list[_Timed], *, _isolate: bool = True,
+                   _ids: Optional[np.ndarray] = None,
+                   _logged_lsn: Optional[int] = None):
         """Dispatch one same-kind run as one jitted step; same failure
         discipline as the search path (no future may hang).  A failed
         multi-item run retries once per item so one poisoned payload fails
-        only its own future."""
+        only its own future.
+
+        Durability ordering per run: WAL append (fsync per
+        ``wal_sync_interval``) -> device apply -> ack, all between one
+        acquire/release of ``_state_lock``, so no ack can outrun the log.
+        Retries after a partial failure carry the original ids (``_ids``)
+        and, when the run's record already hit the log, its LSN
+        (``_logged_lsn``) — appending again would replay the rows twice."""
         kind = items[0].kind
         step = {
             "insert": self._insert_step,
             "delete": self._delete_step,
             "update": self._update_step,
         }[kind]
+        ids = _ids
+        lsn = _logged_lsn
         try:
             self._faults.check("mutation_step")
-            args, ids = self._mutation_args(kind, items)
+            args, ids, raw = self._mutation_args(kind, items, ids=ids)
             with self._state_lock:
+                if lsn is None:
+                    lsn = self._wal_append(kind, ids, raw)
                 self.index.state = step(self.index.state, *args)
+                if lsn is not None:
+                    self._applied_lsn = lsn
                 st = self.index.state
                 self._budget = None  # chains may have grown
             jax.block_until_ready(st.cluster_len)
         except Exception as e:
             if _isolate and len(items) > 1:
                 self._counters.inc("isolations")
+                off = 0
                 for it in items:
-                    self._apply_run([it], _isolate=False)
+                    n = self._n_rows(it)
+                    sl = None if ids is None else ids[off : off + n]
+                    self._apply_run(
+                        [it], _isolate=False, _ids=sl, _logged_lsn=lsn
+                    )
+                    off += n
                 return
             self._counters.inc("poisoned", len(items))
             self._fail_futures(items, e)
@@ -1048,13 +1265,15 @@ class ServingRuntime:
         isolation can find the bad payload."""
         i_run, rest = self._split_flush(i_items)
         kind = i_run[0].kind
+        ids = None
+        lsn = None
         try:
             try:
                 self._faults.check("fused_step")
                 qs = [np.atleast_2d(x.payload) for x in s_items]
                 counts = [len(q) for q in qs]
                 qbatch = np.concatenate(qs, 0)
-                m_args, ids = self._mutation_args(kind, i_run)
+                m_args, ids, raw = self._mutation_args(kind, i_run)
                 pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
                 with self._state_lock:
                     base = self._current_budget()
@@ -1068,12 +1287,15 @@ class ServingRuntime:
                     fused_step = self._fused_step_for(
                         base, kind, eff, nprobe, rerank
                     )
+                    lsn = self._wal_append(kind, ids, raw)
                     self.index.state, d, i = fused_step(
                         self.index.state,
                         jnp.asarray(pq_),
                         jnp.asarray(qvalid),
                         *m_args,
                     )
+                    if lsn is not None:
+                        self._applied_lsn = lsn
                     st = self.index.state
                     self._budget = None  # chains may have grown or shrunk
                 d, i = np.asarray(d), np.asarray(i)
@@ -1081,7 +1303,10 @@ class ServingRuntime:
             except Exception:
                 self._counters.inc("fused_fallbacks")
                 self._run_search(s_items, _release=False)
-                self._apply_run(i_run)
+                # the decomposed retry reuses the fused attempt's ids and —
+                # when the append got through — its WAL record: logging the
+                # run twice would replay it twice on recovery
+                self._apply_run(i_run, _ids=ids, _logged_lsn=lsn)
                 return
             self._counters.inc(
                 {"insert": "inserts", "delete": "deletes",

@@ -1,0 +1,33 @@
+"""Durability for the online index: mutation WAL, crash-consistent
+snapshots, verified recovery.  See docs/serving_ops.md "Durability"."""
+
+from repro.persist.recovery import (
+    SNAP_SUBDIR,
+    WAL_SUBDIR,
+    RecoveryError,
+    RecoveryReport,
+    recover_index,
+    verify_index,
+)
+from repro.persist.snapshot import load_latest, publish
+from repro.persist.wal import (
+    MutationWAL,
+    WALCorruption,
+    WALRecord,
+    read_wal,
+)
+
+__all__ = [
+    "SNAP_SUBDIR",
+    "WAL_SUBDIR",
+    "RecoveryError",
+    "RecoveryReport",
+    "recover_index",
+    "verify_index",
+    "load_latest",
+    "publish",
+    "MutationWAL",
+    "WALCorruption",
+    "WALRecord",
+    "read_wal",
+]

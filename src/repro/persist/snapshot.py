@@ -1,0 +1,152 @@
+"""Crash-consistent online snapshots of the serving index.
+
+A snapshot is one published checkpoint directory (via
+``checkpoint.manager.CheckpointManager`` — atomic-rename publish, orphan
+sweep, retention GC) holding:
+
+* every ``IVFState`` leaf as written by ``core.ivf.state_to_host`` (bf16
+  stored as its uint16 bit pattern), plus the PQ codebooks when the index
+  is IVFPQ;
+* a manifest carrying the **LSN fence** — the WAL LSN of the last mutation
+  applied to the captured state — plus ``next_id``, the state-schema
+  version, and per-leaf CRC32s.
+
+``step`` in the checkpoint layout *is* the LSN: ``latest_step()`` finds
+the most recent snapshot and recovery replays exactly the WAL records
+with ``lsn > manifest["lsn"]``.  The capture itself (device_get under the
+runtime's state lock) lives in ``ServingRuntime.snapshot``; this module
+is the pure publish/load half, so it is testable without a runtime.
+
+``publish`` checks the ``snapshot_publish`` fault site *before* touching
+disk: a crash there must leave the previous snapshot and the whole WAL
+intact, which the crash-matrix test asserts.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointCorruption, CheckpointManager
+from repro.core import pq as pqmod
+from repro.core.faults import NO_FAULTS, FaultPlan
+from repro.core.ivf import (
+    STATE_SCHEMA_VERSION,
+    StateSchemaError,
+    state_from_host,
+)
+
+log = logging.getLogger(__name__)
+
+#: persist-directory layout (file-format constants: existing deployments
+#: have data under these names).  Defined here, not in recovery.py, so
+#: core.runtime can import them without touching the recovery module —
+#: recovery imports core.ivf, and a module-level runtime->recovery import
+#: would close that cycle on `import repro.persist`.
+SNAP_SUBDIR = "snapshots"
+WAL_SUBDIR = "wal"
+
+#: manifest key names (file-format constants: renaming any is a format
+#: break for every existing snapshot — treat like WAL_VERSION)
+MANIFEST_KIND = "ivf_snapshot"
+SNAP_KIND_KEY = "kind"
+SNAP_LSN_KEY = "lsn"
+SNAP_NEXT_ID_KEY = "next_id"
+SNAP_STATE_META_KEY = "state_meta"
+SNAP_HAS_PQ_KEY = "has_pq"
+
+
+def _tree(arrays: "dict[str, np.ndarray]", fields: "list[str]",
+          pq_books: Optional[np.ndarray]) -> dict:
+    """The exact pytree handed to CheckpointManager: field order comes
+    from the state meta (not dict iteration), PQ codebooks ride as an
+    extra leaf list so flat and PQ indexes differ only in leaf count."""
+    return {
+        "pq": [] if pq_books is None else [np.asarray(pq_books)],
+        "state": [arrays[name] for name in fields],
+    }
+
+
+def publish(
+    mgr: CheckpointManager,
+    arrays: "dict[str, np.ndarray]",
+    state_meta: dict,
+    *,
+    lsn: int,
+    next_id: int,
+    pq_books: Optional[np.ndarray] = None,
+    faults: Optional[FaultPlan] = None,
+) -> int:
+    """Write one snapshot (synchronously — the runtime calls this from its
+    own background thread).  Returns the published LSN."""
+    plan = faults if faults is not None else NO_FAULTS
+    plan.check("snapshot_publish")
+    fields = list(state_meta["fields"])
+    extra = {
+        SNAP_KIND_KEY: MANIFEST_KIND,
+        SNAP_LSN_KEY: int(lsn),
+        SNAP_NEXT_ID_KEY: int(next_id),
+        SNAP_STATE_META_KEY: state_meta,
+        SNAP_HAS_PQ_KEY: pq_books is not None,
+    }
+    mgr.save(int(lsn), _tree(arrays, fields, pq_books), extra=extra)
+    log.info("published snapshot @ lsn %d (%d leaves)", lsn, len(fields))
+    return int(lsn)
+
+
+def load_latest(directory: str):
+    """Load the newest published snapshot.
+
+    Returns ``(state, pq, manifest)`` — ``state`` a device-resident,
+    CRC-verified ``IVFState``; ``pq`` a :class:`PQParams` or ``None``;
+    ``manifest`` the dict carrying the LSN fence.  Raises
+    ``FileNotFoundError`` when the directory holds no snapshot, and
+    :class:`CheckpointCorruption` / ``StateSchemaError`` /
+    ``StateChecksumError`` when it holds one that cannot be trusted.
+    """
+    mgr = CheckpointManager(directory)
+    step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no snapshots in {directory}")
+    # peek the manifest first: the `like` template's leaf count depends on
+    # whether PQ codebooks were captured
+    with open(os.path.join(mgr._step_dir(step), "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get(SNAP_KIND_KEY) != MANIFEST_KIND:
+        raise CheckpointCorruption(
+            f"{directory}: step {step} is not an index snapshot "
+            f"(kind={manifest.get(SNAP_KIND_KEY)!r})"
+        )
+    meta = manifest.get(SNAP_STATE_META_KEY)
+    if not isinstance(meta, dict) or "fields" not in meta:
+        raise CheckpointCorruption(
+            f"{directory}: snapshot manifest lacks state_meta"
+        )
+    if meta.get("schema") != STATE_SCHEMA_VERSION:
+        raise StateSchemaError(
+            f"snapshot schema {meta.get('schema')!r} != this build's "
+            f"{STATE_SCHEMA_VERSION}"
+        )
+    fields = list(meta["fields"])
+    has_pq = bool(manifest.get(SNAP_HAS_PQ_KEY))
+    placeholder = np.zeros((1,), np.float32)
+    like = {
+        "pq": [placeholder] if has_pq else [],
+        "state": [placeholder] * len(fields),
+    }
+    tree, _ = mgr.restore(step=step, like=like)
+    arrays = {
+        name: np.asarray(jax.device_get(leaf))
+        for name, leaf in zip(fields, tree["state"])
+    }
+    state = state_from_host(arrays, meta, verify=True)
+    pq = None
+    if has_pq:
+        books = np.asarray(jax.device_get(tree["pq"][0]), np.float32)
+        pq = pqmod.PQParams(codebooks=jax.numpy.asarray(books))
+    return state, pq, manifest

@@ -1,0 +1,16 @@
+"""Seeded-bad lint: inline struct format string in a persistence path.
+
+The record layout below exists only at this call site — nothing names
+it, so a format change is invisible to the version-bump discipline that
+keeps old WAL/snapshot files readable.  The linter must flag
+``persist-format``; the fix is a module-level ``REC_FMT = "<IIQ"``.
+"""
+
+import struct
+
+FIXTURE_KIND = "lint"
+EXPECT_RULES = ("persist-format",)
+
+
+def write_record(f, length: int, crc: int, lsn: int) -> None:
+    f.write(struct.pack("<IIQ", length, crc, lsn))  # anonymous layout

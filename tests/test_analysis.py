@@ -73,6 +73,7 @@ def test_fixture_inventory_complete():
         "unlocked_field.py",
         "incomplete_cache_key.py",
         "nondet_in_jit.py",
+        "inline_format.py",
     }
 
 

@@ -583,7 +583,8 @@ def test_counter_set_is_thread_safe():
 
 
 def test_fault_plan_counts_and_resets():
-    plan = FaultPlan().fail("s", nth=1).delay("s", 0.0, nth=0)
+    # sites are registered now; test-private ones use the escape hatch
+    plan = FaultPlan(extra_sites=("s",)).fail("s", nth=1).delay("s", 0.0, nth=0)
     plan.check("s")  # call 0: delay only
     with pytest.raises(FaultError):
         plan.check("s")  # call 1: fail

@@ -52,7 +52,7 @@ def test_concurrent_id_allocation_never_overlaps():
         barrier.wait()
         for _ in range(rounds):
             item = _Timed(Future(), 0.0, _data(rows, seed=slot), kind="insert")
-            _, ids = rt._mutation_args("insert", [item])
+            _, ids, _ = rt._mutation_args("insert", [item])
             chunks[slot].append(ids)
 
     try:
