@@ -91,7 +91,12 @@ from repro.core.mutate import apply_delete, last_occurrence_mask
 from repro.core import pq as pqmod
 from repro.core.search import resolve_search_impl
 from repro.persist import snapshot as snapmod
-from repro.persist.snapshot import SNAP_SUBDIR, WAL_SUBDIR
+from repro.persist.snapshot import (
+    SNAP_SUBDIR,
+    WAL_SUBDIR,
+    PersistDirConflict,
+    persist_dir_in_use,
+)
 from repro.persist.wal import MutationWAL
 
 log = logging.getLogger(__name__)
@@ -168,8 +173,10 @@ class RuntimeConfig:
     # ---- durability (repro.persist; docs/serving_ops.md "Durability") ---
     # root directory for the mutation WAL + snapshots; None keeps the index
     # volatile (the seed behaviour).  Reopening a directory that already
-    # holds data goes through ``ServingRuntime.recover`` — constructing a
-    # fresh runtime over it would fork the log from the state.
+    # holds data must go through ``ServingRuntime.recover`` — enforced:
+    # the plain constructor raises PersistDirConflict over a used
+    # directory, because a fresh runtime over it would fork the log from
+    # the state.
     persist_dir: Optional[str] = None
     # mutation batches between WAL fsyncs.  1 (default) = fsync before
     # every ack: RPO = 0 acked rows.  N > 1 batches the fsync: up to N-1
@@ -181,7 +188,11 @@ class ServingRuntime:
     """Owns the IVF index state + jitted steps; serves search/insert."""
 
     def __init__(self, index: IVFIndex, cfg: RuntimeConfig = RuntimeConfig(),
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None, *,
+                 _recovered: bool = False):
+        """``_recovered`` is internal: only the ``recover`` classmethod may
+        set it, after replaying the directory's history into ``index`` —
+        it is what licenses opening a persist_dir that already holds data."""
         self.index = index  # guarded-by: _state_lock [state, _next_id]
         self.cfg = cfg
         self.pool_cfg = index.pool_cfg
@@ -247,16 +258,36 @@ class ServingRuntime:
         self.recovery_report = None
         self._wal: Optional[MutationWAL] = None
         self._snap_mgr: Optional[CheckpointManager] = None
-        # LSN of the last mutation applied to device state.  Guarded by
-        # _state_lock because it must move atomically with index.state —
-        # the snapshot barrier reads (state, lsn) as one cut.
+        # LSN of the last mutation applied to device state.  Writes happen
+        # under _state_lock, and only after block_until_ready confirmed
+        # the apply — the fence never covers effects the device did not
+        # acknowledge.  The snapshot barrier reads (state, lsn) as one cut
+        # under _record_lock + _state_lock.
         self._applied_lsn = 0  # guarded-by: _state_lock
+        # Serializes one WAL record's whole durable apply — append ->
+        # device apply -> block_until_ready -> fence advance, *including*
+        # the per-item isolation retries of an already-logged run —
+        # against the snapshot cut.  Without it a cut could land between
+        # a retried record's items (fence at L with only part of L
+        # applied: rows acked after the cut are lost on replay) or
+        # between an apply and its fence advance (replay would
+        # double-apply the record).  Lock order: _record_lock before
+        # _state_lock, never the other way.
+        self._record_lock = threading.Lock()
         # one snapshot publisher at a time; the thread handle + last
         # published LSN move under this lock (never held across publish IO)
         self._snap_lock = threading.Lock()
         self._snap_thread: Optional[threading.Thread] = None  # guarded-by: _snap_lock
         self._snapshot_lsn = 0  # guarded-by: _snap_lock
         if cfg.persist_dir is not None:
+            if not _recovered and persist_dir_in_use(cfg.persist_dir):
+                raise PersistDirConflict(
+                    f"{cfg.persist_dir} already holds snapshots/WAL from a "
+                    "previous run; a fresh runtime over it would fork the "
+                    "log from the in-memory index.  Reopen it through "
+                    "ServingRuntime.recover(), or point persist_dir at an "
+                    "empty directory."
+                )
             self._snap_mgr = CheckpointManager(
                 os.path.join(cfg.persist_dir, SNAP_SUBDIR)
             )
@@ -520,8 +551,9 @@ class ServingRuntime:
     def snapshot(self, wait: bool = True) -> int:
         """Crash-consistent online snapshot (the durability barrier).
 
-        Under ``_state_lock`` — quiescing the mutation lane for exactly one
-        device_get — capture ``(state, applied LSN, id cursor)`` as a
+        Under ``_record_lock`` + ``_state_lock`` — waiting out any
+        in-flight WAL record, then quiescing the mutation lane for exactly
+        one device_get — capture ``(state, applied LSN, id cursor)`` as a
         single cut, then seal the active WAL segment.  The expensive part
         (checkpoint write, then WAL prune) runs on a background thread
         while serving continues; the WAL is pruned only *after* the
@@ -539,14 +571,19 @@ class ServingRuntime:
             prev = self._snap_thread
         if prev is not None and prev.is_alive():
             prev.join()  # barrier semantics: the previous cut lands first
-        with self._state_lock:
-            arrays, meta = state_to_host(self.index.state)
-            lsn = self._applied_lsn
-            next_id = self.index._next_id
-        # seal the segment: records after the cut land in a fresh file, so
-        # prune can drop covered history at whole-segment granularity (a
-        # post-cut record in the sealed segment just keeps it alive)
-        self._wal.rotate()
+        # _record_lock waits out any in-flight record — append -> apply ->
+        # fence, including the per-item retry loop of a logged run — so
+        # the cut can never pair a fence with a half-applied record
+        with self._record_lock:
+            with self._state_lock:
+                arrays, meta = state_to_host(self.index.state)
+                lsn = self._applied_lsn
+                next_id = self.index._next_id
+            # seal the segment: records after the cut land in a fresh
+            # file, so prune can drop covered history at whole-segment
+            # granularity (a post-cut record in the sealed segment just
+            # keeps it alive)
+            self._wal.rotate()
         books = (
             None if self.index.pq is None
             else np.asarray(self.index.pq.codebooks)
@@ -588,9 +625,10 @@ class ServingRuntime:
                 cfg: Optional[RuntimeConfig] = None,
                 faults: Optional[FaultPlan] = None,
                 sample: int = 256) -> "ServingRuntime":
-        """Verified crash recovery -> a serving runtime; the only correct
-        way to reopen a persist directory that already holds data (a plain
-        constructor over it would fork the log from the state).
+        """Verified crash recovery -> a serving runtime; the only way to
+        reopen a persist directory that already holds data (the plain
+        constructor refuses one with ``PersistDirConflict``, because a
+        fresh index over an old log forks the log from the state).
 
         Loads the newest snapshot, replays the WAL tail through the same
         batch paths serving uses, verifies (``check_invariants`` + sampled
@@ -607,7 +645,7 @@ class ServingRuntime:
             cfg if cfg is not None else RuntimeConfig(),
             persist_dir=persist_dir,
         )
-        rt = cls(index, run_cfg, faults=faults)
+        rt = cls(index, run_cfg, faults=faults, _recovered=True)
         rt.recovery_report = report
         try:
             # collapse the replayed tail: the *next* crash replays only
@@ -1016,11 +1054,20 @@ class ServingRuntime:
         only its own future.
 
         Durability ordering per run: WAL append (fsync per
-        ``wal_sync_interval``) -> device apply -> ack, all between one
-        acquire/release of ``_state_lock``, so no ack can outrun the log.
-        Retries after a partial failure carry the original ids (``_ids``)
-        and, when the run's record already hit the log, its LSN
-        (``_logged_lsn``) — appending again would replay the rows twice."""
+        ``wal_sync_interval``) -> device apply -> fence advance -> ack,
+        the whole sequence under ``_record_lock`` so the snapshot cut can
+        never land inside it, and the fence (``_applied_lsn``) moving
+        only after ``block_until_ready`` confirmed the apply — never over
+        effects the device did not acknowledge.  Retries after a partial
+        failure carry the original ids (``_ids``) and, when the run's
+        record already hit the log, its LSN (``_logged_lsn``) — appending
+        again would replay the rows twice.  The record lock spans the
+        *entire* per-item retry loop of a logged run: each surviving item
+        re-advances the fence to the record's LSN, and a cut between
+        items would otherwise fence a half-applied record (rows acked
+        after the cut silently lost on recovery).  An item that fails
+        inside the loop is nacked, so a fence that ends at the record's
+        LSN with those rows absent still honours RPO = 0 *acked* rows."""
         kind = items[0].kind
         step = {
             "insert": self._insert_step,
@@ -1029,33 +1076,40 @@ class ServingRuntime:
         }[kind]
         ids = _ids
         lsn = _logged_lsn
+        if _isolate:  # retries run under the outer call's hold
+            self._record_lock.acquire()
         try:
-            self._faults.check("mutation_step")
-            args, ids, raw = self._mutation_args(kind, items, ids=ids)
-            with self._state_lock:
-                if lsn is None:
-                    lsn = self._wal_append(kind, ids, raw)
-                self.index.state = step(self.index.state, *args)
+            try:
+                self._faults.check("mutation_step")
+                args, ids, raw = self._mutation_args(kind, items, ids=ids)
+                with self._state_lock:
+                    if lsn is None:
+                        lsn = self._wal_append(kind, ids, raw)
+                    self.index.state = step(self.index.state, *args)
+                    st = self.index.state
+                    self._budget = None  # chains may have grown
+                jax.block_until_ready(st.cluster_len)
                 if lsn is not None:
-                    self._applied_lsn = lsn
-                st = self.index.state
-                self._budget = None  # chains may have grown
-            jax.block_until_ready(st.cluster_len)
-        except Exception as e:
-            if _isolate and len(items) > 1:
-                self._counters.inc("isolations")
-                off = 0
-                for it in items:
-                    n = self._n_rows(it)
-                    sl = None if ids is None else ids[off : off + n]
-                    self._apply_run(
-                        [it], _isolate=False, _ids=sl, _logged_lsn=lsn
-                    )
-                    off += n
+                    with self._state_lock:
+                        self._applied_lsn = lsn
+            except Exception as e:
+                if _isolate and len(items) > 1:
+                    self._counters.inc("isolations")
+                    off = 0
+                    for it in items:
+                        n = self._n_rows(it)
+                        sl = None if ids is None else ids[off : off + n]
+                        self._apply_run(
+                            [it], _isolate=False, _ids=sl, _logged_lsn=lsn
+                        )
+                        off += n
+                    return
+                self._counters.inc("poisoned", len(items))
+                self._fail_futures(items, e)
                 return
-            self._counters.inc("poisoned", len(items))
-            self._fail_futures(items, e)
-            return
+        finally:
+            if _isolate:
+                self._record_lock.release()
         self._counters.inc(
             {"insert": "inserts", "delete": "deletes",
              "update": "updates"}[kind],
@@ -1275,31 +1329,36 @@ class ServingRuntime:
                 qbatch = np.concatenate(qs, 0)
                 m_args, ids, raw = self._mutation_args(kind, i_run)
                 pq_, qvalid = self._padded(qbatch, self._bucket(len(qbatch)))
-                with self._state_lock:
-                    base = self._current_budget()
-                    age = time.perf_counter() - min(
-                        x.t_arrival for x in s_items
-                    )
-                    nprobe, rerank, eff = self._ladder.apply(
-                        self.cfg.nprobe, self.cfg.rerank, base,
-                        self._ladder.observe(age),
-                    )
-                    fused_step = self._fused_step_for(
-                        base, kind, eff, nprobe, rerank
-                    )
-                    lsn = self._wal_append(kind, ids, raw)
-                    self.index.state, d, i = fused_step(
-                        self.index.state,
-                        jnp.asarray(pq_),
-                        jnp.asarray(qvalid),
-                        *m_args,
-                    )
+                # same per-record discipline as _apply_run: the snapshot
+                # cut is held off from append to fence advance, and the
+                # fence moves only once the device confirmed the apply
+                with self._record_lock:
+                    with self._state_lock:
+                        base = self._current_budget()
+                        age = time.perf_counter() - min(
+                            x.t_arrival for x in s_items
+                        )
+                        nprobe, rerank, eff = self._ladder.apply(
+                            self.cfg.nprobe, self.cfg.rerank, base,
+                            self._ladder.observe(age),
+                        )
+                        fused_step = self._fused_step_for(
+                            base, kind, eff, nprobe, rerank
+                        )
+                        lsn = self._wal_append(kind, ids, raw)
+                        self.index.state, d, i = fused_step(
+                            self.index.state,
+                            jnp.asarray(pq_),
+                            jnp.asarray(qvalid),
+                            *m_args,
+                        )
+                        st = self.index.state
+                        self._budget = None  # chains may have grown/shrunk
+                    d, i = np.asarray(d), np.asarray(i)
+                    jax.block_until_ready(st.cluster_len)
                     if lsn is not None:
-                        self._applied_lsn = lsn
-                    st = self.index.state
-                    self._budget = None  # chains may have grown or shrunk
-                d, i = np.asarray(d), np.asarray(i)
-                jax.block_until_ready(st.cluster_len)
+                        with self._state_lock:
+                            self._applied_lsn = lsn
             except Exception:
                 self._counters.inc("fused_fallbacks")
                 self._run_search(s_items, _release=False)

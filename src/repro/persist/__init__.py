@@ -9,25 +9,34 @@ from repro.persist.recovery import (
     recover_index,
     verify_index,
 )
-from repro.persist.snapshot import load_latest, publish
+from repro.persist.snapshot import (
+    PersistDirConflict,
+    load_latest,
+    persist_dir_in_use,
+    publish,
+)
 from repro.persist.wal import (
     MutationWAL,
     WALCorruption,
     WALRecord,
+    WALUnavailable,
     read_wal,
 )
 
 __all__ = [
     "SNAP_SUBDIR",
     "WAL_SUBDIR",
+    "PersistDirConflict",
     "RecoveryError",
     "RecoveryReport",
     "recover_index",
     "verify_index",
     "load_latest",
+    "persist_dir_in_use",
     "publish",
     "MutationWAL",
     "WALCorruption",
     "WALRecord",
+    "WALUnavailable",
     "read_wal",
 ]

@@ -51,6 +51,25 @@ log = logging.getLogger(__name__)
 SNAP_SUBDIR = "snapshots"
 WAL_SUBDIR = "wal"
 
+class PersistDirConflict(RuntimeError):
+    """A *plain* runtime was pointed at a persist directory that already
+    holds snapshots or WAL segments.  Constructing over it would stamp
+    the old log's LSNs onto a fresh in-memory index — forking the log
+    from the state, and silently shadowing the durable history.  Reopen
+    through ``ServingRuntime.recover`` (or use an empty directory)."""
+
+
+def persist_dir_in_use(root: str) -> bool:
+    """True when ``root`` already holds snapshot or WAL data.  Any entry
+    under either subtree counts — even orphaned temp dirs mean a prior
+    writer whose history a fresh runtime would fork."""
+    for sub in (SNAP_SUBDIR, WAL_SUBDIR):
+        d = os.path.join(root, sub)
+        if os.path.isdir(d) and len(os.listdir(d)) > 0:
+            return True
+    return False
+
+
 #: manifest key names (file-format constants: renaming any is a format
 #: break for every existing snapshot — treat like WAL_VERSION)
 MANIFEST_KIND = "ivf_snapshot"

@@ -31,6 +31,14 @@ error): its record still replays on recovery.  That is at-least-once
 delivery of never-acked work — inserts mint fresh ids per submit, deletes
 are idempotent, updates are last-write-wins, so replaying it is always
 safe.
+
+A failed *append* (transient ENOSPC/EIO, failed fsync) is rolled back:
+the segment is truncated to the end of its last good record before the
+error propagates, so a retry's re-append can never collide with the dead
+record's bytes (duplicate rows, or garbage that a later scan reads as
+mid-log corruption).  If even the rollback fails, the log fails closed —
+:class:`WALUnavailable` on every further append — instead of writing
+past an untrusted tail.
 """
 
 from __future__ import annotations
@@ -74,6 +82,14 @@ class WALCorruption(RuntimeError):
     """A WAL segment failed validation somewhere other than its tail —
     unlike a torn tail (a normal crash artifact, truncated loudly), this
     means lost or mangled history and recovery must refuse to serve."""
+
+
+class WALUnavailable(RuntimeError):
+    """The append side failed closed: a failed append could not be rolled
+    back, so the active segment's tail is untrusted.  Writing past it
+    would bury garbage mid-log — unrecoverable corruption instead of a
+    truncatable tail — so every further append/rotate raises this until
+    the log is re-opened (which repairs the tail by CRC)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,6 +270,7 @@ class MutationWAL:
         self._last_lsn = 0  # guarded-by: _lock
         self._durable_lsn = 0  # guarded-by: _lock
         self._unsynced = 0  # guarded-by: _lock
+        self._failed = False  # guarded-by: _lock — rollback failed: closed
         with self._lock:
             self._adopt_existing()
             self._last_lsn = max(self._last_lsn, int(start_lsn))
@@ -314,21 +331,60 @@ class MutationWAL:
     # ---------------------------------------------------------- append ---
     def append(self, kind: str, ids: np.ndarray,
                vectors: Optional[np.ndarray] = None) -> int:
-        """Durably stage one mutation batch; returns its LSN.  Raises (and
-        leaves the log tail truncatable-by-CRC) if the write or a due
-        fsync fails — the caller must then *not* apply the batch."""
+        """Durably stage one mutation batch; returns its LSN.  Raises if
+        the write or a due fsync fails — the caller must then *not* apply
+        the batch.  A failed append is *rolled back*: the segment is
+        truncated to the end of its last good record and the LSN counter
+        restored, so the dead record's bytes cannot linger and collide
+        with the retry's re-append (duplicate rows, or mid-log garbage
+        that recovery cannot distinguish from lost history).  If even the
+        rollback fails, the log fails closed (:class:`WALUnavailable` on
+        every later append) instead of writing past an untrusted tail."""
         self._faults.check("wal_append")
         with self._lock:
+            self._ensure_open()
+            saved = (self._last_lsn, self._seg_count, self._unsynced)
+            pos = self._file.tell()
             lsn = self._last_lsn + 1
-            self._file.write(encode_record(lsn, kind, ids, vectors))
-            self._last_lsn = lsn
-            self._seg_count += 1
-            self._unsynced += 1
-            if self._unsynced >= self.sync_interval:
-                self._sync_locked()
-            else:
-                self._file.flush()  # page cache at least; fsync is batched
+            try:
+                self._file.write(encode_record(lsn, kind, ids, vectors))
+                self._last_lsn = lsn
+                self._seg_count += 1
+                self._unsynced += 1
+                if self._unsynced >= self.sync_interval:
+                    self._sync_locked()
+                else:
+                    self._file.flush()  # page cache; fsync is batched
+            except Exception:
+                self._last_lsn, self._seg_count, self._unsynced = saved
+                self._rollback_locked(pos)
+                raise
         return lsn
+
+    def _ensure_open(self):  # holds: _lock
+        if self._failed:
+            raise WALUnavailable(
+                f"{self._path}: a failed append could not be rolled back; "
+                "refusing to write past an untrusted tail (re-open the "
+                "log to repair it)"
+            )
+
+    def _rollback_locked(self, pos: int):  # holds: _lock
+        """Truncate the active segment back to ``pos`` (the end of its
+        last good record) after a failed append.  The seek flushes any
+        half-buffered bytes first; the truncate then cuts them and the
+        failed record together.  Failure here fails the log closed —
+        see ``append``."""
+        try:
+            self._file.seek(pos)
+            self._file.truncate(pos)
+            self._file.flush()
+        except Exception:
+            self._failed = True
+            log.exception(
+                "WAL rollback to offset %d of %s failed; the log is "
+                "failing closed", pos, self._path,
+            )
 
     def _sync_locked(self):  # holds: _lock
         self._faults.check("wal_fsync")
@@ -350,6 +406,7 @@ class MutationWAL:
         barrier calls this so ``prune`` can later drop whole sealed
         segments).  Returns the WAL's last LSN."""
         with self._lock:
+            self._ensure_open()  # sealing an untrusted tail buries garbage
             if self._unsynced:
                 self._sync_locked()
             self._file.close()

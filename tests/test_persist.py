@@ -21,6 +21,9 @@ import glob
 import json
 import os
 import shutil
+import threading
+import time
+from concurrent.futures import Future
 
 import numpy as np
 import pytest
@@ -29,13 +32,15 @@ from repro.checkpoint.manager import CheckpointCorruption, CheckpointManager
 from repro.core.block_pool import NULL, snapshot_ids
 from repro.core.faults import KNOWN_SITES, FaultError, FaultPlan
 from repro.core.ivf import IVFIndex, IVFIndexConfig
-from repro.core.runtime import RuntimeConfig, ServingRuntime
+from repro.core.runtime import RuntimeConfig, ServingRuntime, _Timed
 from repro.persist import (
     SNAP_SUBDIR,
     WAL_SUBDIR,
     MutationWAL,
+    PersistDirConflict,
     RecoveryError,
     WALCorruption,
+    WALUnavailable,
     read_wal,
     recover_index,
 )
@@ -216,6 +221,54 @@ def test_wal_lsn_floor_survives_full_prune(tmp_path):
     wal2 = MutationWAL(str(tmp_path), start_lsn=4)
     assert wal2.append("delete", np.array([9], np.int32)) == 5
     wal2.close()
+
+
+def test_wal_failed_fsync_rolls_back_the_record(tmp_path):
+    """A record whose due fsync fails must not leave its bytes in the
+    segment: the retry's re-append would otherwise coexist with the dead
+    record (duplicate rows / mid-log garbage on recovery)."""
+    plan = FaultPlan().fail("wal_fsync", nth=1)
+    wal = MutationWAL(str(tmp_path), faults=plan)
+    assert wal.append("insert", np.array([0], np.int32), _data(1)) == 1
+    size_before = os.path.getsize(wal._path)
+    with pytest.raises(FaultError):
+        wal.append("insert", np.array([1], np.int32), _data(1, seed=1))
+    assert wal.last_lsn == 1  # lsn counter rolled back with the bytes
+    assert os.path.getsize(wal._path) == size_before
+    # a retry re-appends cleanly at the next lsn
+    assert wal.append("insert", np.array([1], np.int32),
+                      _data(1, seed=1)) == 2
+    wal.close()
+    records, report = read_wal(str(tmp_path))
+    assert [r.lsn for r in records] == [1, 2]
+    assert report["torn_tail"] == 0  # nothing of the failure lingers
+
+
+def test_wal_fails_closed_when_rollback_fails(tmp_path):
+    """If the post-failure truncate itself fails, the active tail is
+    untrusted: further appends/rotates must raise WALUnavailable instead
+    of burying garbage mid-log."""
+
+    class _NoTruncate:
+        def __init__(self, f):
+            self._f = f
+
+        def __getattr__(self, name):
+            return getattr(self._f, name)
+
+        def truncate(self, *a):
+            raise OSError("injected truncate failure")
+
+    plan = FaultPlan().fail("wal_fsync", nth=0)
+    wal = MutationWAL(str(tmp_path), faults=plan)
+    wal._file = _NoTruncate(wal._file)
+    with pytest.raises(FaultError):
+        wal.append("insert", np.array([0], np.int32), _data(1))
+    with pytest.raises(WALUnavailable):
+        wal.append("insert", np.array([1], np.int32), _data(1))
+    with pytest.raises(WALUnavailable):
+        wal.rotate()
+    wal.close()
 
 
 # ------------------------------------------------------ fault-site registry --
@@ -510,6 +563,124 @@ def test_crash_at_mutation_step_replays_logged_batch(tmp_path):
     got = _live_vectors(index)
     for vid, vec in oracle.items():
         np.testing.assert_array_equal(got[vid], vec)
+
+
+# --------------------------------------------- record/cut atomicity matrix --
+def _insert_items(seeds, rows=2):
+    """Hand-built multi-item insert run (the lock-discipline tests' idiom)
+    so one _apply_run dispatch carries several futures."""
+    items, vecs = [], []
+    for s in seeds:
+        v = _data(rows, seed=100 + s)
+        vecs.append(v)
+        items.append(_Timed(Future(), time.perf_counter(), v, kind="insert"))
+    return items, vecs
+
+
+def test_isolation_retry_after_failed_append_stays_recoverable(tmp_path):
+    """Reviewer scenario (WAL): a multi-item run whose append dies at the
+    fsync re-appends per item on the isolation retry; the failed record's
+    bytes must have been rolled back, or recovery hits duplicate ids."""
+    plan = FaultPlan().fail("wal_fsync", nth=1)
+    rt, icfg = _runtime(tmp_path, faults=plan)
+    oracle: dict = {}
+    v0 = _data(2, seed=0)
+    for i, vid in enumerate(rt.submit_insert(v0).result(30)):  # fsync 0
+        oracle[int(vid)] = v0[i]
+    # one run of three items: the run's own append dies (fsync 1), the
+    # per-item retries append their own records (fsyncs 2..4) and all ack
+    items, vecs = _insert_items([1, 2, 3])
+    rt._apply_run(items)
+    for it, v in zip(items, vecs):
+        for i, vid in enumerate(it.future.result(30)):
+            oracle[int(vid)] = v[i]
+    assert rt.stats()["isolations"] == 1
+    # crash: abandon rt; the log must replay without duplicate ids
+    index, report = recover_index(icfg, str(tmp_path))
+    assert report.verified
+    _assert_state_equals_oracle(index, oracle)
+
+
+def test_snapshot_cut_waits_for_inflight_record(tmp_path):
+    """The cut must wait out an in-flight record's append->apply->fence
+    sequence (that is what makes the fence trustworthy)."""
+    rt, _ = _runtime(tmp_path)
+    rt.submit_insert(_data(4, seed=1)).result(30)
+    assert rt._record_lock.acquire(timeout=5)  # simulate a mid-record apply
+    try:
+        t = threading.Thread(target=rt.snapshot, kwargs={"wait": True})
+        t.start()
+        t.join(0.5)
+        assert t.is_alive(), "snapshot cut while a record was in flight"
+    finally:
+        rt._record_lock.release()
+    t.join(30)
+    assert not t.is_alive()
+    s = rt.stats()
+    assert s["snapshot_lsn"] == s["applied_lsn"] == s["wal_lsn"]
+    rt.stop()
+
+
+def test_cut_never_lands_inside_a_retried_record(tmp_path):
+    """Reviewer scenario (fence): a logged run fails after its append and
+    retries per item; a snapshot racing the retry loop must not cut
+    between items — it would fence a half-applied record and recovery
+    would silently drop rows acked after the cut."""
+    rt, icfg = _runtime(tmp_path)
+    oracle: dict = {}
+
+    calls = {"step": 0}
+    real_step = rt._insert_step
+
+    def flaky_step(state, *a):
+        calls["step"] += 1
+        if calls["step"] == 1:  # the whole-run dispatch, post-append
+            raise RuntimeError("injected device failure after the append")
+        return real_step(state, *a)
+
+    rt._insert_step = flaky_step
+
+    snap: dict = {}
+    real_args = rt._mutation_args
+
+    def racing_args(kind, items, ids=None):
+        # second retry item of the logged run: race a snapshot against
+        # the remainder of the loop and give it a wide-open window
+        if ids is not None and calls["step"] == 2 and "t" not in snap:
+            t = threading.Thread(target=rt.snapshot, kwargs={"wait": True})
+            t.start()
+            snap["t"] = t
+            time.sleep(0.3)  # unfixed code: the cut lands here, mid-record
+        return real_args(kind, items, ids=ids)
+
+    rt._mutation_args = racing_args
+
+    items, vecs = _insert_items([1, 2, 3])
+    rt._apply_run(items)
+    for it, v in zip(items, vecs):
+        for i, vid in enumerate(it.future.result(30)):
+            oracle[int(vid)] = v[i]
+    snap["t"].join(30)
+    assert not snap["t"].is_alive()
+    # crash: the snapshot (plus whatever WAL survived its prune) must
+    # rebuild every acked row — a mid-record cut loses the loop's tail
+    index, report = recover_index(icfg, str(tmp_path))
+    assert report.verified
+    _assert_state_equals_oracle(index, oracle)
+
+
+def test_plain_constructor_refuses_used_persist_dir(tmp_path):
+    """Constructing a fresh runtime over a directory that already holds
+    snapshots/WAL would fork the log from the in-memory index — enforced
+    with a named error, not a config comment."""
+    rt, icfg = _runtime(tmp_path)
+    rt.submit_insert(_data(3, seed=1)).result(30)
+    rt.stop()
+    with pytest.raises(PersistDirConflict, match="recover"):
+        _runtime(tmp_path)
+    rt2 = ServingRuntime.recover(icfg, str(tmp_path))  # the blessed path
+    assert rt2.recovery_report.verified
+    rt2.stop()
 
 
 # ---------------------------------------------------------- property test --
