@@ -15,6 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import build_systems, measure_services, simulate
+from benchmarks.loadgen import measure_runtime_services
 from repro.data.synthetic import dssm_like, sift_like
 
 # The paper's absolute grid (1k/5k/10k x 500/1k/2k QPS) targets an A10;
@@ -36,6 +37,12 @@ def run(fast: bool = True):
     for dname, (corpus, n_clusters) in datasets.items():
         systems = build_systems(corpus, n_clusters)
         services = measure_services(systems, corpus)
+        # rtams service times are measured THROUGH the real serving
+        # runtime (the adaptive controller's own EWMA service signal, see
+        # benchmarks/loadgen.py) rather than the bare-kernel harness: the
+        # analytic queue model and the deployed system share one source
+        # of truth, so they cannot drift apart on service times.
+        services["rtams"] = measure_runtime_services(corpus, n_clusters)
         # capacity anchors: search load relative to the SLOWEST searcher
         # (every system starts unsaturated, so latency growth is visible);
         # insert load relative to the FASTEST insert lane (the paper's

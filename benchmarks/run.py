@@ -37,6 +37,23 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("## Fig. 3 (measured) — open-loop load sweep on the real runtime")
+    print("=" * 72)
+    from benchmarks import loadgen
+
+    t0 = time.time()
+    out = loadgen.main(fast=fast)
+    cells = out["cells"]
+    rep = out["assertions"]
+    summary.append((
+        "loadgen_fig3",
+        round(1e6 * (time.time() - t0) / max(len(cells), 1), 1),
+        f"adaptive_p99_growth={rep['adaptive_p99_growth']}x;"
+        f"compiled={max(rep['compiled_steps'].values())}",
+    ))
+
+    print()
+    print("=" * 72)
     print("## Table 1 — rearrangement threshold vs cost")
     print("=" * 72)
     from benchmarks import table1_rearrangement

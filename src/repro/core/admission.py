@@ -76,6 +76,7 @@ class AdmissionGate:
         self.policy = policy
         self.timeout = timeout
         self._pending = 0  # guarded-by: _cond
+        self._peak = 0  # guarded-by: _cond (high-watermark since last read)
         self._cond = threading.Condition()
 
     def _fits(self, rows: int) -> bool:  # holds: _cond
@@ -89,6 +90,7 @@ class AdmissionGate:
         with self._cond:
             if self._fits(rows):
                 self._pending += rows
+                self._peak = max(self._peak, self._pending)
                 return
             if self.policy == "reject":
                 raise QueueFull(
@@ -107,6 +109,7 @@ class AdmissionGate:
                         )
                     break
             self._pending += rows
+            self._peak = max(self._peak, self._pending)
 
     def release(self, rows: int) -> None:
         with self._cond:
@@ -116,6 +119,135 @@ class AdmissionGate:
     def pending(self) -> int:
         with self._cond:
             return self._pending
+
+    def set_max_pending(self, max_pending: Optional[int]) -> None:
+        """Resize the budget online (the dynamic resource pool's lever on
+        the mutation lane).  Growing wakes blocked acquirers; shrinking
+        never revokes admitted rows — the bound tightens as they drain."""
+        with self._cond:
+            self.max_pending = max_pending
+            self._cond.notify_all()
+
+    def utilization(self) -> float:
+        """Pending rows as a fraction of the budget (0 when unbounded)."""
+        with self._cond:
+            if not self.max_pending:
+                return 0.0
+            return min(1.0, self._pending / self.max_pending)
+
+    def take_peak_utilization(self) -> float:
+        """High-watermark utilization since the previous call, then re-arm
+        to the current level.  An instantaneous read sampled between
+        dispatches is biased toward empty (the sampler runs exactly when
+        the lane just drained); the rebalancer needs "how full did this
+        lane *get*" over its interval, not "is it full right now"."""
+        with self._cond:
+            peak, self._peak = self._peak, self._pending
+            if not self.max_pending:
+                return 0.0
+            return min(1.0, peak / self.max_pending)
+
+
+# --------------------------------------------------------------- pool ----
+class DynamicResourcePool:
+    """Apportions admission capacity between the search and mutation lanes
+    from measured utilization, with hysteresis.
+
+    The runtime's two admission bounds — ``n_slots`` search permits and
+    the mutation gate's pending-row budget — are fixed at construction in
+    the static runtime.  The pool treats them as shares of one capacity:
+    ``total`` abstract slots, each worth one search permit on the search
+    side and ``rows_per_slot`` pending rows on the mutation side.
+    ``rebalance(util_search, util_mutation)`` moves **at most one slot per
+    call**, and only after ``patience`` consecutive calls agreed that the
+    utilization imbalance exceeds ``deadband`` — two mechanisms that
+    together make oscillation impossible under a square-wave load whose
+    half-period is shorter than ``patience`` rebalance intervals (the
+    direction counter resets every time the sign flips).
+
+    Floors (``min_search``, ``min_mutation``) guarantee neither lane is
+    ever starved to zero regardless of how lopsided the load runs.
+    """
+
+    def __init__(self, total: int, min_search: int = 1,
+                 min_mutation: int = 1, rows_per_slot: int = 32,
+                 deadband: float = 0.2, patience: int = 3,
+                 initial_search: Optional[int] = None):
+        if total < min_search + min_mutation:
+            raise ValueError(
+                f"total {total} below min_search {min_search} + "
+                f"min_mutation {min_mutation}"
+            )
+        if rows_per_slot < 1:
+            raise ValueError(f"rows_per_slot must be >= 1, got {rows_per_slot}")
+        self.total = total
+        self.min_search = min_search
+        self.min_mutation = min_mutation
+        self.rows_per_slot = rows_per_slot
+        self.deadband = deadband
+        self.patience = max(1, patience)
+        self._lock = threading.Lock()
+        if initial_search is None:
+            initial_search = total - min_mutation * 2
+        # guarded-by: _lock
+        self._search = min(
+            max(min_search, initial_search), total - min_mutation
+        )
+        self._streak = 0  # guarded-by: _lock (+ toward search, - away)
+        self._moves = 0  # guarded-by: _lock (slot reassignments, both ways)
+
+    @property
+    def search_slots(self) -> int:
+        with self._lock:
+            return self._search
+
+    @property
+    def mutation_rows(self) -> int:
+        with self._lock:
+            return (self.total - self._search) * self.rows_per_slot
+
+    @property
+    def moves(self) -> int:
+        with self._lock:
+            return self._moves
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "search_slots": self._search,
+                "mutation_slots": self.total - self._search,
+                "mutation_rows": (self.total - self._search)
+                * self.rows_per_slot,
+                "moves": self._moves,
+            }
+
+    def rebalance(self, util_search: float,
+                  util_mutation: float) -> tuple[int, int]:
+        """Feed one pair of lane utilizations (0..1); returns the current
+        ``(search_slots, mutation_rows)`` apportionment after at most one
+        hysteresis-gated slot move."""
+        with self._lock:
+            gap = util_search - util_mutation
+            if gap > self.deadband:
+                self._streak = self._streak + 1 if self._streak >= 0 else 1
+            elif gap < -self.deadband:
+                self._streak = self._streak - 1 if self._streak <= 0 else -1
+            else:
+                self._streak = 0
+            if self._streak >= self.patience and \
+                    self.total - self._search > self.min_mutation:
+                self._search += 1
+                self._moves += 1
+                self._streak = 0
+            elif self._streak <= -self.patience and \
+                    self._search > self.min_search:
+                self._search -= 1
+                self._moves += 1
+                self._streak = 0
+            return (
+                self._search,
+                (self.total - self._search) * self.rows_per_slot,
+            )
 
 
 # ------------------------------------------------------------- ladder ----

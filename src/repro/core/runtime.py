@@ -75,6 +75,7 @@ from repro.core.admission import (
     AdmissionGate,
     DeadlineExceeded,
     DegradationLadder,
+    DynamicResourcePool,
     QueueFull,
     RequestRejected,
     RuntimeShutdown,
@@ -82,11 +83,16 @@ from repro.core.admission import (
     validate_vectors,
 )
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.block_pool import pool_stats
+from repro.core.block_pool import dead_fraction, pool_stats
 from repro.core.faults import NO_FAULTS, FaultPlan
 from repro.core.insert import assign_clusters, insert_payload
 from repro.core.ivf import IVFIndex, IVFIndexConfig, state_to_host
-from repro.core.metrics import CounterSet, LatencyStats
+from repro.core.metrics import (
+    ArrivalEstimator,
+    CounterSet,
+    LatencyStats,
+    percentile_summary,
+)
 from repro.core.mutate import apply_delete, last_occurrence_mask
 from repro.core import pq as pqmod
 from repro.core.search import resolve_search_impl
@@ -182,6 +188,330 @@ class RuntimeConfig:
     # every ack: RPO = 0 acked rows.  N > 1 batches the fsync: up to N-1
     # most-recent acked batches ride in the page cache across a crash.
     wal_sync_interval: int = 1
+    # ---- adaptive control (docs/serving_ops.md "Adaptive control") ------
+    # master switch for the arrival-rate-driven control loop: batch window
+    # and flush threshold from live QPS, effort inside the latency
+    # envelope, load-paced compaction, and the dynamic resource pool.
+    # Off (default) = the static §3.3 schedule above, bit-for-bit.
+    adaptive: bool = False
+    # batch-window bounds: the controller picks a pow2-rung window in
+    # [window_min, window_max] from the load factor — small at low QPS
+    # (a lone mutation dispatches almost immediately), wide near
+    # saturation (dispatch cost amortizes over big batches).
+    window_min: float = 0.005
+    window_max: Optional[float] = None  # None -> flush_interval
+    rate_tau: float = 0.5  # arrival-rate EWMA time constant (seconds)
+    adaptive_interval: float = 0.05  # min seconds between controller steps
+    adaptive_patience: int = 3  # consecutive agreeing steps per rung move
+    # latency envelope for the effort knob (nprobe / chain budget);
+    # None falls back to default_deadline; both None = never degrade
+    latency_slo: Optional[float] = None
+    max_effort: int = 2  # pow2 halving levels the controller may take
+    # compaction pacing: defer auto-compact passes while the mutation
+    # queue-age watermark sits above overload_high, catch up in lulls
+    # (below overload_low) — but NEVER defer once the dead fraction
+    # reaches this bound, so recall cannot silently decay under load
+    compact_force_dead_frac: float = 0.45
+    # dynamic resource pool: re-apportion search slots vs mutation
+    # admission rows from measured lane utilization (requires
+    # max_pending_mutations; hysteresis in admission.DynamicResourcePool)
+    pool_rebalance: bool = True
+    pool_rows_per_slot: int = 64
+    pool_min_search: int = 2
+    pool_min_mutation: int = 1
+    pool_interval: float = 0.25
+
+
+class AdaptiveSlots:
+    """Resizable search-permit pool (the fixed ``Semaphore(n_slots)``
+    grown a ``set_capacity`` lever for the dynamic resource pool).
+
+    Shrinking below the in-flight count never revokes permits — new
+    acquires are rejected until the lane drains under the new capacity,
+    the same tighten-as-they-drain discipline as the admission gate.
+    """
+
+    def __init__(self, capacity: int):
+        self._lock = threading.Lock()
+        self._capacity = max(1, capacity)  # guarded-by: _lock
+        self._busy = 0  # guarded-by: _lock (permits out)
+        self._peak = 0  # guarded-by: _lock (high-watermark since read)
+
+    def acquire(self, blocking: bool = False) -> bool:
+        if blocking:
+            raise ValueError("AdaptiveSlots is non-blocking by design")
+        with self._lock:
+            if self._busy < self._capacity:
+                self._busy += 1
+                self._peak = max(self._peak, self._busy)
+                return True
+            return False
+
+    def release(self) -> None:
+        with self._lock:
+            self._busy = max(0, self._busy - 1)
+
+    def set_capacity(self, capacity: int) -> None:
+        with self._lock:
+            self._capacity = max(1, capacity)
+
+    @property
+    def capacity(self) -> int:
+        with self._lock:
+            return self._capacity
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._busy
+
+    def utilization(self) -> float:
+        with self._lock:
+            return min(1.0, self._busy / self._capacity)
+
+    def take_peak_utilization(self) -> float:
+        """High-watermark utilization since the previous call, then re-arm
+        to the current level (mirror of the admission gate's method: the
+        rebalancer samples between dispatches, exactly when an
+        instantaneous read would always say "idle")."""
+        with self._lock:
+            peak, self._peak = self._peak, self._busy
+            return min(1.0, peak / self._capacity)
+
+
+class AdaptiveController:
+    """Arrival-rate-driven batch/budget control loop (the *Adaptive* in
+    the paper's title; §3.3).  Steady-state tuning — the
+    ``DegradationLadder`` stays on top of it as overload *protection*;
+    see docs/serving_ops.md "Adaptive control" for the division of roles.
+
+    Signals come from one :class:`ArrivalEstimator` per lane: EWMA
+    arrival rate, queue-age watermark (the very observations the ladder
+    receives), and measured service seconds per dispatch.  Laws:
+
+    * **Batch window** — the load factor ``rho = rate * service /
+      flush_max`` picks a pow2 rung in ``[window_min, window_max]``,
+      with a *stability floor*: the window never drops below twice the
+      measured per-dispatch service time.  Below that floor the flush
+      threshold (``rate * window``) is smaller than what one dispatch
+      interval admits, every batch pays the full fixed dispatch cost
+      un-amortized, and the lane's dispatch utilization
+      (``service / window``) exceeds 1 at *any* rate — a rate-blind
+      death spiral ``rho`` alone cannot see.  Rung moves are
+      hysteresis-gated: at most one rung per ``adaptive_interval``,
+      only after ``adaptive_patience`` agreeing steps, so a square-wave
+      load cannot oscillate the window.
+    * **Flush threshold** — expected rows per window (``rate * window``)
+      pow2-quantized into ``[1, flush_max]``: at low rate a lone
+      mutation dispatches immediately; near saturation batches fill to
+      the cap.
+    * **Effort** — with a latency envelope configured (``latency_slo``,
+      else ``default_deadline``), search service above half the envelope
+      steps effort down (halve nprobe, then the chain budget too), and
+      below a fifth steps back up.  Halvings are pow2, so effort levels
+      key the same bounded jit caches as the ladder's rungs.
+    * **Compaction pacing** — ``should_compact`` defers auto-compaction
+      while the mutation queue-age watermark is above ``overload_high``
+      (reclamation would steal the lane mid-burst), owes the pass, and
+      releases it in the next lull — unless the dead fraction reached
+      ``compact_force_dead_frac``, the max-deferral bound past which
+      recall would silently decay.
+
+    Disabled (``adaptive=False``) every method returns the static
+    schedule: ``flush_interval`` window, ``flush_min`` threshold, full
+    effort, compact-whenever-triggered.
+    """
+
+    def __init__(self, cfg: "RuntimeConfig"):
+        self.cfg = cfg
+        self.enabled = cfg.adaptive
+        self.search = ArrivalEstimator(cfg.rate_tau)
+        self.mutation = ArrivalEstimator(cfg.rate_tau)
+        w_max = (cfg.window_max if cfg.window_max is not None
+                 else cfg.flush_interval)
+        w_min = min(cfg.window_min, w_max)
+        rungs = [w_min]
+        while rungs[-1] * 2 < w_max:
+            rungs.append(rungs[-1] * 2)
+        if w_max > rungs[-1]:
+            rungs.append(w_max)
+        #: pow2 window ladder, w_min doubling up to w_max
+        self.window_rungs: tuple = tuple(rungs)
+        self._slo = (cfg.latency_slo if cfg.latency_slo is not None
+                     else cfg.default_deadline)
+        self._lock = threading.Lock()
+        self._level = 0  # guarded-by: _lock (window rung index)
+        self._hot = 0  # guarded-by: _lock (steps wanting a wider window)
+        self._cool = 0  # guarded-by: _lock (steps wanting a narrower one)
+        self._effort = 0  # guarded-by: _lock (pow2 halvings in force)
+        self._eff_hot = 0  # guarded-by: _lock
+        self._eff_cool = 0  # guarded-by: _lock
+        self._deferred = 0  # guarded-by: _lock (compaction passes owed)
+        self._t_update = 0.0  # guarded-by: _lock (last controller step)
+        self.window_changes = 0  # guarded-by: _lock
+        self.effort_changes = 0  # guarded-by: _lock
+
+    def load_factor(self, now: Optional[float] = None) -> float:
+        """``rho`` = offered mutation rows/s over measured capacity
+        (``flush_max`` rows per measured service interval)."""
+        service = self.mutation.service(default=self.cfg.window_min)
+        capacity = self.cfg.flush_max / max(service, 1e-6)
+        return self.mutation.rate(now) / max(capacity, 1e-6)
+
+    def _maybe_update(self, now: float) -> None:
+        """One hysteresis-gated controller step (window rung + effort),
+        rate-limited to ``adaptive_interval``.  Estimator reads happen
+        before the controller lock — both are leaf locks, never nested."""
+        rho = self.load_factor(now)
+        svc = self.search.service(0.0)
+        m_svc = self.mutation.service(0.0)
+        q_age = self.mutation.queue_age()
+        with self._lock:
+            if now - self._t_update < self.cfg.adaptive_interval:
+                return
+            self._t_update = now
+            n = len(self.window_rungs)
+            target = min(n - 1, int(rho * n))
+            # stability floor: a window under ~2x the per-dispatch
+            # service time yields sub-service batches whose dispatch
+            # rate alone exceeds lane capacity (util = service/window),
+            # regardless of rho — clamp the target above it
+            floor = 0
+            while (floor < n - 1
+                   and self.window_rungs[floor] < 2.0 * m_svc):
+                floor += 1
+            target = max(target, floor)
+            # outcome feedback: rho and the floor are *models* of
+            # capacity; the queue-age watermark is the ground truth.  A
+            # lane measurably falling behind keeps escalating the window
+            # one rung per patience period until amortization catches up
+            # (or the top rung — max batching — is reached), even when
+            # the model mis-prices a dispatch.  "Behind" is age in
+            # EXCESS of the current window: under a wide window items
+            # wait a window on purpose, and reading that intended wait
+            # as overload would lock the window at the top rung
+            if q_age > self.window_rungs[self._level] + \
+                    self.cfg.overload_high:
+                target = max(target, min(n - 1, self._level + 1))
+            if target > self._level:
+                self._hot += 1
+                self._cool = 0
+            elif target < self._level:
+                self._cool += 1
+                self._hot = 0
+            else:
+                self._hot = self._cool = 0
+            if self._hot >= self.cfg.adaptive_patience:
+                self._level += 1
+                self._hot = 0
+                self.window_changes += 1
+            elif self._cool >= self.cfg.adaptive_patience:
+                self._level -= 1
+                self._cool = 0
+                self.window_changes += 1
+            if not self._slo:
+                return
+            if svc > 0.5 * self._slo and self._effort < self.cfg.max_effort:
+                self._eff_hot += 1
+                self._eff_cool = 0
+            elif svc < 0.2 * self._slo and self._effort > 0:
+                self._eff_cool += 1
+                self._eff_hot = 0
+            else:
+                self._eff_hot = self._eff_cool = 0
+            if self._eff_hot >= self.cfg.adaptive_patience:
+                self._effort += 1
+                self._eff_hot = 0
+                self.effort_changes += 1
+            elif self._eff_cool >= self.cfg.adaptive_patience:
+                self._effort -= 1
+                self._eff_cool = 0
+                self.effort_changes += 1
+
+    def window(self, now: Optional[float] = None) -> float:
+        """Current batch window (seconds) for the mutation lane."""
+        if not self.enabled:
+            return self.cfg.flush_interval
+        now = time.perf_counter() if now is None else now
+        self._maybe_update(now)
+        with self._lock:
+            return self.window_rungs[self._level]
+
+    def flush_rows(self, now: Optional[float] = None) -> int:
+        """Current dispatch threshold (pending rows that end the wait)."""
+        if not self.enabled:
+            return self.cfg.flush_min
+        now = time.perf_counter() if now is None else now
+        self._maybe_update(now)
+        with self._lock:
+            w = self.window_rungs[self._level]
+        target = self.mutation.rate(now) * w
+        rows = 1
+        while rows < target and rows < self.cfg.flush_max:
+            rows *= 2
+        return min(rows, self.cfg.flush_max)
+
+    def search_effort(self, nprobe: int, rerank: bool,
+                      budget: int) -> tuple:
+        """Effective pow2 ``(nprobe, rerank, budget)`` at the current
+        effort level — composed *before* the ladder's protective rungs,
+        so both share the same bounded jit-cache key space."""
+        if not self.enabled:
+            return nprobe, rerank, budget
+        with self._lock:
+            effort = self._effort
+        for lvl in range(effort):
+            nprobe = max(1, nprobe // 2)
+            if lvl >= 1:
+                budget = max(1, budget // 2)
+        return nprobe, rerank, budget
+
+    def should_compact(self, dead_frac: float) -> bool:
+        """Pacing gate for one auto-compact opportunity."""
+        if not self.enabled:
+            return True
+        if dead_frac >= self.cfg.compact_force_dead_frac:
+            return True  # max-deferral bound: recall never silently decays
+        if self.mutation.queue_age() > self.cfg.overload_high:
+            with self._lock:
+                self._deferred += 1
+            return False
+        return True
+
+    def compaction_owed(self) -> bool:
+        """True in a lull with deferred passes outstanding (catch up)."""
+        if not self.enabled:
+            return False
+        if self.mutation.queue_age() >= self.cfg.overload_low:
+            return False
+        with self._lock:
+            return self._deferred > 0
+
+    def compacted(self) -> None:
+        with self._lock:
+            self._deferred = 0
+
+    def snapshot(self, now: Optional[float] = None) -> dict:
+        now = time.perf_counter() if now is None else now
+        rho = self.load_factor(now)
+        s = self.search.snapshot(now)
+        m = self.mutation.snapshot(now)
+        with self._lock:
+            return {
+                "window_s": self.window_rungs[self._level],
+                "window_level": self._level,
+                "window_changes": self.window_changes,
+                "effort_level": self._effort,
+                "effort_changes": self.effort_changes,
+                "compactions_owed": self._deferred,
+                "load_factor": rho,
+                "search_rate": s["rate"],
+                "mutation_rate": m["rate"],
+                "search_queue_age_s": s["queue_age_s"],
+                "mutation_queue_age_s": m["queue_age_s"],
+                "search_service_s": s["service_s"],
+                "mutation_service_s": m["service_s"],
+            }
 
 
 class ServingRuntime:
@@ -198,7 +528,7 @@ class ServingRuntime:
         self.pool_cfg = index.pool_cfg
         self._faults = faults if faults is not None else NO_FAULTS
         self._state_lock = threading.Lock()
-        self._slots = threading.Semaphore(cfg.n_slots)
+        self._slots = AdaptiveSlots(cfg.n_slots)
         self._stop = threading.Event()
         self._search_q: queue.Queue = queue.Queue()
         self._insert_q: queue.Queue = queue.Queue()
@@ -216,6 +546,27 @@ class ServingRuntime:
             cfg.degradation_ladder, cfg.overload_high, cfg.overload_low,
             cfg.overload_patience,
         )
+        # adaptive control loop: a no-op pass-through when cfg.adaptive is
+        # off (window()/flush_rows() return the static schedule)
+        self._controller = AdaptiveController(cfg)
+        # dynamic resource pool: only meaningful with a bounded mutation
+        # lane — without max_pending_mutations there is no mutation-side
+        # budget for a slot to buy
+        self._pool: Optional[DynamicResourcePool] = None
+        self._pool_next = time.perf_counter() + cfg.pool_interval
+        if cfg.adaptive and cfg.pool_rebalance and cfg.max_pending_mutations:
+            m_slots = max(
+                cfg.pool_min_mutation,
+                -(-cfg.max_pending_mutations // cfg.pool_rows_per_slot),
+            )
+            self._pool = DynamicResourcePool(
+                total=cfg.n_slots + m_slots,
+                min_search=min(cfg.pool_min_search, cfg.n_slots),
+                min_mutation=cfg.pool_min_mutation,
+                rows_per_slot=cfg.pool_rows_per_slot,
+                patience=cfg.adaptive_patience,
+                initial_search=cfg.n_slots,
+            )
         # bounded: stats() reports over a sliding window instead of every
         # sample since process start.  Appends and snapshots share a lock —
         # iterating a deque while a worker appends raises RuntimeError
@@ -419,6 +770,19 @@ class ServingRuntime:
 
         return _search
 
+    @staticmethod
+    def _traced(step) -> int:
+        """Entry count of a jitted step's shape-trace cache (``-1`` when
+        the jit wrapper has no such counter).  Dispatch sites compare it
+        before/after a call to tell a fresh compile from a steady-state
+        hit: compile seconds must never poison the service EWMA the
+        adaptive stability floor is built on — one poisoned observation
+        can pin the batch window at the top rung for many dispatches."""
+        try:
+            return step._cache_size()
+        except AttributeError:
+            return -1
+
     # holds: _state_lock
     def _search_step_for(self, base: int, budget: Optional[int] = None,
                          nprobe: Optional[int] = None,
@@ -473,6 +837,9 @@ class ServingRuntime:
                       deadline: Optional[float] = None) -> Future:
         if self.cfg.validate:
             queries = validate_vectors(queries, self.pool_cfg.dim, "queries")
+        # offered load is the control signal: count every arrival, rejected
+        # or not, before the admission decision
+        self._controller.search.observe_arrival(1)
         with self._submit_lock:
             self._check_accepting()
             if not self._slots.acquire(blocking=False):
@@ -490,6 +857,8 @@ class ServingRuntime:
         # cheap early out before blocking admission; the racy read is safe:
         # unlocked-ok: re-checked under _submit_lock before anything enqueues
         self._check_accepting()
+        # offered rows/s, counted before admission (see submit_search)
+        self._controller.mutation.observe_arrival(rows)
         try:
             self._faults.check("admission")
             self._gate.acquire(rows)
@@ -774,7 +1143,22 @@ class ServingRuntime:
             "degradation_level": ladder["level"],
             "degradation_transitions": ladder["transitions"],
             "accepting": accepting,
+            # JSON-ready p50/p95/p99 per lane via the one shared helper
+            # (metrics.percentile_summary) — benchmarks and the runbook
+            # consume these instead of post-processing raw windows
+            "percentiles": {
+                "search": percentile_summary(search),
+                "insert": percentile_summary(insert),
+                "mutation": percentile_summary(mutation),
+            },
+            "search_slots": self._slots.capacity,
+            "search_in_flight": self._slots.in_flight,
         }
+        if self.cfg.adaptive:
+            out["adaptive"] = self._controller.snapshot()
+            out["compactions_deferred"] = c.get("compactions_deferred", 0)
+            if self._pool is not None:
+                out["pool"] = self._pool.snapshot()
         # durability gauges: the LSN contract (docs/serving_ops.md) is
         # snapshot_lsn <= applied_lsn <= wal_lsn, durable_lsn <= wal_lsn
         if self._wal is not None:
@@ -907,13 +1291,24 @@ class ServingRuntime:
     def _drain_inserts(self) -> list[_Timed]:
         """Dynamic batching policy from §3.3 over the mutation lane.
 
-        A running row count is kept instead of re-concatenating every pending
-        payload per queue pop (that was quadratic in batch size)."""
+        The flush deadline derives from the **oldest queued item's**
+        arrival plus the *current* batch window, re-read on every wait
+        iteration — never computed once per loop from a fixed
+        ``flush_interval``.  With an adaptive window that distinction is
+        the whole point: a window shrink under rising load takes effect
+        on items already queued instead of one full old-window later
+        (the stale-batch latency bug).  The flush threshold likewise
+        comes from the controller (``flush_min`` when adaptive is off).
+
+        A running row count is kept instead of re-concatenating every
+        pending payload per queue pop (that was quadratic in batch size)."""
         items: list[_Timed] = []
         pending_rows = 0
-        deadline = time.perf_counter() + self.cfg.flush_interval
+        t_enter = time.perf_counter()
         while not self._stop.is_set():
-            timeout = deadline - time.perf_counter()
+            window = self._controller.window()
+            anchor = items[0].t_arrival if items else t_enter
+            timeout = anchor + window - time.perf_counter()
             if timeout <= 0:
                 break
             try:
@@ -922,7 +1317,7 @@ class ServingRuntime:
                 continue
             items.append(item)
             pending_rows += self._n_rows(item)
-            if pending_rows >= self.cfg.flush_min:
+            if pending_rows >= self._controller.flush_rows():
                 break
         return items
 
@@ -1024,10 +1419,27 @@ class ServingRuntime:
         """Opportunistic dead-space reclamation on the mutation lane (the
         caller holds no lock; passes run under it).  Uses the index's
         rearrange step, whose trigger covers both the paper's insert
-        statistic and the mutation subsystem's dead-fraction threshold."""
+        statistic and the mutation subsystem's dead-fraction threshold.
+
+        With the adaptive controller on, each opportunity first passes the
+        pacing gate: under a load burst (mutation queue-age watermark
+        above ``overload_high``) the pass is *deferred* — reclamation
+        would steal the lane from live traffic — and caught up in the
+        next lull via ``compaction_owed`` (see ``_insert_loop_body``).
+        Deferral is bounded by the dead-fraction gauge
+        (``compact_force_dead_frac``): past the bound the pass runs
+        regardless of load, so recall never silently decays."""
         fn = self.index._rearrange_fn
         if fn is None:
             return
+        if self.cfg.adaptive:
+            with self._state_lock:
+                st = self.index.state
+            if not self._controller.should_compact(
+                float(dead_fraction(st))
+            ):
+                self._counters.inc("compactions_deferred")
+                return
         for _ in range(max(self.cfg.compact_passes, 0)):
             with self._state_lock:
                 self.index.state, triggered = fn(self.index.state)
@@ -1035,6 +1447,7 @@ class ServingRuntime:
             if not bool(triggered):
                 break
             self._counters.inc("compactions")
+        self._controller.compacted()
 
     def _wal_append(self, kind: str, ids: np.ndarray,
                     vectors: Optional[np.ndarray]) -> Optional[int]:
@@ -1080,7 +1493,19 @@ class ServingRuntime:
             self._record_lock.acquire()
         try:
             try:
+                # service is the WHOLE dispatch turnaround — fault site
+                # (where benchmarks pin per-dispatch cost), marshalling,
+                # device apply — not just the jit call: the controller's
+                # capacity model (rho, stability floor) is only honest if
+                # the measured seconds cover everything a dispatch costs
+                n_traced = self._traced(step)
+                t_svc = time.perf_counter()
                 self._faults.check("mutation_step")
+                if _isolate:  # top-level dispatch: feed the controller
+                    self._controller.mutation.observe_queue_age(
+                        time.perf_counter()
+                        - min(it.t_arrival for it in items)
+                    )
                 args, ids, raw = self._mutation_args(kind, items, ids=ids)
                 with self._state_lock:
                     if lsn is None:
@@ -1089,6 +1514,10 @@ class ServingRuntime:
                     st = self.index.state
                     self._budget = None  # chains may have grown
                 jax.block_until_ready(st.cluster_len)
+                if self._traced(step) == n_traced:  # compile != service
+                    self._controller.mutation.observe_service(
+                        time.perf_counter() - t_svc
+                    )
                 if lsn is not None:
                     with self._state_lock:
                         self._applied_lsn = lsn
@@ -1159,6 +1588,20 @@ class ServingRuntime:
                 items = self._drain_inserts()
                 items = self._shed_expired(items, "mutation")
                 if not items:
+                    # an empty drain IS a queue-age observation: the lane
+                    # is caught up.  Without it the watermark would stay
+                    # frozen at its last loaded reading through a lull,
+                    # pinning the window wide and compaction deferred
+                    self._controller.mutation.observe_queue_age(0.0)
+                    # lull: catch up on compaction passes deferred under a
+                    # burst (pacing, bounded by the dead-fraction gauge)
+                    if self.cfg.auto_compact and \
+                            self._controller.compaction_owed():
+                        try:
+                            self._maybe_compact()
+                        except Exception:
+                            log.exception("catch-up compact pass failed")
+                            self._counters.inc("compact_errors")
                     continue
                 if self.cfg.mode == "fused":
                     # hand the batch to the search loop for fused dispatch
@@ -1195,6 +1638,9 @@ class ServingRuntime:
         A failed multi-item batch retries once per item (poison isolation)."""
         try:
             try:
+                # full dispatch turnaround, as in _apply_run: the effort
+                # law compares this against the latency envelope
+                t_svc = time.perf_counter()
                 self._faults.check("search_step")
                 qs = [np.atleast_2d(i.payload) for i in items]
                 counts = [len(q) for q in qs]
@@ -1208,14 +1654,27 @@ class ServingRuntime:
                             i.t_arrival for i in items
                         )
                         level = self._ladder.observe(age)
+                        self._controller.search.observe_queue_age(age)
                     else:
                         level = self._ladder.level
+                    # controller effort (steady-state tuning) first, ladder
+                    # rungs (overload protection) on top: both halve pow2
+                    # values, so the jit-cache key space stays bounded
+                    c_nprobe, c_rerank, c_budget = \
+                        self._controller.search_effort(
+                            self.cfg.nprobe, self.cfg.rerank, base
+                        )
                     nprobe, rerank, eff = self._ladder.apply(
-                        self.cfg.nprobe, self.cfg.rerank, base, level
+                        c_nprobe, c_rerank, c_budget, level
                     )
                     step = self._search_step_for(base, eff, nprobe, rerank)
+                    n_traced = self._traced(step)
                     d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
                 d, i = np.asarray(d), np.asarray(i)
+                if self._traced(step) == n_traced:  # compile != service
+                    self._controller.search.observe_service(
+                        time.perf_counter() - t_svc
+                    )
             except Exception as e:
                 if _isolate and len(items) > 1:
                     self._counters.inc("isolations")
@@ -1259,15 +1718,37 @@ class ServingRuntime:
                 self._serial_pending, "mutation"
             )
             n_pend = sum(self._n_rows(x) for x in self._serial_pending)
+            # same oldest-item anchor as _drain_inserts: the wait a queued
+            # mutation has already served counts against the current window
             if self._serial_pending and (
-                n_pend >= self.cfg.flush_min
-                or time.perf_counter() - self._serial_last_flush
-                > self.cfg.flush_interval
+                n_pend >= self._controller.flush_rows()
+                or time.perf_counter() - min(
+                    self._serial_pending[0].t_arrival,
+                    self._serial_last_flush,
+                ) > self._controller.window()
             ):
                 items, self._serial_pending = self._serial_pending, []
         if items:
             self._apply_mutations(items)
             self._serial_last_flush = time.perf_counter()
+
+    def _maybe_rebalance(self):
+        """Dynamic resource pool step, interval-gated.  Only the search
+        loop calls this (single caller — ``_pool_next`` needs no lock);
+        the pool itself applies deadband + patience hysteresis, so one
+        slot at most moves per ``pool_interval``."""
+        if self._pool is None:
+            return
+        now = time.perf_counter()
+        if now < self._pool_next:
+            return
+        self._pool_next = now + self.cfg.pool_interval
+        slots, rows = self._pool.rebalance(
+            self._slots.take_peak_utilization(),
+            self._gate.take_peak_utilization(),
+        )
+        self._slots.set_capacity(slots)
+        self._gate.set_max_pending(rows)
 
     def _search_loop_body(self):
         while not self._stop.is_set():
@@ -1275,6 +1756,7 @@ class ServingRuntime:
             ins: Optional[list[_Timed]] = None
             try:
                 self._faults.check("search_loop")
+                self._maybe_rebalance()
                 if self.cfg.mode == "serial":
                     self._serial_mutations()
                 items = self._collect_search_batch()
@@ -1323,6 +1805,8 @@ class ServingRuntime:
         lsn = None
         try:
             try:
+                # full dispatch turnaround (see _apply_run)
+                t_svc = time.perf_counter()
                 self._faults.check("fused_step")
                 qs = [np.atleast_2d(x.payload) for x in s_items]
                 counts = [len(q) for q in qs]
@@ -1335,16 +1819,25 @@ class ServingRuntime:
                 with self._record_lock:
                     with self._state_lock:
                         base = self._current_budget()
-                        age = time.perf_counter() - min(
-                            x.t_arrival for x in s_items
-                        )
+                        now = time.perf_counter()
+                        age = now - min(x.t_arrival for x in s_items)
+                        m_age = now - min(x.t_arrival for x in i_run)
+                        self._controller.search.observe_queue_age(age)
+                        self._controller.mutation.observe_queue_age(m_age)
+                        # controller effort first, ladder protection on top
+                        # (same composition as _run_search)
+                        c_nprobe, c_rerank, c_budget = \
+                            self._controller.search_effort(
+                                self.cfg.nprobe, self.cfg.rerank, base
+                            )
                         nprobe, rerank, eff = self._ladder.apply(
-                            self.cfg.nprobe, self.cfg.rerank, base,
+                            c_nprobe, c_rerank, c_budget,
                             self._ladder.observe(age),
                         )
                         fused_step = self._fused_step_for(
                             base, kind, eff, nprobe, rerank
                         )
+                        n_traced = self._traced(fused_step)
                         lsn = self._wal_append(kind, ids, raw)
                         self.index.state, d, i = fused_step(
                             self.index.state,
@@ -1356,6 +1849,10 @@ class ServingRuntime:
                         self._budget = None  # chains may have grown/shrunk
                     d, i = np.asarray(d), np.asarray(i)
                     jax.block_until_ready(st.cluster_len)
+                    svc = time.perf_counter() - t_svc
+                    if self._traced(fused_step) == n_traced:
+                        self._controller.search.observe_service(svc)
+                        self._controller.mutation.observe_service(svc)
                     if lsn is not None:
                         with self._state_lock:
                             self._applied_lsn = lsn
