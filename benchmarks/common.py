@@ -23,8 +23,9 @@ deterministic.
 from __future__ import annotations
 
 import dataclasses
+import platform
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 import jax
@@ -32,6 +33,48 @@ import jax
 from repro.core import build_ivf
 from repro.core.baselines import FaissLikeIndex, RaftLikeIndex, RtCpuIndex
 from repro.data.synthetic import dssm_like, sift_like
+
+#: Version of the shared BENCH_*.json provenance block.  Bump when the
+#: block's key set changes shape; readers (docs/observability.md tooling,
+#: cross-run diffing) key their expectations off it.
+BENCH_SCHEMA_VERSION = 1
+
+
+def provenance(benchmark: str, *, fast: Optional[bool] = None,
+               geometry: Optional[dict] = None,
+               samples: Optional[dict] = None,
+               extra: Optional[dict] = None) -> dict:
+    """Uniform ``provenance`` block stamped into every ``BENCH_*.json``.
+
+    Before this helper each benchmark invented its own partial ``meta``;
+    two BENCH files from different runs could not be compared because
+    neither said what geometry or sample counts produced it.  Keys:
+
+    * ``schema_version`` — :data:`BENCH_SCHEMA_VERSION`;
+    * ``benchmark`` — the writing script's name;
+    * ``written_unix_s`` / ``python`` / ``jax`` / ``backend`` — when and
+      on what stack the numbers were measured;
+    * ``fast`` — CI-shrunk grid or the full one (when the script has one);
+    * ``geometry`` — corpus/config shape (dim, n, clusters, ...);
+    * ``samples`` — how many measurements back each reported number.
+    """
+    out = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "written_unix_s": round(time.time(), 3),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+    if fast is not None:
+        out["fast"] = bool(fast)
+    if geometry:
+        out["geometry"] = dict(geometry)
+    if samples:
+        out["samples"] = dict(samples)
+    if extra:
+        out.update(extra)
+    return out
 
 
 def timed(fn, *args, warmup=1, iters=5) -> float:

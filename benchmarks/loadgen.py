@@ -49,11 +49,19 @@ from concurrent.futures import wait as futures_wait
 
 import numpy as np
 
+try:
+    from benchmarks.common import provenance
+except ImportError:  # run as `python benchmarks/loadgen.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance
+
 from repro.core import build_ivf
 from repro.core.admission import RequestRejected
 from repro.core.faults import FaultPlan
 from repro.core.metrics import percentile_summary
 from repro.core.runtime import RuntimeConfig, ServingRuntime
+from repro.obs.events import EV_POOL_REBALANCE
 
 DIM = 32
 N0 = 4000
@@ -307,7 +315,17 @@ def run(fast: bool = True) -> dict:
         finally:
             rt.stop()
     report = _assert_morphology(cells, compiled, search_loads)
+    rebalancer = run_rebalancer(fast)
     return {
+        "provenance": provenance(
+            "loadgen", fast=fast,
+            geometry={"dim": DIM, "corpus": N0, "n_clusters": N_CLUSTERS,
+                      "max_search_batch": MAX_SEARCH_BATCH,
+                      "flush_max": FLUSH_MAX},
+            samples={"cells": len(cells),
+                     "search_lat": sum(c["search"]["n"] for c in cells),
+                     "mutation_lat": sum(c["mutation"]["n"] for c in cells)},
+        ),
         "meta": {
             "d_search_s": D_SEARCH, "d_mut_s": D_MUT,
             "cap_search_qps": CAP_SEARCH_QPS,
@@ -320,6 +338,7 @@ def run(fast: bool = True) -> dict:
         "compiled_steps": compiled,
         "cells": cells,
         "assertions": report,
+        "rebalancer": rebalancer,
     }
 
 
@@ -375,6 +394,94 @@ def _assert_morphology(cells, compiled, search_loads) -> dict:
         assert n <= MAX_COMPILED_STEPS, (
             f"{sys_name}: {n} compiled steps (> {MAX_COMPILED_STEPS})"
         )
+    return report
+
+
+def _warmup_bounded_gate(rt: ServingRuntime, cfg: RuntimeConfig,
+                         rng) -> None:
+    """``_warmup`` for a runtime with a bounded admission gate: one
+    mutation in flight at a time, so the compile-priming burst can never
+    overflow ``max_pending_mutations``."""
+    sizes, b = [], 8
+    while b <= cfg.flush_max:
+        sizes.append(b)
+        b *= 2
+    for n in sizes:
+        rt.submit_insert(
+            rng.normal(size=(n, DIM)).astype(np.float32)
+        ).result(timeout=300)
+        rt.submit_delete(rng.integers(0, N0, n)).result(timeout=300)
+        rt.submit_update(
+            rng.normal(size=(n, DIM)).astype(np.float32),
+            rng.integers(0, N0, n),
+        ).result(timeout=300)
+    n = 1
+    while n <= MAX_SEARCH_BATCH:
+        rt.submit_search(
+            rng.normal(size=(n, DIM)).astype(np.float32)
+        ).result(timeout=300)
+        n *= 2
+
+
+def run_rebalancer(fast: bool = True) -> dict:
+    """Exercise the ``DynamicResourcePool`` rebalancer inside the loadgen
+    methodology (a ROADMAP leftover: it was only unit-tested before).
+
+    One adaptive runtime with rebalancing ON sees two phases of lopsided
+    load — search-heavy, then mutation-heavy — under the same pinned
+    dispatch costs as the grid.  The pool must move search slots toward
+    the hot lane in each phase, and every move must land in the flight
+    recorder as a ``pool.rebalance`` event (this scenario doubles as the
+    recorder's integration check).  Asserted in-script:
+
+    * slots grew above the initial apportionment during the search phase;
+    * slots moved back down during the mutation phase;
+    * ``moves`` matches the flight recorder's event count exactly.
+    """
+    phase_s = 1.2 if fast else 2.5
+    cfg = RuntimeConfig(
+        mode="parallel", nprobe=4, k=10, adaptive=True,
+        pool_rebalance=True, n_slots=8, max_pending_mutations=256,
+        pool_rows_per_slot=64, pool_min_search=2, pool_min_mutation=1,
+        pool_interval=0.05, adaptive_patience=2,
+        window_min=0.005, window_max=0.5, flush_min=64,
+        flush_max=FLUSH_MAX, rate_tau=0.3, adaptive_interval=0.02,
+        max_search_batch=MAX_SEARCH_BATCH, auto_compact=False,
+    )
+    rt = _make_runtime(cfg)
+    try:
+        rng = np.random.default_rng(11)
+        _warmup_bounded_gate(rt, cfg, rng)
+        initial = rt.stats()["pool"]["search_slots"]
+        # phase 1: saturate the search slots, starve the mutation gate
+        _drive_cell(rt, 0.9 * CAP_SEARCH_QPS, 32.0, phase_s, rng)
+        p1 = rt.stats()["pool"]
+        # phase 2: searches go quiet, mutations flood the (shrunken) gate
+        _drive_cell(rt, 5.0, 2000.0, phase_s, rng)
+        p2 = rt.stats()["pool"]
+        moves = p2["moves"]
+        rebalances = [
+            e for e in rt.events() if e.name == EV_POOL_REBALANCE
+        ]
+    finally:
+        rt.stop()
+    report = {
+        "initial_search_slots": initial,
+        "after_search_phase": p1,
+        "after_mutation_phase": p2,
+        "rebalance_events": len(rebalances),
+        "phase_seconds": phase_s,
+    }
+    assert p1["search_slots"] > initial, (
+        f"search phase never grew the search share: {report}"
+    )
+    assert p2["search_slots"] < p1["search_slots"], (
+        f"mutation phase never took slots back: {report}"
+    )
+    assert moves > 0 and len(rebalances) == moves, (
+        f"flight recorder disagrees with the pool: {moves} moves vs "
+        f"{len(rebalances)} pool.rebalance events: {report}"
+    )
     return report
 
 
@@ -435,6 +542,14 @@ def main(fast: bool = True) -> dict:
         f"\n# adaptive p99 growth {rep['adaptive_p99_growth']}x over "
         f"{rep['load_growth']:.0f}x load; compiled steps "
         f"{rep['compiled_steps']}; all morphology assertions passed"
+    )
+    rb = out["rebalancer"]
+    print(
+        f"# rebalancer: search slots "
+        f"{rb['initial_search_slots']} -> "
+        f"{rb['after_search_phase']['search_slots']} (search phase) -> "
+        f"{rb['after_mutation_phase']['search_slots']} (mutation phase), "
+        f"{rb['rebalance_events']} moves, all recorded"
     )
     print(f"# wrote {path}")
     return out

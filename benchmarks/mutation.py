@@ -33,7 +33,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timed
+try:
+    from benchmarks.common import provenance, timed
+except ImportError:  # run as `python benchmarks/mutation.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance, timed
 from benchmarks.scan_paths import MAX_GRID_STEPS, grid_steps
 from repro.core import build_ivf
 from repro.core.block_pool import pool_stats
@@ -247,7 +252,16 @@ def main():
               f"{r['recall_at_10_post_compaction']},"
               f"{r['recall_at_10_rebuilt']},{r['search_us_scan_path']}")
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_mutation.json"
-    out.write_text(json.dumps({"meta": META, "rows": rows}, indent=1))
+    out.write_text(json.dumps({
+        "provenance": provenance(
+            "mutation",
+            geometry={"dim": DIM, "corpus": N0, "n_clusters": N_CLUSTERS,
+                      "block_size": BLOCK, "nprobe": NPROBE, "k": K},
+            samples={"rows": len(rows), "rounds": ROUNDS,
+                     "queries": Q},
+        ),
+        "meta": META, "rows": rows,
+    }, indent=1))
     print(f"wrote {out}")
 
 

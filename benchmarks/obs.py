@@ -1,0 +1,197 @@
+"""Observability benchmark: the traced latency decomposition and the
+tracing overhead budget, asserted in-script.
+
+Two claims back the obs subsystem (``src/repro/obs``; ISSUE 10):
+
+* **Decomposition is ground truth** — drive one moderate mixed-load cell
+  with ``trace_sample_rate=1.0`` and reconstruct each lane's end-to-end
+  latency from its per-stage spans (admission -> queue -> batch_form ->
+  compile|execute -> device_wait -> ack).  The span sums must match the
+  independently-measured e2e latency (future-resolution stopwatch, the
+  loadgen ``_Recorder``) within 5% at p50 and p99 — the repo's first
+  per-stage latency *budget* rather than a single opaque number.
+* **Tracing is cheap** — the same cell at the default sample rate
+  (``RuntimeConfig().trace_sample_rate``) versus tracing disabled
+  (``0.0``) must cost < 5% extra search p50.
+
+Dispatch costs are pinned with ``FaultPlan`` delays exactly as in
+benchmarks/loadgen.py, so both checks are structural, not host-lottery.
+Writes ``BENCH_obs.json`` at the repo root when run as a script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+try:
+    from benchmarks.common import provenance
+except ImportError:  # run as `python benchmarks/obs.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance
+
+from benchmarks.loadgen import (
+    CAP_MUT_ROWS,
+    CAP_SEARCH_QPS,
+    DIM,
+    FLUSH_MAX,
+    MAX_SEARCH_BATCH,
+    N0,
+    N_CLUSTERS,
+    _drive_cell,
+    _make_runtime,
+    _warmup,
+)
+from repro.core.runtime import RuntimeConfig
+from repro.obs.trace import OUTCOME_OK, decompose
+
+# the moderate cell: far from saturation so queueing noise stays small,
+# busy enough that batches form (spans exercise every stage)
+FRAC_SEARCH = 0.4
+FRAC_MUT = 0.15
+TOLERANCE = 0.05  # span-sum vs measured e2e, p50 and p99
+OVERHEAD_BUDGET = 0.05  # default-rate tracing vs disabled, search p50
+
+
+def _cfg(sample_rate: float) -> RuntimeConfig:
+    return RuntimeConfig(
+        mode="parallel", nprobe=4, k=10, n_slots=32,
+        max_search_batch=MAX_SEARCH_BATCH, auto_compact=True,
+        compact_passes=2, adaptive=True, window_min=0.005, window_max=1.0,
+        flush_interval=1.0, flush_min=128, flush_max=FLUSH_MAX,
+        rate_tau=0.3, adaptive_interval=0.02, adaptive_patience=2,
+        pool_rebalance=False, trace_sample_rate=sample_rate,
+    )
+
+
+def _traced_cell(sample_rate: float, seconds: float, seed: int) -> dict:
+    """One driven cell; returns measured percentiles + the trace ring."""
+    rng = np.random.default_rng(seed)
+    rt = _make_runtime(_cfg(sample_rate))
+    try:
+        _warmup(rt, rt.cfg, rng)
+        rt.reset_stats()  # drop warmup samples AND warmup/compile traces
+        cell = _drive_cell(
+            rt, FRAC_SEARCH * CAP_SEARCH_QPS, FRAC_MUT * CAP_MUT_ROWS,
+            seconds, rng,
+        )
+        traces = rt.traces()
+    finally:
+        rt.stop()
+    return {"cell": cell, "traces": traces}
+
+
+def _lane_decomposition(traces, kinds, measured: dict,
+                        min_n: int = 100) -> dict:
+    """Decompose one lane's ok traces + compare against the recorder."""
+    lane = [
+        t for t in traces if t.kind in kinds and t.outcome == OUTCOME_OK
+    ]
+    d = decompose(lane)
+    out = {
+        "n_traces": d["n_ok"],
+        "stages_ms": {k: v["p50_ms"] for k, v in d["stages"].items()},
+        "span_sum": d["span_sum"],
+        "trace_e2e": d["e2e"],
+        "measured_e2e": measured,
+    }
+    assert d["n_ok"] >= min_n, f"thin sample ({d['n_ok']} traces): {out}"
+    for q in ("p50_ms", "p99_ms"):
+        span, e2e = d["span_sum"][q], measured[q]
+        rel = abs(span - e2e) / max(e2e, 1e-9)
+        out[f"rel_err_{q}"] = round(rel, 4)
+        assert rel <= TOLERANCE, (
+            f"{kinds}: span-sum {q} {span:.2f}ms vs measured e2e "
+            f"{e2e:.2f}ms ({rel:.1%} > {TOLERANCE:.0%}): {out}"
+        )
+    return out
+
+
+def run(fast: bool = True) -> dict:
+    seconds = 2.0 if fast else 5.0
+    # ---- claim 1: the per-stage decomposition sums to measured e2e ------
+    full = _traced_cell(1.0, seconds, seed=3)
+    decomp = {
+        "search": _lane_decomposition(
+            full["traces"], ("search",), full["cell"]["search"]
+        ),
+        "mutation": _lane_decomposition(
+            full["traces"], ("insert", "delete", "update"),
+            full["cell"]["mutation"], min_n=20,
+        ),
+    }
+    # ---- claim 2: default-rate tracing costs < 5% search p50 ------------
+    default_rate = RuntimeConfig().trace_sample_rate
+    off = _traced_cell(0.0, seconds, seed=5)["cell"]
+    on = _traced_cell(default_rate, seconds, seed=5)["cell"]
+    p50_off = off["search"]["p50_ms"]
+    p50_on = on["search"]["p50_ms"]
+    overhead = (p50_on - p50_off) / max(p50_off, 1e-9)
+    assert overhead < OVERHEAD_BUDGET, (
+        f"default-rate tracing added {overhead:.1%} search p50 "
+        f"({p50_off:.2f}ms -> {p50_on:.2f}ms; budget {OVERHEAD_BUDGET:.0%})"
+    )
+    n_search = decomp["search"]["n_traces"]
+    n_mut = decomp["mutation"]["n_traces"]
+    return {
+        "provenance": provenance(
+            "obs", fast=fast,
+            geometry={"dim": DIM, "corpus": N0, "n_clusters": N_CLUSTERS,
+                      "max_search_batch": MAX_SEARCH_BATCH,
+                      "flush_max": FLUSH_MAX},
+            samples={"traces_search": n_search, "traces_mutation": n_mut,
+                     "overhead_search_n": on["search"]["n"]},
+        ),
+        "meta": {
+            "cell_seconds": seconds, "fast": fast,
+            "frac_search": FRAC_SEARCH, "frac_mutation": FRAC_MUT,
+            "tolerance": TOLERANCE, "overhead_budget": OVERHEAD_BUDGET,
+            "default_sample_rate": default_rate,
+        },
+        "decomposition": decomp,
+        "overhead": {
+            "sample_rate": default_rate,
+            "search_p50_ms_disabled": p50_off,
+            "search_p50_ms_default": p50_on,
+            "relative": round(overhead, 4),
+        },
+    }
+
+
+def main(fast: bool = True) -> dict:
+    out = run(fast)
+    for lane in ("search", "mutation"):
+        d = out["decomposition"][lane]
+        stages = " ".join(
+            f"{k}={v:.2f}" for k, v in d["stages_ms"].items()
+        )
+        print(f"{lane}: n={d['n_traces']} p50 stage-ms {stages}")
+        print(
+            f"{lane}: span-sum p50 {d['span_sum']['p50_ms']:.2f}ms vs "
+            f"measured {d['measured_e2e']['p50_ms']:.2f}ms "
+            f"(err {d['rel_err_p50_ms']:.1%}); p99 "
+            f"{d['span_sum']['p99_ms']:.2f} vs "
+            f"{d['measured_e2e']['p99_ms']:.2f} "
+            f"(err {d['rel_err_p99_ms']:.1%})"
+        )
+    ov = out["overhead"]
+    print(
+        f"overhead @ rate {ov['sample_rate']}: search p50 "
+        f"{ov['search_p50_ms_disabled']:.2f}ms -> "
+        f"{ov['search_p50_ms_default']:.2f}ms ({ov['relative']:+.1%})"
+    )
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_obs.json"
+    path.write_text(json.dumps(out, indent=1))
+    print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    main(fast=args.fast)

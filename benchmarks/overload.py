@@ -35,6 +35,13 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks.common import provenance
+except ImportError:  # run as `python benchmarks/overload.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance
+
 from repro.core import build_ivf
 from repro.core.admission import RequestRejected
 from repro.core.faults import FaultPlan
@@ -239,7 +246,15 @@ def main():
     out = pathlib.Path(__file__).resolve().parent.parent / \
         "BENCH_overload.json"
     out.write_text(json.dumps(
-        {"meta": META,
+        {"provenance": provenance(
+            "overload",
+            geometry={"dim": DIM, "corpus": N0, "n_clusters": N_CLUSTERS,
+                      "batch_rows": BATCH_ROWS},
+            samples={"runs": 2,
+                     "pending_samples": len(unprot["pending_rows_samples"]),
+                     "drive_seconds": DRIVE_S},
+         ),
+         "meta": META,
          "rows": [unprot, prot],
          "ladder": ladder},
         indent=1,

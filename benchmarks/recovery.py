@@ -36,6 +36,13 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks.common import provenance
+except ImportError:  # run as `python benchmarks/recovery.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance
+
 from repro.core import build_ivf
 from repro.core.block_pool import NULL
 from repro.core.runtime import RuntimeConfig, ServingRuntime
@@ -252,6 +259,13 @@ def main():
     print(f"rpo,acked_rows_lost,{result['rpo_rto']['rpo_acked_rows_lost']}")
     print(f"rto,seconds,{t_rto:.3f}")
     print(f"parity,top{K}_overlap,{parity:.4f}")
+    result["provenance"] = provenance(
+        "recovery",
+        geometry={"dim": DIM, "corpus": N0, "n_clusters": N_CLUSTERS,
+                  "batch_rows": BATCH_ROWS},
+        samples={"acked_batches": N_BATCHES, "snap_every": SNAP_EVERY,
+                 "parity_queries": Q},
+    )
     out = pathlib.Path(__file__).resolve().parent.parent / \
         "BENCH_recovery.json"
     out.write_text(json.dumps(result, indent=1))

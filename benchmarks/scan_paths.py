@@ -55,7 +55,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timed
+try:
+    from benchmarks.common import provenance, timed
+except ImportError:  # run as `python benchmarks/scan_paths.py`
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import provenance, timed
 from repro.core import build_ivf
 from repro.core import pq as pqmod
 from repro.core.metrics import recall_at_k
@@ -558,7 +563,15 @@ def main():
               f"{r.get('payload_bytes_moved')},"
               f"{r.get('prologue_bytes_moved')}")
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scan_paths.json"
-    out.write_text(json.dumps({"meta": META, "rows": rows}, indent=2) + "\n")
+    out.write_text(json.dumps({
+        "provenance": provenance(
+            "scan_paths",
+            geometry={"dim": 128, "n_clusters": 64,
+                      "max_grid_steps": MAX_GRID_STEPS},
+            samples={"rows": len(rows), "iters_per_row": 3},
+        ),
+        "meta": META, "rows": rows,
+    }, indent=2) + "\n")
     print(f"wrote {out}")
     return rows
 

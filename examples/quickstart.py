@@ -125,6 +125,13 @@ def main():
     # crash-consistent online cuts, and ServingRuntime.recover() replays
     # + verifies before serving — or refuses with RecoveryError.
     # Runbook and RPO/RTO table: docs/serving_ops.md "Durability".
+    #
+    # The runtime is observable end to end: sampled per-request span
+    # traces (RuntimeConfig.trace_sample_rate), a structured event
+    # flight recorder for control-plane transitions, Prometheus text /
+    # Perfetto trace exporters (rt.prometheus_text(),
+    # rt.export_perfetto()), and post-mortem debug bundles on recovery
+    # failure, lane death, and shutdown.  Runbook: docs/observability.md.
 
     # ---- static analysis ------------------------------------------------
     # Before shipping changes to kernels or the serving layer, run

@@ -4,6 +4,7 @@ catalog in docs/static_analysis.md)."""
 
 from repro.analysis.rules import (
     counters,
+    event_names,
     guarded_by,
     jit_cache_keys,
     nondeterminism,
@@ -16,4 +17,5 @@ ALL_RULES = (
     jit_cache_keys.check,
     nondeterminism.check,
     persist_format.check,
+    event_names.check,
 )

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -146,6 +146,13 @@ class AdmissionGate:
             if not self.max_pending:
                 return 0.0
             return min(1.0, peak / self.max_pending)
+
+    def reset_peak(self) -> None:
+        """Re-arm the high-watermark to the current pending level without
+        consuming it (``reset_stats`` between benchmark phases — the next
+        rebalance reads this phase's pressure, not a stale burst's)."""
+        with self._cond:
+            self._peak = self._pending
 
 
 # --------------------------------------------------------------- pool ----
@@ -272,7 +279,8 @@ class DegradationLadder:
     """
 
     def __init__(self, rungs: Sequence[str] = (), high_s: float = 0.05,
-                 low_s: float = 0.01, patience: int = 3):
+                 low_s: float = 0.01, patience: int = 3,
+                 on_transition: Optional[Callable] = None):
         unknown = set(rungs) - set(LADDER_RUNGS)
         if unknown:
             raise ValueError(
@@ -292,6 +300,11 @@ class DegradationLadder:
         self._cool = 0  # guarded-by: _lock
         # rung changes (both directions)
         self.transitions = 0  # guarded-by: _lock
+        # called AFTER the ladder lock drops on every rung change, with
+        # (level, rung, direction) — the runtime points this at its
+        # flight recorder (repro.obs.events); must not call back into
+        # the ladder
+        self._on_transition = on_transition
 
     @property
     def level(self) -> int:
@@ -317,6 +330,7 @@ class DegradationLadder:
     def observe(self, queue_age_s: float) -> int:
         """Feed one dispatch's queue-age watermark; returns the level to
         serve this dispatch at."""
+        direction = None
         with self._lock:
             if len(self.rungs) == 1:
                 return 0
@@ -328,6 +342,7 @@ class DegradationLadder:
                     self._level += 1
                     self._hot = 0
                     self.transitions += 1
+                    direction = "down"
             elif queue_age_s < self.low_s:
                 self._cool += 1
                 self._hot = 0
@@ -335,10 +350,15 @@ class DegradationLadder:
                     self._level -= 1
                     self._cool = 0
                     self.transitions += 1
+                    direction = "up"
             else:
                 self._hot = 0
                 self._cool = 0
-            return self._level
+            level = self._level
+            rung = self.rungs[level]
+        if direction is not None and self._on_transition is not None:
+            self._on_transition(level, rung, direction)
+        return level
 
     def apply(self, nprobe: int, rerank: bool, budget: int,
               level: Optional[int] = None) -> tuple[int, bool, int]:

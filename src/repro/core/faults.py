@@ -63,7 +63,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Iterable, Optional
+from typing import Callable, Iterable, Optional
 
 #: Every site the runtime and durability layer actually check.  Adding a
 #: ``plan.check("new_site")`` call site means adding it here (and to the
@@ -103,6 +103,11 @@ class FaultPlan:
         # escape hatch for test-private sites (a harness checking its own
         # plan); immutable after construction so validation stays simple
         self._extra_sites = frozenset(extra_sites)
+        # called once per *triggered* rule, outside the plan lock, with
+        # (site, action, call_index) — the runtime points this at its
+        # flight recorder so injected faults land next to the transitions
+        # they caused.  Per-plan, never set on the shared NO_FAULTS.
+        self._observer: Optional[Callable] = None
 
     # -------------------------------------------------------- authoring --
     @staticmethod
@@ -145,6 +150,13 @@ class FaultPlan:
             )
         return self
 
+    def set_observer(self, observer: Optional[Callable]) -> None:
+        """Install the triggered-rule callback (see ``__init__``).  The
+        runtime refuses to install one on the shared :data:`NO_FAULTS`
+        instance — a global default must never carry per-runtime state."""
+        with self._lock:
+            self._observer = observer
+
     # --------------------------------------------------------- runtime ---
     def check(self, site: str) -> None:
         """Runtime hook: count the call, apply matching rules (delays
@@ -156,6 +168,10 @@ class FaultPlan:
                 return
             hits = [r for r in self._rules
                     if r.site == site and r.matches(i)]
+            observer = self._observer
+        if observer is not None:
+            for r in hits:
+                observer(site, r.action, i)
         for r in hits:
             if r.action == "delay":
                 time.sleep(r.delay_s)

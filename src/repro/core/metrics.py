@@ -147,6 +147,20 @@ class ArrivalEstimator:
         with self._lock:
             return self._service if self._service is not None else default
 
+    def reset(self) -> None:
+        """Forget every learned signal (rate, queue age, service EWMA,
+        lifetime arrivals).  ``ServingRuntime.reset_stats()`` calls this
+        between benchmark phases so one cell's learned load cannot bleed
+        into the next cell's controller decisions; the first few
+        post-reset dispatches re-learn service (EWMA seeds on the first
+        sample)."""
+        with self._lock:
+            self._weight = 0.0
+            self._t_last = None
+            self._age = 0.0
+            self._service = None
+            self._events = 0
+
     def snapshot(self, now: Optional[float] = None) -> dict:
         """One consistent read of every signal (for ``stats()``)."""
         now = time.perf_counter() if now is None else now

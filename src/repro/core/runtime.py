@@ -96,6 +96,37 @@ from repro.core.metrics import (
 from repro.core.mutate import apply_delete, last_occurrence_mask
 from repro.core import pq as pqmod
 from repro.core.search import resolve_search_impl
+from repro.obs import bundle as obs_bundle
+from repro.obs import export as obs_export
+from repro.obs.events import (
+    EV_COMPACTION,
+    EV_COMPACTION_DEFERRED,
+    EV_EFFORT,
+    EV_FAULT_INJECTED,
+    EV_LADDER_STEP,
+    EV_LANE_DEAD,
+    EV_POOL_REBALANCE,
+    EV_SNAPSHOT_CUT,
+    EV_SNAPSHOT_FAILED,
+    EV_SNAPSHOT_PUBLISH,
+    EV_WINDOW_RUNG,
+    EV_WORKER_RESTART,
+    FlightRecorder,
+)
+from repro.obs.trace import (
+    OUTCOME_ERROR,
+    OUTCOME_OK,
+    OUTCOME_REJECTED,
+    OUTCOME_SHED,
+    STAGE_ACK,
+    STAGE_ADMISSION,
+    STAGE_BATCH,
+    STAGE_COMPILE,
+    STAGE_DEVICE,
+    STAGE_EXECUTE,
+    STAGE_QUEUE,
+    RequestTracer,
+)
 from repro.persist import snapshot as snapmod
 from repro.persist.snapshot import (
     SNAP_SUBDIR,
@@ -118,6 +149,9 @@ class _Timed:
     rows: int = 0  # admission-gate rows held (mutation kinds only)
     released: bool = False  # gate budget already returned
     t_done: float = 0.0
+    # sampled span-trace context (repro.obs.trace), or None on the
+    # untraced fast path; owned by whichever thread holds the item
+    trace: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -220,6 +254,17 @@ class RuntimeConfig:
     pool_min_search: int = 2
     pool_min_mutation: int = 1
     pool_interval: float = 0.25
+    # ---- observability (repro.obs; docs/observability.md) ---------------
+    # fraction of submits that carry a span-trace context through the
+    # serving path (deterministic stride sampling).  0 disables tracing
+    # entirely (one None-check per submit); 1.0 traces every request.
+    # Default 1% keeps steady-state overhead < 5% p50 (BENCH_obs.json).
+    trace_sample_rate: float = 0.01
+    trace_buffer: int = 2048  # finished traces kept (ring, oldest evicted)
+    event_buffer: int = 2048  # flight-recorder events kept (ring)
+    # where debug bundles land on lane death / shutdown / RecoveryError;
+    # None falls back to persist_dir; both None = no bundles written
+    debug_bundle_dir: Optional[str] = None
 
 
 class AdaptiveSlots:
@@ -278,6 +323,21 @@ class AdaptiveSlots:
             peak, self._peak = self._peak, self._busy
             return min(1.0, peak / self._capacity)
 
+    def reset_peak(self) -> None:
+        """Re-arm the high-watermark to the current occupancy without
+        consuming it (``reset_stats`` between benchmark phases: the next
+        rebalance decision must see this phase's peak, not the last)."""
+        with self._lock:
+            self._peak = self._busy
+
+    def snapshot(self) -> dict:
+        """Capacity and occupancy as ONE consistent read.  ``stats()``
+        used to read the two properties back-to-back — two separate lock
+        acquisitions, between which a release could land and report
+        ``in_flight > capacity`` mid-shrink."""
+        with self._lock:
+            return {"capacity": self._capacity, "in_flight": self._busy}
+
 
 class AdaptiveController:
     """Arrival-rate-driven batch/budget control loop (the *Adaptive* in
@@ -322,9 +382,13 @@ class AdaptiveController:
     effort, compact-whenever-triggered.
     """
 
-    def __init__(self, cfg: "RuntimeConfig"):
+    def __init__(self, cfg: "RuntimeConfig",
+                 recorder: Optional[FlightRecorder] = None):
         self.cfg = cfg
         self.enabled = cfg.adaptive
+        # flight recorder for rung/effort transition events; emissions
+        # happen after the controller lock drops (recorder lock is a leaf)
+        self._recorder = recorder
         self.search = ArrivalEstimator(cfg.rate_tau)
         self.mutation = ArrivalEstimator(cfg.rate_tau)
         w_max = (cfg.window_max if cfg.window_max is not None
@@ -366,6 +430,18 @@ class AdaptiveController:
         svc = self.search.service(0.0)
         m_svc = self.mutation.service(0.0)
         q_age = self.mutation.queue_age()
+        # transition events collected under the lock, emitted after it in
+        # the finally (the early returns below must not swallow them)
+        fired: list = []
+        try:
+            self._update_locked(now, rho, svc, m_svc, q_age, fired)
+        finally:
+            if self._recorder is not None:
+                for name, fields in fired:
+                    self._recorder.record_event(name, **fields)
+
+    def _update_locked(self, now: float, rho: float, svc: float,
+                       m_svc: float, q_age: float, fired: list) -> None:
         with self._lock:
             if now - self._t_update < self.cfg.adaptive_interval:
                 return
@@ -405,10 +481,20 @@ class AdaptiveController:
                 self._level += 1
                 self._hot = 0
                 self.window_changes += 1
+                fired.append((EV_WINDOW_RUNG, {
+                    "level": self._level, "direction": "up",
+                    "window_s": self.window_rungs[self._level],
+                    "load_factor": rho,
+                }))
             elif self._cool >= self.cfg.adaptive_patience:
                 self._level -= 1
                 self._cool = 0
                 self.window_changes += 1
+                fired.append((EV_WINDOW_RUNG, {
+                    "level": self._level, "direction": "down",
+                    "window_s": self.window_rungs[self._level],
+                    "load_factor": rho,
+                }))
             if not self._slo:
                 return
             if svc > 0.5 * self._slo and self._effort < self.cfg.max_effort:
@@ -423,10 +509,18 @@ class AdaptiveController:
                 self._effort += 1
                 self._eff_hot = 0
                 self.effort_changes += 1
+                fired.append((EV_EFFORT, {
+                    "level": self._effort, "direction": "down",
+                    "search_service_s": svc,
+                }))
             elif self._eff_cool >= self.cfg.adaptive_patience:
                 self._effort -= 1
                 self._eff_cool = 0
                 self.effort_changes += 1
+                fired.append((EV_EFFORT, {
+                    "level": self._effort, "direction": "up",
+                    "search_service_s": svc,
+                }))
 
     def window(self, now: Optional[float] = None) -> float:
         """Current batch window (seconds) for the mutation lane."""
@@ -539,16 +633,35 @@ class ServingRuntime:
         self._accepting = True  # guarded-by: _submit_lock
         self._drained = False  # guarded-by: _submit_lock
         self._lane_dead: Optional[str] = None  # guarded-by: _submit_lock
+        # ---- observability (repro.obs; docs/observability.md) -----------
+        # flight recorder first: every control-plane subsystem below hooks
+        # its transitions into it.  Its lock is a leaf — record_event is
+        # safe to call from inside any other component's critical section.
+        self._events = FlightRecorder(cfg.event_buffer)
+        self._tracer = RequestTracer(cfg.trace_sample_rate, cfg.trace_buffer)
+        if self._faults is not NO_FAULTS:
+            # never mutate the shared no-op default: an observer on it
+            # would leak one runtime's events into every other runtime
+            self._faults.set_observer(
+                lambda site, action, i: self._events.record_event(
+                    EV_FAULT_INJECTED, site=site, action=action, call=i
+                )
+            )
         self._gate = AdmissionGate(
             cfg.max_pending_mutations, cfg.admission, cfg.admission_timeout
         )
         self._ladder = DegradationLadder(
             cfg.degradation_ladder, cfg.overload_high, cfg.overload_low,
             cfg.overload_patience,
+            on_transition=lambda level, rung, direction:
+                self._events.record_event(
+                    EV_LADDER_STEP, level=level, rung=rung,
+                    direction=direction,
+                ),
         )
         # adaptive control loop: a no-op pass-through when cfg.adaptive is
         # off (window()/flush_rows() return the static schedule)
-        self._controller = AdaptiveController(cfg)
+        self._controller = AdaptiveController(cfg, recorder=self._events)
         # dynamic resource pool: only meaningful with a bounded mutation
         # lane — without max_pending_mutations there is no mutation-side
         # budget for a slot to buy
@@ -652,6 +765,7 @@ class ServingRuntime:
                 # LSN floor = the snapshot fence: a log whose segments were
                 # all pruned must not restart numbering under the fence
                 start_lsn=latest or 0,
+                recorder=self._events,
             )
             # cold start: 0.  After `recover`: the adopted log's last LSN —
             # the installed state already includes every replayed record.
@@ -840,15 +954,22 @@ class ServingRuntime:
         # offered load is the control signal: count every arrival, rejected
         # or not, before the admission decision
         self._controller.search.observe_arrival(1)
+        trace = self._tracer.start("search")
         with self._submit_lock:
             self._check_accepting()
             if not self._slots.acquire(blocking=False):
                 self._counters.inc("rejected_search")
+                if trace is not None:
+                    trace.stamp(STAGE_ADMISSION)
+                    self._tracer.finish(trace, OUTCOME_REJECTED)
                 raise RequestRejected("resource pool exhausted")
             fut = Future()
+            t_arr = time.perf_counter()
+            if trace is not None:
+                trace.stamp(STAGE_ADMISSION, t_arr)
             self._search_q.put(_Timed(
-                fut, time.perf_counter(), queries, kind="search",
-                deadline=self._abs_deadline(deadline),
+                fut, t_arr, queries, kind="search",
+                deadline=self._abs_deadline(deadline), trace=trace,
             ))
         return fut
 
@@ -859,19 +980,27 @@ class ServingRuntime:
         self._check_accepting()
         # offered rows/s, counted before admission (see submit_search)
         self._controller.mutation.observe_arrival(rows)
+        trace = self._tracer.start(kind)
         try:
             self._faults.check("admission")
             self._gate.acquire(rows)
         except QueueFull:
             self._counters.inc("rejected_mutation")
+            if trace is not None:
+                trace.stamp(STAGE_ADMISSION)
+                self._tracer.finish(trace, OUTCOME_REJECTED)
             raise
         try:
             with self._submit_lock:
                 self._check_accepting()
                 fut = Future()
+                t_arr = time.perf_counter()
+                if trace is not None:
+                    trace.stamp(STAGE_ADMISSION, t_arr)
                 self._insert_q.put(_Timed(
-                    fut, time.perf_counter(), payload, kind=kind,
+                    fut, t_arr, payload, kind=kind,
                     deadline=self._abs_deadline(deadline), rows=rows,
+                    trace=trace,
                 ))
             return fut
         except BaseException:
@@ -953,6 +1082,7 @@ class ServingRuntime:
             # granularity (a post-cut record in the sealed segment just
             # keeps it alive)
             self._wal.rotate()
+        self._events.record_event(EV_SNAPSHOT_CUT, lsn=lsn, next_id=next_id)
         books = (
             None if self.index.pq is None
             else np.asarray(self.index.pq.codebooks)
@@ -970,11 +1100,15 @@ class ServingRuntime:
                         self._snapshot_lsn = max(self._snapshot_lsn, lsn)
                     self._wal.prune(lsn)
                 self._counters.inc("snapshots")
+                self._events.record_event(EV_SNAPSHOT_PUBLISH, lsn=lsn)
             except Exception as e:
                 log.exception(
                     "snapshot publish @ lsn %d failed; WAL retained", lsn
                 )
                 self._counters.inc("snapshot_failures")
+                self._events.record_event(
+                    EV_SNAPSHOT_FAILED, lsn=lsn, error=repr(e)
+                )
                 box["exc"] = e
 
         t = threading.Thread(
@@ -1006,10 +1140,32 @@ class ServingRuntime:
         instead of serving anything it cannot prove.  The recovery report
         is attached as ``runtime.recovery_report``."""
         # runtime<->recovery would be a module-level import cycle
-        from repro.persist.recovery import recover_index
-        index, report = recover_index(
-            index_cfg, persist_dir, faults=faults, sample=sample
-        )
+        from repro.persist.recovery import RecoveryError, recover_index
+        try:
+            index, report = recover_index(
+                index_cfg, persist_dir, faults=faults, sample=sample
+            )
+        except RecoveryError as e:
+            # first responder's crash dump: what recovery had established
+            # before it refused to serve (docs/observability.md)
+            try:
+                bundle_dir = (
+                    cfg.debug_bundle_dir if cfg is not None else None
+                ) or persist_dir
+                partial = getattr(e, "report", None)
+                obs_bundle.write_debug_bundle(
+                    bundle_dir, reason="recovery-error",
+                    extra={
+                        "error": str(e),
+                        "report": (
+                            partial.as_dict() if partial is not None else None
+                        ),
+                        "persist_dir": persist_dir,
+                    },
+                )
+            except Exception:
+                log.exception("debug bundle for recovery failure not written")
+            raise
         run_cfg = dataclasses.replace(
             cfg if cfg is not None else RuntimeConfig(),
             persist_dir=persist_dir,
@@ -1044,6 +1200,9 @@ class ServingRuntime:
             self._drained = True
         self._drain_on_stop(drain)
         self._finish_persist(timeout)
+        # final-state capture for post-mortems; a bundle failure must not
+        # mask a clean shutdown (dump_debug_bundle swallows + logs)
+        self.dump_debug_bundle("shutdown")
 
     def _finish_persist(self, timeout: float):
         """Shutdown tail of the durability layer: let an in-flight
@@ -1097,16 +1256,30 @@ class ServingRuntime:
                 break
             if not it.future.done():
                 it.future.set_exception(exc)
+            if it.trace is not None:
+                self._tracer.finish(it.trace, OUTCOME_ERROR)
             self._slots.release()
 
     def reset_stats(self):
-        """Zero the latency windows and counters (ladder level and pool
-        gauges are live state, not samples, and are left alone)."""
+        """Zero every *sampled* statistic: latency windows, counters, the
+        adaptive controller's learned arrival/service estimators, the
+        peak-utilization watermarks, and the trace ring (a sampling window
+        over requests).  Live state — ladder level, pool slot assignment,
+        controller rung — is left alone, as is the flight recorder: its
+        history of transitions is the point, and post-reset readers still
+        want to know what happened before the benchmark phase began."""
         with self._lat_lock:
             self._search_lat.clear()
             self._insert_lat.clear()
             self._mutation_lat.clear()
         self._counters.reset()
+        # adaptive/pool sampled state (missed before the obs PR): learned
+        # load from one benchmark cell must not steer the next cell
+        self._controller.search.reset()
+        self._controller.mutation.reset()
+        self._slots.reset_peak()
+        self._gate.reset_peak()
+        self._tracer.ring.clear()
 
     def stats(self, timeout_ms: float = 20.0):
         with self._lat_lock:
@@ -1151,9 +1324,12 @@ class ServingRuntime:
                 "insert": percentile_summary(insert),
                 "mutation": percentile_summary(mutation),
             },
-            "search_slots": self._slots.capacity,
-            "search_in_flight": self._slots.in_flight,
         }
+        # one locked read: the separate capacity/in_flight property reads
+        # could interleave with a rebalance and report in_flight > capacity
+        slots = self._slots.snapshot()
+        out["search_slots"] = slots["capacity"]
+        out["search_in_flight"] = slots["in_flight"]
         if self.cfg.adaptive:
             out["adaptive"] = self._controller.snapshot()
             out["compactions_deferred"] = c.get("compactions_deferred", 0)
@@ -1162,8 +1338,11 @@ class ServingRuntime:
         # durability gauges: the LSN contract (docs/serving_ops.md) is
         # snapshot_lsn <= applied_lsn <= wal_lsn, durable_lsn <= wal_lsn
         if self._wal is not None:
-            out["wal_lsn"] = self._wal.last_lsn
-            out["wal_durable_lsn"] = self._wal.durable_lsn
+            # lsns() is one locked read; two property reads can interleave
+            # with an append+fsync and report durable_lsn > wal_lsn
+            last, durable = self._wal.lsns()
+            out["wal_lsn"] = last
+            out["wal_durable_lsn"] = durable
             with self._snap_lock:
                 out["snapshot_lsn"] = self._snapshot_lsn
             out["snapshots"] = c.get("snapshots", 0)
@@ -1174,6 +1353,57 @@ class ServingRuntime:
                 out["applied_lsn"] = self._applied_lsn
             out.update(pool_stats(self.index.state, self.pool_cfg))
         return out
+
+    # ---------------------------------------------------- observability --
+    def traces(self) -> list:
+        """Sampled request traces, oldest first (``repro.obs.trace``)."""
+        return self._tracer.ring.snapshot()
+
+    def events(self) -> list:
+        """Flight-recorder events, oldest first (``repro.obs.events``)."""
+        return self._events.snapshot()
+
+    def metrics(self) -> dict:
+        """``stats()`` flattened to ``{dotted_name: float}`` — the unified
+        registry behind both exporters."""
+        return obs_export.flatten_metrics(self.stats())
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics`."""
+        return obs_export.prometheus_text(self.metrics())
+
+    def export_perfetto(self) -> dict:
+        """Chrome/Perfetto ``trace_event`` envelope over the sampled
+        traces plus flight-recorder instants (load into ui.perfetto.dev)."""
+        return obs_export.perfetto_trace(self.traces(), self.events())
+
+    def dump_debug_bundle(self, reason: str,
+                          directory: Optional[str] = None) -> Optional[str]:
+        """Write a post-mortem bundle (flight recorder + stats + config)
+        to ``directory`` or ``cfg.debug_bundle_dir`` or
+        ``cfg.persist_dir``; returns the path, or ``None`` when no
+        destination is configured.  Never raises: called from shutdown and
+        failure paths, where a bundle error must not mask the real one."""
+        target = directory or self.cfg.debug_bundle_dir or \
+            self.cfg.persist_dir
+        if target is None:
+            return None
+        try:
+            stats = {
+                k: v.as_dict() if hasattr(v, "as_dict") else v
+                for k, v in self.stats().items()
+            }
+        except Exception:  # a wedged runtime still deserves its bundle
+            log.exception("stats() failed during debug bundle; omitting")
+            stats = None
+        try:
+            return obs_bundle.write_debug_bundle(
+                target, reason=reason, config=dataclasses.asdict(self.cfg),
+                stats=stats, events=self.events(), traces=self.traces(),
+            )
+        except Exception:
+            log.exception("debug bundle %r not written", reason)
+            return None
 
     # --------------------------------------------------------- workers ---
     def _supervised(self, body, name: str):
@@ -1204,8 +1434,15 @@ class ServingRuntime:
                         # never reports a plain "stopped" for a dead lane
                         self._lane_dead = name
                         self._accepting = False
+                    self._events.record_event(
+                        EV_LANE_DEAD, lane=name, restarts=restarts - 1
+                    )
                     self._fail_lane_queue(name)
+                    self.dump_debug_bundle(f"lane-death-{name}")
                     return
+                self._events.record_event(
+                    EV_WORKER_RESTART, lane=name, restarts=restarts
+                )
                 time.sleep(min(
                     self.cfg.restart_backoff * (2 ** (restarts - 1)), 1.0
                 ))
@@ -1238,7 +1475,19 @@ class ServingRuntime:
                     break
                 if not it.future.done():
                     it.future.set_exception(exc)
+                if it.trace is not None:
+                    self._tracer.finish(it.trace, OUTCOME_ERROR)
                 self._slots.release()
+
+    @staticmethod
+    def _stamp(items: list[_Timed], stage: str,
+               t: Optional[float] = None) -> None:
+        """Stamp one span boundary on every sampled trace in a batch —
+        unsampled items (``trace is None``, the overwhelming default) cost
+        exactly this None check."""
+        for it in items:
+            if it.trace is not None:
+                it.trace.stamp(stage, t)
 
     @staticmethod
     def _n_rows(it: _Timed) -> int:
@@ -1263,6 +1512,8 @@ class ServingRuntime:
         for it in items:
             if not it.future.done():
                 it.future.set_exception(exc)
+            if it.trace is not None:
+                self._tracer.finish(it.trace, OUTCOME_ERROR)
             self._release_gate(it)
 
     def _shed_expired(self, items: list[_Timed], lane: str) -> list[_Timed]:
@@ -1280,6 +1531,8 @@ class ServingRuntime:
                         f"({now - it.t_arrival:.3f}s old)"
                     ))
                 self._counters.inc(f"shed_{lane}")
+                if it.trace is not None:
+                    self._tracer.finish(it.trace, OUTCOME_SHED)
                 if lane == "search":
                     self._slots.release()
                 else:
@@ -1315,6 +1568,8 @@ class ServingRuntime:
                 item = self._insert_q.get(timeout=min(timeout, 0.01))
             except queue.Empty:
                 continue
+            if item.trace is not None:
+                item.trace.stamp(STAGE_QUEUE)
             items.append(item)
             pending_rows += self._n_rows(item)
             if pending_rows >= self._controller.flush_rows():
@@ -1435,18 +1690,24 @@ class ServingRuntime:
         if self.cfg.adaptive:
             with self._state_lock:
                 st = self.index.state
-            if not self._controller.should_compact(
-                float(dead_fraction(st))
-            ):
+            dead = float(dead_fraction(st))
+            if not self._controller.should_compact(dead):
                 self._counters.inc("compactions_deferred")
+                self._events.record_event(
+                    EV_COMPACTION_DEFERRED, dead_frac=dead
+                )
                 return
+        passes = 0
         for _ in range(max(self.cfg.compact_passes, 0)):
             with self._state_lock:
                 self.index.state, triggered = fn(self.index.state)
                 self._budget = None  # compaction may shrink chains
             if not bool(triggered):
                 break
+            passes += 1
             self._counters.inc("compactions")
+        if passes:
+            self._events.record_event(EV_COMPACTION, passes=passes)
         self._controller.compacted()
 
     def _wal_append(self, kind: str, ids: np.ndarray,
@@ -1500,6 +1761,9 @@ class ServingRuntime:
                 # the measured seconds cover everything a dispatch costs
                 n_traced = self._traced(step)
                 t_svc = time.perf_counter()
+                # batch_form span ends here, BEFORE the fault site: an
+                # injected dispatch delay belongs to the dispatch stages
+                self._stamp(items, STAGE_BATCH, t_svc)
                 self._faults.check("mutation_step")
                 if _isolate:  # top-level dispatch: feed the controller
                     self._controller.mutation.observe_queue_age(
@@ -1513,11 +1777,17 @@ class ServingRuntime:
                     self.index.state = step(self.index.state, *args)
                     st = self.index.state
                     self._budget = None  # chains may have grown
+                # trace-count delta = this dispatch compiled, not executed
+                # from cache (PR 9's detection, reused for the span split)
+                compiled = self._traced(step) != n_traced
+                self._stamp(
+                    items, STAGE_COMPILE if compiled else STAGE_EXECUTE
+                )
                 jax.block_until_ready(st.cluster_len)
-                if self._traced(step) == n_traced:  # compile != service
-                    self._controller.mutation.observe_service(
-                        time.perf_counter() - t_svc
-                    )
+                t_dev = time.perf_counter()
+                self._stamp(items, STAGE_DEVICE, t_dev)
+                if not compiled:  # compile != service
+                    self._controller.mutation.observe_service(t_dev - t_svc)
                 if lsn is not None:
                     with self._state_lock:
                         self._applied_lsn = lsn
@@ -1573,6 +1843,9 @@ class ServingRuntime:
                 lat.append(t - it.t_arrival)
             if not it.future.done():
                 it.future.set_result(ids[off : off + n])
+            if it.trace is not None:
+                it.trace.stamp(STAGE_ACK)
+                self._tracer.finish(it.trace, OUTCOME_OK)
             self._release_gate(it)
             off += n
 
@@ -1619,14 +1892,20 @@ class ServingRuntime:
     def _collect_search_batch(self) -> list[_Timed]:
         items: list[_Timed] = []
         try:
-            items.append(self._search_q.get(timeout=0.005))
+            it = self._search_q.get(timeout=0.005)
         except queue.Empty:
             return items
+        if it.trace is not None:
+            it.trace.stamp(STAGE_QUEUE)
+        items.append(it)
         while len(items) < self.cfg.max_search_batch:
             try:
-                items.append(self._search_q.get_nowait())
+                it = self._search_q.get_nowait()
             except queue.Empty:
                 break
+            if it.trace is not None:
+                it.trace.stamp(STAGE_QUEUE)
+            items.append(it)
         return self._shed_expired(items, "search")
 
     def _run_search(self, items: list[_Timed], *, _isolate: bool = True,
@@ -1641,6 +1920,8 @@ class ServingRuntime:
                 # full dispatch turnaround, as in _apply_run: the effort
                 # law compares this against the latency envelope
                 t_svc = time.perf_counter()
+                # batch_form ends before the fault site (see _apply_run)
+                self._stamp(items, STAGE_BATCH, t_svc)
                 self._faults.check("search_step")
                 qs = [np.atleast_2d(i.payload) for i in items]
                 counts = [len(q) for q in qs]
@@ -1670,11 +1951,16 @@ class ServingRuntime:
                     step = self._search_step_for(base, eff, nprobe, rerank)
                     n_traced = self._traced(step)
                     d, i = step(st, jnp.asarray(pb), jnp.asarray(valid))
+                # trace-count delta = compiled (see _apply_run)
+                compiled = self._traced(step) != n_traced
+                self._stamp(
+                    items, STAGE_COMPILE if compiled else STAGE_EXECUTE
+                )
                 d, i = np.asarray(d), np.asarray(i)
-                if self._traced(step) == n_traced:  # compile != service
-                    self._controller.search.observe_service(
-                        time.perf_counter() - t_svc
-                    )
+                t_dev = time.perf_counter()
+                self._stamp(items, STAGE_DEVICE, t_dev)
+                if not compiled:  # compile != service
+                    self._controller.search.observe_service(t_dev - t_svc)
             except Exception as e:
                 if _isolate and len(items) > 1:
                     self._counters.inc("isolations")
@@ -1695,6 +1981,9 @@ class ServingRuntime:
                     it.future.set_result(
                         (d[off : off + c], i[off : off + c])
                     )
+                if it.trace is not None:
+                    it.trace.stamp(STAGE_ACK)
+                    self._tracer.finish(it.trace, OUTCOME_OK)
                 off += c
         finally:
             if _release:
@@ -1711,9 +2000,13 @@ class ServingRuntime:
         items: list[_Timed] = []
         with self._submit_lock:
             try:
-                self._serial_pending.append(self._insert_q.get_nowait())
+                it = self._insert_q.get_nowait()
             except queue.Empty:
                 pass
+            else:
+                if it.trace is not None:
+                    it.trace.stamp(STAGE_QUEUE)
+                self._serial_pending.append(it)
             self._serial_pending = self._shed_expired(
                 self._serial_pending, "mutation"
             )
@@ -1743,12 +2036,19 @@ class ServingRuntime:
         if now < self._pool_next:
             return
         self._pool_next = now + self.cfg.pool_interval
+        before = self._pool.moves
         slots, rows = self._pool.rebalance(
             self._slots.take_peak_utilization(),
             self._gate.take_peak_utilization(),
         )
         self._slots.set_capacity(slots)
         self._gate.set_max_pending(rows)
+        moves = self._pool.moves
+        if moves != before:
+            self._events.record_event(
+                EV_POOL_REBALANCE, search_slots=slots, mutation_rows=rows,
+                moves=moves,
+            )
 
     def _search_loop_body(self):
         while not self._stop.is_set():
@@ -1807,6 +2107,9 @@ class ServingRuntime:
             try:
                 # full dispatch turnaround (see _apply_run)
                 t_svc = time.perf_counter()
+                # batch_form ends before the fault site (see _apply_run)
+                self._stamp(s_items, STAGE_BATCH, t_svc)
+                self._stamp(i_run, STAGE_BATCH, t_svc)
                 self._faults.check("fused_step")
                 qs = [np.atleast_2d(x.payload) for x in s_items]
                 counts = [len(q) for q in qs]
@@ -1847,10 +2150,18 @@ class ServingRuntime:
                         )
                         st = self.index.state
                         self._budget = None  # chains may have grown/shrunk
+                    # trace-count delta = compiled (see _apply_run)
+                    compiled = self._traced(fused_step) != n_traced
+                    stage = STAGE_COMPILE if compiled else STAGE_EXECUTE
+                    self._stamp(s_items, stage)
+                    self._stamp(i_run, stage)
                     d, i = np.asarray(d), np.asarray(i)
                     jax.block_until_ready(st.cluster_len)
-                    svc = time.perf_counter() - t_svc
-                    if self._traced(fused_step) == n_traced:
+                    t_dev = time.perf_counter()
+                    self._stamp(s_items, STAGE_DEVICE, t_dev)
+                    self._stamp(i_run, STAGE_DEVICE, t_dev)
+                    if not compiled:
+                        svc = t_dev - t_svc
                         self._controller.search.observe_service(svc)
                         self._controller.mutation.observe_service(svc)
                     if lsn is not None:
@@ -1878,6 +2189,9 @@ class ServingRuntime:
                     it.future.set_result(
                         (d[off : off + c], i[off : off + c])
                     )
+                if it.trace is not None:
+                    it.trace.stamp(STAGE_ACK)
+                    self._tracer.finish(it.trace, OUTCOME_OK)
                 off += c
             self._resolve_mutations(i_run, ids)
             if kind != "insert" and self.cfg.auto_compact:

@@ -1,0 +1,40 @@
+"""Observability for the serving runtime (docs/observability.md).
+
+Three layers, all dependency-free and lock-disciplined:
+
+* :mod:`repro.obs.trace` — per-request span tracing: a sampled trace
+  context rides each submitted request through the full serving path
+  (admission -> queue -> batch formation -> compile|execute ->
+  device_wait -> ack) and lands in a bounded ring.  The per-stage spans
+  are *contiguous by construction*, so they sum to the request's
+  end-to-end latency — the repo's ground-truth latency budget
+  (asserted against the load generator in ``benchmarks/obs.py``).
+* :mod:`repro.obs.events` — the structured event flight recorder: a
+  second bounded ring of control-plane events (controller rung moves,
+  ladder steps, compaction, pool rebalances, WAL fsync/rotate, snapshot
+  cut/publish, worker restarts, injected faults) with names drawn from
+  a registered catalog, mirroring ``FaultPlan.KNOWN_SITES``.
+* :mod:`repro.obs.export` / :mod:`repro.obs.bundle` — exporters:
+  Chrome/Perfetto ``trace_event`` JSON, Prometheus text exposition over
+  the unified (flattened) metrics registry, and the post-mortem debug
+  bundle written on ``RecoveryError`` / lane death / shutdown.
+"""
+
+from repro.obs.events import EVENT_CATALOG, FlightRecorder
+from repro.obs.trace import (
+    SPAN_STAGES,
+    RequestTrace,
+    RequestTracer,
+    TraceRing,
+    decompose,
+)
+
+__all__ = [
+    "EVENT_CATALOG",
+    "FlightRecorder",
+    "SPAN_STAGES",
+    "RequestTrace",
+    "RequestTracer",
+    "TraceRing",
+    "decompose",
+]

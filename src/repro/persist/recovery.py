@@ -43,7 +43,12 @@ log = logging.getLogger(__name__)
 
 class RecoveryError(RuntimeError):
     """Recovery could not prove the restored state matches the acked
-    history — the node must refuse to serve, not guess."""
+    history — the node must refuse to serve, not guess.
+
+    When raised by :func:`recover_index`, carries the partially-filled
+    :class:`RecoveryReport` as ``report`` (how far recovery got)."""
+
+    report: "Optional[RecoveryReport]" = None
 
 
 @dataclasses.dataclass
@@ -166,10 +171,27 @@ def recover_index(
     Returns a verified, serving-ready :class:`IVFIndex` plus the report.
     Raises :class:`RecoveryError` (cause chained) on anything it cannot
     prove — missing snapshot, schema/CRC failure, mid-log corruption, LSN
-    gap, replay failure, invariant violation.
+    gap, replay failure, invariant violation.  The raised error carries
+    the partially-filled report as ``e.report`` — how far recovery got
+    before it refused — which the runtime's recovery-failure debug bundle
+    (``repro.obs.bundle``) persists for the post-mortem.
     """
     plan = faults if faults is not None else NO_FAULTS
     report = RecoveryReport()
+    try:
+        return _recover_index(cfg, persist_dir, plan, report, sample)
+    except RecoveryError as e:
+        e.report = report
+        raise
+
+
+def _recover_index(
+    cfg: IVFIndexConfig,
+    persist_dir: str,
+    plan: FaultPlan,
+    report: RecoveryReport,
+    sample: int,
+) -> "tuple[IVFIndex, RecoveryReport]":
     snap_dir = os.path.join(persist_dir, SNAP_SUBDIR)
     wal_dir = os.path.join(persist_dir, WAL_SUBDIR)
 

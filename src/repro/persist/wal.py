@@ -54,6 +54,7 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.core.faults import NO_FAULTS, FaultPlan
+from repro.obs.events import EV_WAL_FSYNC, EV_WAL_ROTATE
 
 log = logging.getLogger(__name__)
 
@@ -249,7 +250,8 @@ class MutationWAL:
     """
 
     def __init__(self, directory: str, sync_interval: int = 1,
-                 faults: Optional[FaultPlan] = None, start_lsn: int = 0):
+                 faults: Optional[FaultPlan] = None, start_lsn: int = 0,
+                 recorder=None):
         """``start_lsn`` is the LSN floor — the owning runtime passes its
         latest snapshot fence.  Without it, reopening a log whose segments
         were all pruned (fence == last LSN) would restart numbering at 1
@@ -260,6 +262,11 @@ class MutationWAL:
         self.dir = directory
         self.sync_interval = sync_interval
         self._faults = faults if faults is not None else NO_FAULTS
+        # optional flight recorder (repro.obs.events.FlightRecorder): the
+        # owning runtime passes its own so fsync/rotate land on the same
+        # timeline as the control-plane transitions.  record_event takes
+        # only the recorder's leaf lock, so calling it under _lock is safe.
+        self._recorder = recorder
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._file = None  # guarded-by: _lock
@@ -392,6 +399,10 @@ class MutationWAL:
         os.fsync(self._file.fileno())
         self._durable_lsn = self._last_lsn
         self._unsynced = 0
+        if self._recorder is not None:
+            self._recorder.record_event(
+                EV_WAL_FSYNC, durable_lsn=self._durable_lsn
+            )
 
     def sync(self) -> int:
         """Force an fsync now; returns the durable LSN."""
@@ -415,6 +426,11 @@ class MutationWAL:
             else:
                 os.remove(self._path)  # never held a record
             self._open_segment()
+            if self._recorder is not None:
+                self._recorder.record_event(
+                    EV_WAL_ROTATE, last_lsn=self._last_lsn,
+                    sealed_segments=len(self._sealed),
+                )
             return self._last_lsn
 
     def prune(self, upto_lsn: int) -> int:
@@ -442,6 +458,15 @@ class MutationWAL:
     def durable_lsn(self) -> int:
         with self._lock:
             return self._durable_lsn
+
+    def lsns(self) -> "tuple[int, int]":
+        """``(last_lsn, durable_lsn)`` as ONE consistent read.  Reading
+        the two properties back-to-back takes the lock twice; an append +
+        fsync landing between them yields a pair (stale last, fresh
+        durable) where ``durable > last`` — nonsense under the LSN
+        contract.  ``stats()`` reads through here."""
+        with self._lock:
+            return self._last_lsn, self._durable_lsn
 
     def close(self):
         with self._lock:

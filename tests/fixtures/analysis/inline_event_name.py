@@ -1,0 +1,21 @@
+"""Seeded-bad lint: inline flight-recorder event name at an emission site.
+
+The event name below exists only at this call site — a typo here would
+emit into the void (or raise at runtime) instead of failing at import
+time against ``repro.obs.events.EVENT_CATALOG``, and grep for the
+``EV_*`` constant would never find it.  The linter must flag
+``event-name``; the fix is importing ``EV_CONTROLLER_RUNG`` and passing
+the constant.
+"""
+
+FIXTURE_KIND = "lint"
+EXPECT_RULES = ("event-name",)
+
+
+class _Recorder:
+    def record_event(self, name: str, **fields) -> None:
+        pass
+
+
+def emit_rung(recorder: _Recorder, rung: int) -> None:
+    recorder.record_event("controller.window_rung", rung=rung)  # anonymous

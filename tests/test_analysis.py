@@ -74,6 +74,7 @@ def test_fixture_inventory_complete():
         "incomplete_cache_key.py",
         "nondet_in_jit.py",
         "inline_format.py",
+        "inline_event_name.py",
     }
 
 
@@ -176,3 +177,43 @@ def test_holds_helper_checked_at_call_site(tmp_path):
     )
     assert [f.rule for f in findings] == ["guarded-by"]
     assert "_bump" in findings[0].message
+
+
+def test_event_name_flags_inline_literal(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        def emit(rec, trace):
+            rec.record_event("pool.rebalance", moves=1)
+            trace.stamp("queue")
+        """,
+    )
+    assert [f.rule for f in findings] == ["event-name", "event-name"]
+    assert "pool.rebalance" in findings[0].message
+
+
+def test_event_name_constant_and_suppression_pass(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        EV_POOL_REBALANCE = "pool.rebalance"
+
+        def emit(rec):
+            rec.record_event(EV_POOL_REBALANCE, moves=1)
+            # deliberate: asserting the unknown-name ValueError
+            rec.record_event("no.such.event")  # event-ok: negative test
+        """,
+    )
+    assert findings == []
+
+
+def test_event_name_empty_suppression_is_a_finding(tmp_path):
+    findings = _lint_source(
+        tmp_path,
+        """
+        def emit(rec):
+            # event-ok:
+            rec.record_event("pool.rebalance")
+        """,
+    )
+    assert {f.rule for f in findings} == {"invalid-suppression"}
